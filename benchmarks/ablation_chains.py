@@ -1,0 +1,56 @@
+"""Ablation (beyond the paper's fixed M=4): prediction quality vs chain
+count for each combination rule.
+
+The paper's trade-off is implicit: more chains = more speedup but less
+data per chain.  This sweep makes it explicit and adds the median rule.
+Expectation from theory: Simple/Weighted degrade gracefully (ensemble
+averaging compensates per-chain variance), Naive degrades *faster* with M
+(more quasi-ergodic modes to disagree).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SLDAConfig, ALGORITHMS, combine, partition, \
+    predict_chains, train_chains
+from repro.data import make_slda_corpus, train_test_split
+
+
+def run(n_docs=512, vocab=300, n_topics=8, doc_len=60, n_iters=30, seed=0):
+    cfg = SLDAConfig(n_topics=n_topics, vocab_size=vocab, rho=0.25,
+                     n_iters=n_iters)
+    corpus, _ = make_slda_corpus(jax.random.PRNGKey(seed), n_docs, vocab,
+                                 n_topics, doc_len, rho=0.25)
+    train, test = train_test_split(corpus, int(n_docs * 0.8) // 8 * 8)
+    var_y = float(jnp.var(test.y))
+    rows = []
+
+    yhat = jax.jit(ALGORITHMS["nonparallel"], static_argnums=(3,))(
+        jax.random.PRNGKey(seed + 1), train, test, cfg)
+    rows.append(dict(m=1, rule="nonparallel",
+                     mse=round(float(jnp.mean((yhat - test.y) ** 2)), 4)))
+
+    for m in (2, 4, 8):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed + 1), 3)
+        models = jax.jit(train_chains, static_argnums=(2,))(
+            k1, partition(train, m), cfg)
+        yh = jax.jit(predict_chains, static_argnums=(3,))(
+            k2, models, test, cfg)
+        naive = jax.jit(ALGORITHMS["naive"], static_argnums=(3, 4))(
+            k3, train, test, cfg, m)
+        for rule, pred in (
+                ("naive", naive),
+                ("simple", combine.simple_average(yh)),
+                ("weighted", combine.weighted_average(
+                    yh, train_mse=models.train_mse)),
+                ("median", combine.median(yh))):
+            mse = float(jnp.mean((pred - test.y) ** 2))
+            rows.append(dict(m=m, rule=rule, mse=round(mse, 4),
+                             r2=round(1 - mse / var_y, 3)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

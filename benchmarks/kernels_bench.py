@@ -1,0 +1,72 @@
+"""Kernel microbenchmarks: Pallas (interpret) correctness-path timing vs the
+pure-jnp oracle, plus the jnp paths that matter for the training loop.
+
+On this CPU container interpret-mode timing is NOT TPU performance — the
+numbers document relative behaviour of the jnp paths (which do run under
+XLA:CPU jit) and give a per-call sanity magnitude for the harness."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SLDAConfig, init_state
+from repro.data import make_slda_corpus
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6          # µs
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+
+    # slda gibbs sweep — jnp path (the CPU benchmark path)
+    cfg = SLDAConfig(n_topics=32, vocab_size=1000)
+    corpus, _ = make_slda_corpus(ks[0], 64, 1000, 32, 64)
+    state = init_state(ks[1], corpus, cfg)
+    uniforms = jax.random.uniform(ks[2], corpus.tokens.shape)
+    inv_len = 1.0 / jnp.maximum(corpus.mask.sum(-1), 1.0)
+    args = (corpus.tokens, corpus.mask, uniforms, state.z, state.ndt,
+            corpus.y, inv_len, state.ntw, state.nt, state.eta)
+
+    sweep_jnp = jax.jit(lambda *a: ops.slda_gibbs_sweep(
+        *a, alpha=cfg.alpha, beta=cfg.beta, rho=cfg.rho, use_pallas=False))
+    rows.append(("slda_gibbs_sweep_jnp_64x64", _time(sweep_jnp, *args), ""))
+
+    # attention: blocked jnp (train path)
+    q = jax.random.normal(ks[3], (2, 8, 512, 64), jnp.float32)
+    k = jax.random.normal(ks[4], (2, 4, 512, 64), jnp.float32)
+    v = jax.random.normal(ks[5], (2, 4, 512, 64), jnp.float32)
+    attn = jax.jit(lambda q, k, v: ops.attention_blocked_jnp(
+        q, k, v, causal=True, block_q=128))
+    us = _time(attn, q, k, v)
+    fl = 2 * 2 * 2 * 8 * 512 * 512 * 64
+    rows.append(("attention_blocked_512", us, f"{fl / us / 1e3:.1f}MFLOP/s"))
+
+    # ssd chunked (train path)
+    x = jax.random.normal(ks[6], (2, 512, 8, 64)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[7], (2, 512, 8)))
+    A = -jnp.exp(jax.random.normal(ks[0], (8,)) * 0.3)
+    B = jax.random.normal(ks[1], (2, 512, 64)) * 0.5
+    C = jax.random.normal(ks[2], (2, 512, 64)) * 0.5
+    ssd = jax.jit(lambda *a: ops.ssd_chunked_jnp(*a, chunk=64))
+    rows.append(("ssd_chunked_512", _time(ssd, x, dt, A, B, C), ""))
+
+    return [dict(name=n, us_per_call=round(us, 1), derived=d)
+            for n, us, d in rows]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

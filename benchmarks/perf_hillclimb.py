@@ -1,0 +1,87 @@
+"""§Perf hillclimb driver: re-lower + re-analyse the three chosen cells
+under cumulative optimization switches, writing one artifact per iteration
+(suffix `__itN_<name>`).  The hypothesis → change → before/after log lives
+in EXPERIMENTS.md §Perf; this script produces the numbers.
+
+Cells (chosen from the baseline table, see EXPERIMENTS.md §Roofline):
+  A. internlm2-1.8b × train_4k × 1-pod   — 16 comm-free chains; the cell
+     most representative of the paper's technique
+  B. qwen2.5-32b × prefill_32k × 1-pod   — most collective-bound cell
+  C. phi3.5-moe-42b × train_4k × 1-pod   — worst train roofline fraction
+
+Run:  PYTHONPATH=src python -m benchmarks.perf_hillclimb [--cell A|B|C]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import time
+
+PLANS = {
+    "A": ("internlm2-1.8b", "train_4k", [
+        ("it1_causal_skip", dict(opt_causal_attention=True)),
+        ("it2_embed_repl", dict(opt_causal_attention=True,
+                                opt_replicate_embed=True)),
+        ("it3_remat_dots", dict(opt_causal_attention=True,
+                                opt_replicate_embed=True,
+                                remat_policy="dots")),
+        # it1-3 learnings: tri-scan regressed memory; embed/remat no-ops
+        # here.  it4 attacks the DOMINANT fused-view term: the per-q-block
+        # dK/dV pair all-reduces inside the attention scan — kill the scan.
+        ("it4_block4k", dict(opt_attn_block_q=4096)),
+        # it5: cell-B learning applied here — internlm2's kv=8 < model=16
+        # also gets its kv head_dim split → the [128,2] pair all-reduces.
+        ("it5_head_shard", dict(opt_attn_block_q=4096,
+                                opt_head_shard=True)),
+    ]),
+    "B": ("qwen2.5-32b", "prefill_32k", [
+        ("it1_last_token", dict(opt_prefill_last_only=True)),
+        ("it2_causal_skip", dict(opt_prefill_last_only=True,
+                                 opt_causal_attention=True)),
+        # it1/it2 learning: the 90 TB all-reduce is GSPMD sharding HEAD_DIM
+        # (40 heads % 16 ≠ 0 → it splits hd, making attention einsums
+        # partial-sum).  it3 pins heads to the model axis (padded 40→48).
+        ("it3_head_shard", dict(opt_prefill_last_only=True,
+                                opt_causal_attention=True,
+                                opt_head_shard=True)),
+    ]),
+    "C": ("phi3.5-moe-42b-a6.6b", "train_4k", [
+        ("it1_causal_skip", dict(opt_causal_attention=True)),
+        ("it2_head_shard", dict(opt_causal_attention=True,
+                                opt_head_shard=True)),
+        ("it3_embed_repl", dict(opt_causal_attention=True,
+                                opt_head_shard=True,
+                                opt_replicate_embed=True)),
+    ]),
+}
+
+
+def main():
+    from repro.launch.dryrun import run_cell
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None, choices=sorted(PLANS))
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+    cells = [args.cell] if args.cell else sorted(PLANS)
+
+    for cell in cells:
+        arch, shape, iters = PLANS[cell]
+        for name, overrides in iters:
+            t0 = time.time()
+            try:
+                meta = run_cell(arch, shape, False, args.out, verbose=False,
+                                dist_overrides=overrides,
+                                tag_suffix=f"__{name}")
+                print(f"PASS {cell} {name}: compute={meta['t_compute_s']:.3g}"
+                      f" mem={meta['t_memory_s']:.3g}"
+                      f" coll={meta['t_collective_s']:.3g}"
+                      f" ({time.time() - t0:.0f}s)")
+            except Exception as e:  # noqa: BLE001
+                print(f"FAIL {cell} {name}: {e!r}")
+
+
+if __name__ == "__main__":
+    main()

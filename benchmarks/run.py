@@ -1,0 +1,64 @@
+"""Benchmark harness entry point — one function per paper figure/table.
+
+  fig6  MD&A (continuous y): 4 algorithms × (time, test MSE)     [Fig. 6]
+  fig7  IMDB (binary y): 4 algorithms × (time, test accuracy)    [Fig. 7]
+  kernels  per-kernel µs/call
+  roofline  aggregated dry-run roofline table (if artifacts exist)
+
+Prints ``name,us_per_call,derived`` CSV rows plus per-figure detail.
+Use --full for the paper-scale corpora (minutes on CPU).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale corpora (slow on CPU)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig6,fig7,kernels,roofline")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    if only is None or "fig6" in only:
+        from . import fig6_mdna
+        scale = 1.0 if args.full else 0.1
+        rows = fig6_mdna.run(scale=scale)
+        for r in rows:
+            print(f"fig6_{r['algorithm']},{r['wall_s'] * 1e6:.0f},"
+                  f"mse={r['test_mse']};modeled_s={r['modeled_s']}")
+    if only is None or "fig7" in only:
+        from . import fig7_imdb
+        scale = 1.0 if args.full else 0.02
+        rows = fig7_imdb.run(scale=scale)
+        for r in rows:
+            print(f"fig7_{r['algorithm']},{r['wall_s'] * 1e6:.0f},"
+                  f"acc={r['test_acc']};modeled_s={r['modeled_s']}")
+    if only is not None and "ablation" in only:
+        # beyond-paper: quality vs chain count (slow — opt-in)
+        from . import ablation_chains
+        for r in ablation_chains.run():
+            print(f"ablation_m{r['m']}_{r['rule']},0,mse={r['mse']}")
+    if only is None or "kernels" in only:
+        from . import kernels_bench
+        for r in kernels_bench.run():
+            print(f"kernel_{r['name']},{r['us_per_call']},{r['derived']}")
+    if only is None or "roofline" in only:
+        try:
+            from . import roofline
+            rows = roofline.load()
+            for d in rows:
+                tag = (f"{d['arch']}_{d['shape']}_"
+                       f"{'multi' if d['multi_pod'] else 'single'}")
+                print(f"roofline_{tag},{d['compile_s'] * 1e6:.0f},"
+                      f"dom={d['dominant']};frac={d['roofline_frac']:.3f}")
+        except Exception as e:  # noqa: BLE001 — artifacts may not exist yet
+            print(f"roofline_skipped,0,{e!r}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

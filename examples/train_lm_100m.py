@@ -1,0 +1,85 @@
+"""End-to-end driver: train a ~100M-param LM with communication-free chain
+parallelism, checkpoint/restart, and the paper's prediction-combination at
+eval time.
+
+Full run (a few hundred steps; ~30-60 min on this CPU):
+  PYTHONPATH=src python examples/train_lm_100m.py --steps 300
+Smoke run:
+  PYTHONPATH=src python examples/train_lm_100m.py --steps 20 --tiny
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager, latest_step
+from repro.data import synthetic_lm_batch
+from repro.launch.sharding import DistConfig
+from repro.launch.steps import make_decode_step, make_train_step
+from repro.launch.train import make_lm_batch
+from repro.models import ModelConfig, init_cache, init_params
+from repro.optim import OptConfig, init_opt_state
+
+LM_100M = ModelConfig(
+    name="lm-100m", n_layers=10, d_model=640, n_heads=10, n_kv_heads=5,
+    d_ff=2048, vocab_size=32000, rope_theta=1e4,
+)   # ≈ 107M params
+
+TINY = dataclasses.replace(LM_100M, name="lm-tiny", n_layers=2, d_model=128,
+                           n_heads=4, n_kv_heads=2, d_ff=256,
+                           vocab_size=1024)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--chains", type=int, default=2)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/lm100m_ckpt")
+    args = ap.parse_args()
+
+    cfg = TINY if args.tiny else LM_100M
+    chains = args.chains
+    print(f"{cfg.name}: {cfg.param_count() / 1e6:.1f}M params, "
+          f"{chains} communication-free chains")
+
+    dist = DistConfig(n_chains=chains, compute_dtype="float32",
+                      use_pallas=False, remat=False)
+    opt_cfg = OptConfig(lr=1e-3, warmup_steps=max(5, args.steps // 20),
+                        total_steps=args.steps)
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg, chains)
+    opt_state = init_opt_state(params, opt_cfg)
+    step_fn = jax.jit(make_train_step(cfg, dist, opt_cfg),
+                      donate_argnums=(0, 1))
+    manager = CheckpointManager(args.ckpt_dir, interval=50)
+
+    for step in range(args.steps):
+        batch = make_lm_batch(0, step, cfg, chains, args.batch, args.seq)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % 10 == 0 or step == args.steps - 1:
+            loss = np.asarray(metrics["loss"])
+            print(f"step {step:4d}  loss/chain {np.round(loss, 3)}")
+        manager.maybe_save(step + 1, {"params": params, "opt": opt_state})
+
+    # --- serving with the paper's ensemble combine (Eq. 7) ---
+    decode = jax.jit(make_decode_step(cfg, dist, combine="simple"))
+    cache = init_cache(cfg, chains, args.batch, max_len=32,
+                       dtype=jnp.float32)
+    toks = jnp.zeros((chains, args.batch, 1), jnp.int32)
+    out = []
+    for _ in range(8):
+        logits, cache = decode(params, cache, {"tokens": toks})
+        nxt = jnp.argmax(logits[:, :, -1:], axis=-1).astype(jnp.int32)
+        toks = jnp.broadcast_to(nxt[None], (chains,) + nxt.shape).reshape(
+            chains, args.batch, 1)
+        out.append(int(np.asarray(nxt)[0]))
+    print("ensemble-decoded tokens (batch 0):", out)
+
+
+if __name__ == "__main__":
+    main()

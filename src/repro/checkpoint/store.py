@@ -1,0 +1,158 @@
+"""Per-chain checkpoint store.
+
+Chains share nothing (the paper's communication-free property), so the
+checkpoint layout is **per-chain**: one .npz per chain per step plus a tiny
+manifest.  Consequences the tests verify:
+
+  * a chain failure never corrupts other chains' state — restart restores
+    the survivors and the failed chain alone re-inits (fault isolation),
+  * elastic rescale: restore onto MORE chains (new ones init fresh) or
+    FEWER chains (a prefix of the ensemble) without touching the rest,
+  * atomicity: writes go to a temp dir, fsync'd, then os.replace'd; a
+    half-written checkpoint is never visible under its final name.
+
+Format: flat {pytree-path: array} in numpy .npz — no pickle, portable.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(path): np.asarray(leaf)
+            for path, leaf in flat}, treedef
+
+
+def _chain_slice(tree, i):
+    return jax.tree.map(lambda x: x[i] if hasattr(x, "ndim") and x.ndim > 0
+                        else x, tree)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, state: dict, *,
+                    n_chains: int | None = None, extra: dict | None = None):
+    """state: pytree whose array leaves have a leading chain dim (scalars
+    like the opt step counter are replicated into every chain file)."""
+    if n_chains is None:
+        n_chains = jax.tree.leaves(state)[0].shape[0]
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    try:
+        for i in range(n_chains):
+            flat, _ = _flatten(_chain_slice(state, i))
+            path = os.path.join(tmp, f"chain_{i:03d}.npz")
+            with open(path, "wb") as f:
+                np.savez(f, **flat)
+                f.flush()
+                os.fsync(f.fileno())
+        manifest = {"step": step, "n_chains": n_chains,
+                    "extra": extra or {}}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)          # atomic publish
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_")
+             and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json"))]
+    return max(steps) if steps else None
+
+
+def list_chains(ckpt_dir: str, step: int) -> list[int]:
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    return sorted(int(f.split("_")[1].split(".")[0])
+                  for f in os.listdir(d) if f.startswith("chain_"))
+
+
+def _unflatten_into(template_chain, flat):
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template_chain)
+    leaves = []
+    for path, tmpl in paths:
+        key = jax.tree_util.keystr(path)
+        arr = flat[key]
+        leaves.append(jnp.asarray(arr, dtype=tmpl.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, template):
+    """Restore all chains recorded in the manifest; template is a pytree
+    with the target leading chain dim (its values are ignored)."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    manifest = json.load(open(os.path.join(d, "manifest.json")))
+    n = manifest["n_chains"]
+    chains = []
+    tmpl0 = _chain_slice(template, 0)
+    for i in range(n):
+        with np.load(os.path.join(d, f"chain_{i:03d}.npz")) as z:
+            chains.append(_unflatten_into(tmpl0, dict(z)))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *chains)
+    return stacked, manifest
+
+
+def restore_elastic(ckpt_dir: str, step: int, template, init_fn,
+                    *, missing_ok: bool = True):
+    """Elastic restore onto `template`'s chain count.
+
+    Fewer target chains → restore a prefix.  More → missing chains come
+    from `init_fn(chain_index)` (fresh ensemble members).  Corrupt or
+    missing chain files likewise fall back to init_fn (fault isolation).
+    """
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    manifest = json.load(open(os.path.join(d, "manifest.json")))
+    target = jax.tree.leaves(template)[0].shape[0]
+    tmpl0 = _chain_slice(template, 0)
+    chains, restored = [], []
+    for i in range(target):
+        path = os.path.join(d, f"chain_{i:03d}.npz")
+        try:
+            with np.load(path) as z:
+                chains.append(_unflatten_into(tmpl0, dict(z)))
+            restored.append(i)
+        except (FileNotFoundError, KeyError, ValueError, OSError):
+            if not missing_ok:
+                raise
+            chains.append(init_fn(i))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *chains)
+    return stacked, {"restored_chains": restored, "step": manifest["step"]}
+
+
+class CheckpointManager:
+    """Keeps the last `keep` checkpoints, saves every `interval` steps."""
+
+    def __init__(self, ckpt_dir: str, interval: int = 100, keep: int = 3):
+        self.dir = ckpt_dir
+        self.interval = interval
+        self.keep = keep
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def maybe_save(self, step: int, state, extra=None):
+        if step % self.interval:
+            return None
+        path = save_checkpoint(self.dir, step, state, extra=extra)
+        self._gc()
+        return path
+
+    def _gc(self):
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.dir)
+                       if d.startswith("step_"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)

@@ -1,0 +1,76 @@
+"""Assigned input-shape sets and ShapeDtypeStruct factories for the dry-run.
+
+Every LM arch carries the same 4 shapes (assignment):
+  train_4k     seq 4096  × global_batch 256   → lowers train_step
+  prefill_32k  seq 32768 × global_batch 32    → lowers prefill (forward)
+  decode_32k   cache 32768 × global_batch 128 → lowers serve_step (1 token)
+  long_500k    cache 524288 × global_batch 1  → serve_step; sub-quadratic
+                                                archs only (DESIGN.md §5)
+
+`input_specs` returns weak-type-correct jax.ShapeDtypeStruct stand-ins — no
+device allocation, the same pattern the dry-run compiles against.
+
+Chain semantics (paper, DESIGN.md §4): training batches are SPLIT across
+chains; serving batches are REPLICATED per chain (every chain predicts all
+requests; predictions are then combined — Eq. 6 of the paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def cells_for(cfg: ModelConfig) -> list[str]:
+    """The shape cells this arch runs (long_500k only if sub-quadratic)."""
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.sub_quadratic:
+        out.append("long_500k")
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, n_chains: int,
+                compute_dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct stand-ins for one (arch × shape) cell."""
+    i32 = jnp.int32
+    C = n_chains
+    if shape.kind == "train":
+        assert shape.global_batch % C == 0, (shape.name, C)
+        b = shape.global_batch // C
+        spec = {"tokens": jax.ShapeDtypeStruct((C, b, shape.seq_len), i32),
+                "targets": jax.ShapeDtypeStruct((C, b, shape.seq_len), i32)}
+    elif shape.kind == "prefill":
+        b = shape.global_batch          # replicated across chains (serving)
+        spec = {"tokens": jax.ShapeDtypeStruct((C, b, shape.seq_len), i32)}
+    else:                               # decode: 1 token vs a full cache
+        b = shape.global_batch
+        spec = {"tokens": jax.ShapeDtypeStruct((C, b, 1), i32)}
+    if cfg.frontend == "vision" and shape.kind != "decode":
+        # patch embeddings enter at prefill/train; decode reuses the cache
+        spec["embeds"] = jax.ShapeDtypeStruct(
+            (C, spec["tokens"].shape[1], cfg.n_patches, cfg.d_model),
+            compute_dtype)
+    elif cfg.frontend == "audio":
+        t = spec["tokens"].shape
+        spec["embeds"] = jax.ShapeDtypeStruct(
+            (C, t[1], t[2], cfg.d_model), compute_dtype)
+    return spec

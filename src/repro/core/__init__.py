@@ -1,0 +1,18 @@
+"""Paper core: communication-free embarrassingly parallel MCMC for sLDA."""
+from .types import Corpus, GibbsState, SLDAConfig, SLDAModel, counts_from_assignments
+from .gibbs import init_state, sweep, train_chain, zbar, phi_hat
+from .regression import solve_eta, solve_eta_ols
+from .predict import predict
+from .combine import simple_average, weighted_average, median, COMBINERS
+from .parallel import (ALGORITHMS, partition, train_chains, predict_chains,
+                       run_nonparallel, run_naive, run_simple_average,
+                       run_weighted_average)
+
+__all__ = [
+    "Corpus", "GibbsState", "SLDAConfig", "SLDAModel", "counts_from_assignments",
+    "init_state", "sweep", "train_chain", "zbar", "phi_hat",
+    "solve_eta", "solve_eta_ols", "predict",
+    "simple_average", "weighted_average", "median", "COMBINERS",
+    "ALGORITHMS", "partition", "train_chains", "predict_chains",
+    "run_nonparallel", "run_naive", "run_simple_average", "run_weighted_average",
+]

@@ -1,0 +1,69 @@
+"""Combination rules — the heart of the paper.
+
+The paper's insight: combining *sub-posteriors* of topics fails
+(quasi-ergodicity — one posterior mode per topic permutation, chains lock
+into different modes), but combining *sub-predictions* is sound because the
+label is one-dimensional and unimodal.  Section III-C:
+
+  Simple Average    ŷ = (1/M) Σ_m ŷ^(m)                         (Eq. 7)
+  Weighted Average  ŷ = Σ_m w^(m) ŷ^(m),
+                    w^(m) ∝ 1/MSE_train^(m)  (continuous labels)  (Eq. 8-9)
+                    w^(m) ∝ acc_train^(m)    (binary labels)
+
+Extensions beyond the paper (flagged as such):
+  Median            ŷ = median_m ŷ^(m)    — robust combination in the spirit
+                    of Minsker et al. (2014)'s median posterior, applied at
+                    the prediction level where it is trivially valid.
+
+All rules accept a per-chain `alive` mask: a crashed or straggling chain is
+simply dropped and the weights renormalize over survivors.  This is the
+fault-tolerance dividend of communication-free training (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def _alive(yhat: jnp.ndarray, alive) -> jnp.ndarray:
+    if alive is None:
+        return jnp.ones((yhat.shape[0],), yhat.dtype)
+    return alive.astype(yhat.dtype)
+
+
+def simple_average(yhat: jnp.ndarray, alive=None) -> jnp.ndarray:
+    """yhat: [M, D_test] per-chain predictions → [D_test]."""
+    a = _alive(yhat, alive)
+    return (a[:, None] * yhat).sum(0) / jnp.maximum(a.sum(), 1.0)
+
+
+def weighted_average(yhat: jnp.ndarray, train_mse: jnp.ndarray = None,
+                     train_acc: jnp.ndarray = None, alive=None) -> jnp.ndarray:
+    """Weights from inverse training MSE (continuous) or training accuracy
+    (binary); exactly one of train_mse / train_acc must be given."""
+    a = _alive(yhat, alive)
+    if (train_mse is None) == (train_acc is None):
+        raise ValueError("pass exactly one of train_mse / train_acc")
+    raw = 1.0 / (train_mse + _EPS) if train_mse is not None else train_acc
+    w = raw * a
+    w = w / jnp.maximum(w.sum(), _EPS)
+    return w @ yhat
+
+
+def median(yhat: jnp.ndarray, alive=None) -> jnp.ndarray:
+    """[extension] robust elementwise median over alive chains."""
+    a = _alive(yhat, alive)
+    # push dead chains to +inf/-inf symmetrically so they never win the median
+    big = jnp.nanmax(jnp.abs(yhat)) + 1.0
+    lo = jnp.where(a[:, None] > 0, yhat, -big)
+    hi = jnp.where(a[:, None] > 0, yhat, big)
+    # average of median over lo-padded and hi-padded cancels the padding bias
+    return 0.5 * (jnp.median(lo, axis=0) + jnp.median(hi, axis=0))
+
+
+COMBINERS = {
+    "simple": simple_average,
+    "weighted": weighted_average,
+    "median": median,
+}

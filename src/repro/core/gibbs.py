@@ -1,0 +1,132 @@
+"""Collapsed Gibbs sampling for sLDA (stochastic EM), JAX-native.
+
+Sampling model (Eq. 1 of the paper): the probability of assigning topic t to
+token w_{d,n} is
+
+    p(z=t | ·) ∝ N(y_d; μ_{d,n,t}, ρ) · (N_dt^{-dn}+α)/(N_d^{-dn}+Tα)
+                                      · (N_tw^{-dn}+β)/(N_t^{-dn}+Wβ)
+
+Parallel structure (see DESIGN.md §3):
+  * token loop inside a document is an exact sequential `lax.scan`
+    (vectorized over the topic dimension),
+  * documents are swept in parallel (vmap) with the topic-word table frozen
+    for the sweep and refreshed exactly afterwards (AD-LDA delayed counts),
+  * chains never talk to each other — that is the paper's contribution and
+    it lives one level up, in `parallel.py`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .types import Corpus, GibbsState, SLDAConfig, SLDAModel, counts_from_assignments
+from .regression import solve_eta
+
+
+def init_state(key: jax.Array, corpus: Corpus, cfg: SLDAConfig) -> GibbsState:
+    """Uniform-random topic init; counts derived exactly from z."""
+    z = jax.random.randint(key, corpus.tokens.shape, 0, cfg.n_topics, jnp.int32)
+    ndt, ntw, nt = counts_from_assignments(
+        corpus.tokens, corpus.mask, z, cfg.n_topics, cfg.vocab_size)
+    eta = jnp.full((cfg.n_topics,), cfg.mu, jnp.float32)
+    return GibbsState(z=z, ndt=ndt, ntw=ntw, nt=nt, eta=eta)
+
+
+def _doc_sweep(tokens, mask, uniforms, z, ndt, y, inv_len,
+               ntw, nt, eta, cfg: SLDAConfig, supervised: bool):
+    """One exact sequential Gibbs sweep over the tokens of ONE document.
+
+    ntw/nt are the sweep-frozen global tables; the document's own current
+    token is subtracted on the fly so the -dn counts are exact w.r.t. this
+    document.  Returns (new z, new ndt).
+    """
+    T = cfg.n_topics
+    s0 = jnp.dot(ndt, eta)            # running  Σ_t η_t N_dt  statistic
+    topic_iota = jnp.arange(T, dtype=jnp.int32)
+
+    def step(carry, inp):
+        ndt_d, s = carry
+        w, m, z_old, u = inp
+        old_onehot = (topic_iota == z_old).astype(jnp.float32) * m
+        ndt_d = ndt_d - old_onehot                      # remove current token
+        s = s - eta[z_old] * m
+
+        # log p(t) over all T topics, Eq. (1)
+        ntw_w = ntw[:, w] - old_onehot                  # -dn for own token
+        nt_m = nt - old_onehot
+        logp = (jnp.log(ndt_d + cfg.alpha)
+                + jnp.log(ntw_w + cfg.beta)
+                - jnp.log(nt_m + cfg.vocab_size * cfg.beta))
+        if supervised:
+            mu_t = (s + eta) * inv_len                  # mean if z_{d,n}=t
+            logp = logp - 0.5 * (y - mu_t) ** 2 / cfg.rho
+
+        # categorical sample from the given uniform (branch-free inverse-CDF)
+        p = jnp.exp(logp - jnp.max(logp))
+        c = jnp.cumsum(p)
+        z_new = jnp.sum((c < u * c[-1]).astype(jnp.int32))
+        z_new = jnp.where(m > 0, z_new, z_old).astype(jnp.int32)
+
+        new_onehot = (topic_iota == z_new).astype(jnp.float32) * m
+        ndt_d = ndt_d + new_onehot
+        s = s + eta[z_new] * m
+        return (ndt_d, s), z_new
+
+    (ndt, _), z_new = jax.lax.scan(step, (ndt, s0), (tokens, mask, z, uniforms))
+    return z_new, ndt
+
+
+def sweep(key: jax.Array, corpus: Corpus, state: GibbsState,
+          cfg: SLDAConfig, supervised: bool = True) -> GibbsState:
+    """One document-parallel sweep + exact count refresh."""
+    uniforms = jax.random.uniform(key, corpus.tokens.shape)
+    inv_len = 1.0 / jnp.maximum(corpus.lengths(), 1.0)
+    if cfg.use_pallas:
+        from repro.kernels import ops  # local import: kernels are optional
+        z, _ = ops.slda_gibbs_sweep(
+            corpus.tokens, corpus.mask, uniforms, state.z, state.ndt,
+            corpus.y, inv_len, state.ntw, state.nt, state.eta,
+            alpha=cfg.alpha, beta=cfg.beta, rho=cfg.rho, supervised=supervised)
+    else:
+        z, _ = jax.vmap(
+            _doc_sweep,
+            in_axes=(0, 0, 0, 0, 0, 0, 0, None, None, None, None, None)
+        )(corpus.tokens, corpus.mask, uniforms, state.z, state.ndt,
+          corpus.y, inv_len, state.ntw, state.nt, state.eta, cfg, supervised)
+    ndt, ntw, nt = counts_from_assignments(
+        corpus.tokens, corpus.mask, z, cfg.n_topics, cfg.vocab_size)
+    return GibbsState(z=z, ndt=ndt, ntw=ntw, nt=nt, eta=state.eta)
+
+
+def zbar(state: GibbsState, corpus: Corpus) -> jax.Array:
+    """Empirical topic distribution  z̄_d  of each document."""
+    return state.ndt / jnp.maximum(corpus.lengths(), 1.0)[:, None]
+
+
+def phi_hat(state: GibbsState, cfg: SLDAConfig) -> jax.Array:
+    """Smoothed topic-word distributions, Eq. (3)."""
+    return (state.ntw + cfg.beta) / (state.nt[:, None] + cfg.vocab_size * cfg.beta)
+
+
+def train_chain(key: jax.Array, corpus: Corpus, cfg: SLDAConfig) -> tuple[GibbsState, SLDAModel]:
+    """Full stochastic-EM loop for ONE chain on ONE (sub-)corpus.
+
+    Alternates a Gibbs sweep over z with the ridge solve for η (Eq. 2).
+    Fully jit-able; contains no collectives — chains run communication-free.
+    """
+    k_init, k_sweeps = jax.random.split(key)
+    state0 = init_state(k_init, corpus, cfg)
+
+    def em_step(state, k):
+        state = sweep(k, corpus, state, cfg, supervised=True)
+        eta = solve_eta(zbar(state, corpus), corpus.y, cfg)
+        return GibbsState(state.z, state.ndt, state.ntw, state.nt, eta), None
+
+    state, _ = jax.lax.scan(em_step, state0, jax.random.split(k_sweeps, cfg.n_iters))
+
+    yhat_tr = zbar(state, corpus) @ state.eta
+    mse = jnp.mean((yhat_tr - corpus.y) ** 2)
+    acc = jnp.mean(((yhat_tr > 0.5) == (corpus.y > 0.5)).astype(jnp.float32))
+    model = SLDAModel(phi=phi_hat(state, cfg), eta=state.eta,
+                      train_mse=mse, train_acc=acc)
+    return state, model

@@ -1,0 +1,112 @@
+"""The four algorithms of Section IV, sharing one sampler.
+
+  non-parallel      one chain on the full training corpus (paper benchmark 1)
+  naive             M chains; pool the *sampled topics* as if drawn on the
+                    full corpus, fit (η, φ) globally, predict once
+                    (paper benchmark 2 — exhibits quasi-ergodicity)
+  simple-average    M chains; each predicts the test set; Eq. (7) combine
+  weighted-average  M chains; each predicts test AND full train set (for the
+                    weights); Eq. (8)-(9) combine
+
+Chains are mapped with `vmap` here (single-host form).  The multi-device
+form — `shard_map` over the mesh's chain axis with zero collectives until
+the final prediction gather — lives in `repro.launch.slda_parallel` and
+reuses these same per-chain functions unchanged.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import combine
+from .gibbs import train_chain
+from .predict import predict
+from .regression import solve_eta_ols
+from .types import Corpus, SLDAConfig, SLDAModel
+
+
+def partition(corpus: Corpus, m: int) -> Corpus:
+    """Split a corpus into M equal shards: [D, ...] → [M, D/M, ...].
+
+    The paper partitions uniformly at random; callers should pre-shuffle.
+    D must be divisible by M (pad the corpus if not).
+    """
+    if corpus.n_docs % m:
+        raise ValueError(f"{corpus.n_docs} docs not divisible by {m} shards")
+    reshape = lambda x: x.reshape((m, corpus.n_docs // m) + x.shape[1:])
+    return Corpus(tokens=reshape(corpus.tokens), mask=reshape(corpus.mask),
+                  y=reshape(corpus.y))
+
+
+def train_chains(key: jax.Array, shards: Corpus, cfg: SLDAConfig):
+    """Train M independent chains (no communication). shards is [M, D/M, ...]."""
+    m = shards.tokens.shape[0]
+    keys = jax.random.split(key, m)
+    _, models = jax.vmap(train_chain, in_axes=(0, 0, None))(keys, shards, cfg)
+    return models  # SLDAModel with leading chain dim [M, ...]
+
+
+def predict_chains(key: jax.Array, models: SLDAModel, corpus: Corpus,
+                   cfg: SLDAConfig) -> jnp.ndarray:
+    """Every chain predicts every document of `corpus` → [M, D]."""
+    m = models.eta.shape[0]
+    keys = jax.random.split(key, m)
+    return jax.vmap(predict, in_axes=(0, 0, None, None))(keys, models, corpus, cfg)
+
+
+# ---------------------------------------------------------------- algorithms
+
+def run_nonparallel(key, train: Corpus, test: Corpus, cfg: SLDAConfig):
+    k1, k2 = jax.random.split(key)
+    _, model = train_chain(k1, train, cfg)
+    return predict(k2, model, test, cfg)
+
+
+def run_naive(key, train: Corpus, test: Corpus, cfg: SLDAConfig, m: int):
+    """Naive Combination: pool sub-sampled topics, then fit + predict once."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    shards = partition(train, m)
+    keys = jax.random.split(k1, m)
+    states, _ = jax.vmap(train_chain, in_axes=(0, 0, None))(keys, shards, cfg)
+
+    # step 3: treat the union of sub-samples as one global sample
+    lengths = jnp.maximum(shards.mask.sum(-1), 1.0)          # [M, D/M]
+    zbar_all = (states.ndt / lengths[..., None]).reshape(-1, cfg.n_topics)
+    eta = solve_eta_ols(zbar_all, shards.y.reshape(-1))      # 3(a): OLS
+    ntw = states.ntw.sum(0)                                  # 3(b): pooled φ
+    phi = (ntw + cfg.beta) / (ntw.sum(-1, keepdims=True) + cfg.vocab_size * cfg.beta)
+    model = SLDAModel(phi=phi, eta=eta,
+                      train_mse=jnp.zeros(()), train_acc=jnp.zeros(()))
+    return predict(k3, model, test, cfg)
+
+
+def run_simple_average(key, train: Corpus, test: Corpus, cfg: SLDAConfig,
+                       m: int, alive=None):
+    k1, k2 = jax.random.split(key)
+    models = train_chains(k1, partition(train, m), cfg)
+    yhat = predict_chains(k2, models, test, cfg)             # [M, D_test]
+    return combine.simple_average(yhat, alive=alive)
+
+
+def run_weighted_average(key, train: Corpus, test: Corpus, cfg: SLDAConfig,
+                         m: int, alive=None):
+    """The weights use the *full training set* MSE/accuracy of each local
+    model (Section III-C(d)) — this extra full-train prediction pass is why
+    the paper reports Weighted Average as the slowest algorithm."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    models = train_chains(k1, partition(train, m), cfg)
+    yhat_te = predict_chains(k2, models, test, cfg)          # [M, D_test]
+    yhat_tr = predict_chains(k3, models, train, cfg)         # [M, D_train]
+    if cfg.label_type == "binary":
+        acc = ((yhat_tr > 0.5) == (train.y[None, :] > 0.5)).mean(-1)
+        return combine.weighted_average(yhat_te, train_acc=acc, alive=alive)
+    mse = ((yhat_tr - train.y[None, :]) ** 2).mean(-1)
+    return combine.weighted_average(yhat_te, train_mse=mse, alive=alive)
+
+
+ALGORITHMS = {
+    "nonparallel": run_nonparallel,
+    "naive": run_naive,
+    "simple": run_simple_average,
+    "weighted": run_weighted_average,
+}

@@ -1,0 +1,33 @@
+"""The M-step of sLDA's stochastic EM: the regression parameters η.
+
+Maximizing Eq. (2),
+
+    L(η) = -1/(2ρ) Σ_d (y_d - ηᵀ z̄_d)² - 1/(2σ) Σ_t (η_t - μ)²,
+
+is ridge regression with prior mean μ; the closed form is
+
+    (Z̄ᵀZ̄/ρ + I/σ) η = Z̄ᵀ y / ρ + μ/σ.
+
+T is small (tens), so a dense solve is exact and cheap.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .types import SLDAConfig
+
+
+def solve_eta(zbar: jnp.ndarray, y: jnp.ndarray, cfg: SLDAConfig) -> jnp.ndarray:
+    T = zbar.shape[-1]
+    gram = zbar.T @ zbar / cfg.rho + jnp.eye(T, dtype=zbar.dtype) / cfg.sigma
+    rhs = zbar.T @ y / cfg.rho + cfg.mu / cfg.sigma
+    return jnp.linalg.solve(gram, rhs)
+
+
+def solve_eta_ols(zbar: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Plain OLS (tiny jitter for rank safety) — the paper's Naive
+    Combination step 3(a) fits η by *ordinary* linear regression on the
+    pooled sub-samples."""
+    T = zbar.shape[-1]
+    gram = zbar.T @ zbar + 1e-6 * jnp.eye(T, dtype=zbar.dtype)
+    return jnp.linalg.solve(gram, zbar.T @ y)

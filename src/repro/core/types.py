@@ -1,0 +1,112 @@
+"""Core datatypes for sLDA and its embarrassingly parallel runner.
+
+Everything is a registered pytree so it can flow through jit / vmap /
+shard_map without ceremony.  Counts are kept in float32: they are small
+integers in practice and float math keeps the samplers branch-free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = Any
+
+
+def _pytree(cls):
+    """Register a dataclass as a pytree (all fields are children)."""
+    fields = [f.name for f in dataclasses.fields(cls)]
+    jax.tree_util.register_pytree_with_keys(
+        cls,
+        lambda obj: (
+            [(jax.tree_util.GetAttrKey(n), getattr(obj, n)) for n in fields],
+            None,
+        ),
+        lambda _, children: cls(*children),
+    )
+    return cls
+
+
+@dataclasses.dataclass(frozen=True)
+class SLDAConfig:
+    """Hyperparameters of supervised LDA (McAuliffe & Blei 2008 notation)."""
+
+    n_topics: int = 32
+    vocab_size: int = 1024
+    alpha: float = 0.1       # Dir prior on doc-topic θ_d
+    beta: float = 0.01       # Dir prior on topic-word φ_t
+    rho: float = 0.5         # response noise  y_d ~ N(ηᵀ z̄_d, ρ)
+    mu: float = 0.0          # prior mean of η_t
+    sigma: float = 10.0      # prior variance of η_t
+    label_type: str = "continuous"   # "continuous" | "binary"
+    n_iters: int = 60        # stochastic-EM iterations (Gibbs sweep + η solve)
+    n_pred_burnin: int = 15  # test-time Gibbs burn-in sweeps
+    n_pred_samples: int = 10 # test-time sweeps averaged for z̄
+    use_pallas: bool = False # route sweeps through the slda_gibbs TPU kernel
+
+
+@_pytree
+@dataclasses.dataclass
+class Corpus:
+    """A padded bag of documents.
+
+    tokens  : int32[D, N]  word ids, padding value arbitrary where mask==0
+    mask    : float32[D, N] 1.0 on real tokens
+    y       : float32[D]   document labels (binary labels stored as 0/1)
+    """
+
+    tokens: Array
+    mask: Array
+    y: Array
+
+    @property
+    def n_docs(self) -> int:
+        return self.tokens.shape[0]
+
+    @property
+    def max_len(self) -> int:
+        return self.tokens.shape[1]
+
+    def lengths(self) -> Array:
+        return jnp.sum(self.mask, axis=-1)
+
+
+@_pytree
+@dataclasses.dataclass
+class GibbsState:
+    """Mutable state of one collapsed-Gibbs sLDA chain."""
+
+    z: Array       # int32[D, N]   token-topic assignments
+    ndt: Array     # float32[D, T] doc-topic counts
+    ntw: Array     # float32[T, W] topic-word counts
+    nt: Array      # float32[T]    topic totals
+    eta: Array     # float32[T]    regression weights
+
+
+@_pytree
+@dataclasses.dataclass
+class SLDAModel:
+    """What a trained chain exports: enough to predict, nothing more.
+
+    This is the only thing that ever crosses a chain boundary — it is what
+    makes the parallel algorithm communication-free during training.
+    """
+
+    phi: Array     # float32[T, W] topic-word distributions  φ̂
+    eta: Array     # float32[T]    regression weights        η̂
+    train_mse: Array   # float32[] training-set MSE (Weighted Average weight)
+    train_acc: Array   # float32[] training-set accuracy (binary labels)
+
+
+def counts_from_assignments(tokens: Array, mask: Array, z: Array,
+                            n_topics: int, vocab_size: int):
+    """Exact (ndt, ntw, nt) from the current assignments. Used to refresh the
+    delayed topic-word table between document-parallel sweeps."""
+    d_idx = jnp.arange(tokens.shape[0])[:, None]
+    ndt = jnp.zeros((tokens.shape[0], n_topics), jnp.float32)
+    ndt = ndt.at[d_idx, z].add(mask)
+    ntw = jnp.zeros((n_topics, vocab_size), jnp.float32)
+    ntw = ntw.at[z, tokens].add(mask)
+    return ndt, ntw, jnp.sum(ntw, axis=-1)

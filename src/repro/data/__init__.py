@@ -1,0 +1,6 @@
+"""Data pipeline: synthetic sLDA corpora + LM token batching."""
+from .synthetic import make_slda_corpus, train_test_split, shuffle_corpus
+from .lm import lm_batch_iterator, synthetic_lm_batch
+
+__all__ = ["make_slda_corpus", "train_test_split", "shuffle_corpus",
+           "lm_batch_iterator", "synthetic_lm_batch"]

@@ -1,0 +1,30 @@
+"""LM-side data pipeline: deterministic synthetic token streams.
+
+Real deployments plug a tokenized dataset in here; the interface is a plain
+iterator of {tokens, targets} dicts so the training loop is agnostic.  The
+synthetic stream is seeded and reproducible, which the checkpoint/restart
+tests rely on (restart must resume the stream at the right step).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def synthetic_lm_batch(seed: int, step: int, batch: int, seq_len: int,
+                       vocab_size: int) -> dict:
+    """One deterministic LM batch keyed by (seed, step) — restartable."""
+    rng = np.random.default_rng(np.uint64(seed) * np.uint64(1_000_003) + np.uint64(step))
+    toks = rng.integers(0, vocab_size, (batch, seq_len + 1), dtype=np.int32)
+    return {"tokens": jnp.asarray(toks[:, :-1]),
+            "targets": jnp.asarray(toks[:, 1:])}
+
+
+def lm_batch_iterator(seed: int, batch: int, seq_len: int, vocab_size: int,
+                      start_step: int = 0):
+    """Infinite restartable iterator; `start_step` resumes mid-stream."""
+    step = start_step
+    while True:
+        yield step, synthetic_lm_batch(seed, step, batch, seq_len, vocab_size)
+        step += 1

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+  slda_gibbs      — the paper's hot loop: document-blocked collapsed-Gibbs
+                    sweep, topic dim on lanes, doc block on sublanes
+  flash_attention — blocked causal attention with native GQA index maps
+  ssd_scan        — Mamba-2 chunked state-space scan (state in VMEM scratch)
+  rmsnorm         — fused row-blocked RMSNorm
+
+Use through `repro.kernels.ops` (padding + CPU-interpret dispatch); oracles
+in `repro.kernels.ref`.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

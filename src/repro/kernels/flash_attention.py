@@ -1,0 +1,121 @@
+"""Blocked (flash) causal attention for TPU, with native GQA.
+
+Grid: (batch, q_heads, Sq/BQ, Sk/BK) — the KV-block dimension is minor, so
+it executes sequentially per q block and the online-softmax running state
+(m, l, acc) lives in VMEM scratch across KV steps.  GQA is handled in the
+BlockSpec index maps: the K/V index maps divide the q-head index by the
+group size, so KV tiles are fetched once per group — no materialized
+`jnp.repeat` (that is the whole point of GQA's bandwidth saving).
+
+Causal tiles entirely above the diagonal are skipped with `pl.when` (the
+standard ~2× FLOP win).  A per-batch `kv_len` input masks the padded tail
+of a KV cache for decode; it rides in SMEM as a (1,1) block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr,
+                  *, scale: float, causal: bool, bq: int, bk: int,
+                  sq: int, sk: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Global row/col offsets of this tile.  The causal offset aligns q to
+    # the END of the *valid* kv prefix (decode: 1 new token vs a long,
+    # possibly right-padded cache), so it is dynamic in kv_len.
+    kv_len = kvlen_ref[0, 0]
+    q_off = qi * bq + (kv_len - sq)
+    k_off = ki * bk
+
+    def body():
+        q = q_ref[0, 0].astype(jnp.float32)              # [BQ, Dh]
+        k = k_ref[0, 0].astype(jnp.float32)              # [BK, Dh]
+        v = v_ref[0, 0].astype(jnp.float32)              # [BK, Dh]
+        s = (q @ k.T) * scale                            # [BQ, BK]
+
+        rows = jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_off
+        cols = jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1) + k_off
+        mask = cols < kv_len
+        if causal:
+            mask &= cols <= rows
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev, l_prev = m_scr[...], l_scr[...]          # [BQ, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                           # [BQ, BK]
+        corr = jnp.exp(m_prev - m_new)                   # [BQ, 1]
+        l_scr[...] = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + p @ v
+        m_scr[...] = m_new
+
+    if causal:
+        # skip tiles strictly above the causal diagonal
+        pl.when(k_off <= q_off + bq - 1)(body)
+    else:
+        body()
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, scale=None, kv_len=None,
+                    block_q=128, block_k=128, interpret=True):
+    """q: [B, Hq, Sq, Dh]; k/v: [B, Hkv, Sk, Dh]; kv_len: optional [B] int32.
+
+    Sq % block_q == 0 and Sk % block_k == 0 (ops.py pads); Hq % Hkv == 0.
+    """
+    B, Hq, Sq, Dh = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert Hq % Hkv == 0
+    rep = Hq // Hkv
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, Sk, bq, bk)
+    if scale is None:
+        scale = Dh ** -0.5
+    if kv_len is None:
+        kv_len = jnp.full((B,), Sk, jnp.int32)
+
+    grid = (B, Hq, Sq // bq, Sk // bk)
+    kernel = functools.partial(_flash_kernel, scale=float(scale),
+                               causal=causal, bq=bq, bk=bk, sq=Sq, sk=Sk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, i, j: (b, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, bq, Dh), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, Dh), lambda b, h, i, j: (b, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, bk, Dh), lambda b, h, i, j: (b, h // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, Dh), lambda b, h, i, j: (b, h, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, Dh), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, Dh), q.dtype),
+        interpret=interpret,
+    )(kv_len[:, None].astype(jnp.int32), q, k, v)

@@ -1,0 +1,126 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each `ref_*` is the semantic ground truth the kernels are sweep-tested
+against (tests/test_kernels.py).  They are also the CPU fallback path used
+by `ops.py` when shapes don't meet the kernels' tiling constraints.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------- slda_gibbs
+
+def ref_slda_gibbs_sweep(tokens, mask, uniforms, z, ndt, y, inv_len,
+                         ntw_t, nt, eta, alpha, beta, rho, supervised: bool):
+    """Document-parallel sLDA Gibbs sweep with sweep-frozen ntw (AD-LDA).
+
+    tokens/mask/uniforms/z : [D, N]; ndt [D, T]; y/inv_len [D];
+    ntw_t [W, T] (note: transposed — row-gather layout); nt [T]; eta [T].
+    Returns (z_new [D, N], ndt_new [D, T]).
+    Matches repro.core.gibbs._doc_sweep exactly.
+    """
+    T = ndt.shape[-1]
+    W = ntw_t.shape[0]
+    topic_iota = jnp.arange(T, dtype=jnp.int32)
+
+    def doc(tokens_d, mask_d, us_d, z_d, ndt_d, y_d, il_d):
+        s0 = jnp.dot(ndt_d, eta)
+
+        def step(carry, inp):
+            ndt_d, s = carry
+            w, m, z_old, u = inp
+            old = (topic_iota == z_old).astype(jnp.float32) * m
+            ndt_d = ndt_d - old
+            s = s - eta[z_old] * m
+            logp = (jnp.log(ndt_d + alpha)
+                    + jnp.log(ntw_t[w] - old + beta)
+                    - jnp.log(nt - old + W * beta))
+            if supervised:
+                mu_t = (s + eta) * il_d
+                logp = logp - 0.5 * (y_d - mu_t) ** 2 / rho
+            p = jnp.exp(logp - jnp.max(logp))
+            c = jnp.cumsum(p)
+            z_new = jnp.sum((c < u * c[-1]).astype(jnp.int32))
+            z_new = jnp.where(m > 0, z_new, z_old).astype(jnp.int32)
+            new = (topic_iota == z_new).astype(jnp.float32) * m
+            return (ndt_d + new, s + eta[z_new] * m), z_new
+
+        (ndt_d, _), z_new = jax.lax.scan(step, (ndt_d, s0),
+                                         (tokens_d, mask_d, z_d, us_d))
+        return z_new, ndt_d
+
+    return jax.vmap(doc)(tokens, mask, uniforms, z, ndt, y, inv_len)
+
+
+# -------------------------------------------------------- flash_attention
+
+def ref_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+                  kv_len: jnp.ndarray | None = None):
+    """Plain softmax attention oracle.
+
+    q: [B, Hq, Sq, Dh]; k, v: [B, Hkv, Sk, Dh] with Hq % Hkv == 0 (GQA).
+    kv_len: optional [B] valid KV prefix lengths (decode against a cache).
+    """
+    B, Hq, Sq, Dh = q.shape
+    Hkv = k.shape[1]
+    rep = Hq // Hkv
+    if scale is None:
+        scale = Dh ** -0.5
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    Sk = k.shape[2]
+    if causal and Sq > 1:
+        qi = jnp.arange(Sq)[:, None] + (Sk - Sq)
+        ki = jnp.arange(Sk)[None, :]
+        logits = jnp.where(ki <= qi, logits, -jnp.inf)
+    if kv_len is not None:
+        valid = jnp.arange(Sk)[None, None, None, :] < kv_len[:, None, None, None]
+        logits = jnp.where(valid, logits, -jnp.inf)
+    out = jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(logits, axis=-1),
+                     v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# -------------------------------------------------------------- ssd_scan
+
+def ref_ssd(x, dt, A, B, C, *, chunk: int = 64):
+    """Mamba-2 SSD (state-space duality) oracle — naive sequential scan.
+
+    x : [b, s, h, p]   inputs (already gated/projected)
+    dt: [b, s, h]      softplus'd step sizes (>0)
+    A : [h]            negative decay rates (A < 0)
+    B : [b, s, n]      input projection (shared across heads, mamba2 style)
+    C : [b, s, n]      output projection
+    Returns y: [b, s, h, p].
+    State h_t = exp(A·dt_t)·h_{t-1} + dt_t·B_t xᵀ_t ;  y_t = C_t·h_t.
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+
+    def scan_one(x_b, dt_b, B_b, C_b):
+        def step(state, inp):
+            x_t, dt_t, B_t, C_t = inp          # [h,p], [h], [n], [n]
+            decay = jnp.exp(A * dt_t)          # [h]
+            upd = (dt_t[:, None] * x_t)[:, :, None] * B_t[None, None, :]  # [h,p,n]
+            state = state * decay[:, None, None] + upd
+            y_t = jnp.einsum("hpn,n->hp", state, C_t)
+            return state, y_t
+        init = jnp.zeros((h, p, n), jnp.float32)
+        _, y = jax.lax.scan(step, init, (x_b.astype(jnp.float32),
+                                         dt_b.astype(jnp.float32),
+                                         B_b.astype(jnp.float32),
+                                         C_b.astype(jnp.float32)))
+        return y
+
+    return jax.vmap(scan_one)(x, dt, B, C).astype(x.dtype)
+
+
+# -------------------------------------------------------------- rmsnorm
+
+def ref_rmsnorm(x, w, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps) * w).astype(x.dtype)

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel for the sLDA collapsed-Gibbs sweep (the paper's hot loop).
+
+TPU adaptation (DESIGN.md §3): the token loop is inherently sequential, but
+  * the per-token categorical over T topics vectorizes onto the lane
+    dimension (T = 128 fills a VREG lane exactly), and
+  * a block of DOC_BLOCK documents is swept in lockstep on the sublane
+    dimension — documents are independent within a sweep because the
+    topic-word table is sweep-frozen (AD-LDA delayed counts).
+
+Layout: the topic-word table is stored transposed, ``ntw_t [W, T]``, so the
+per-token access is a *row* gather (sublane-dim dynamic index), which the
+TPU supports natively; a column gather on the lane dim would not map.  The
+whole table lives in VMEM (sLDA vocabularies are small — the paper's is
+4238 phrases; W·T·4B ≈ 2 MB at T=128).
+
+Grid: (D / DOC_BLOCK,).  One grid cell sweeps DOC_BLOCK documents
+end-to-end and writes back their new assignments and doc-topic counts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gibbs_kernel(tokens_ref, mask_ref, unif_ref, z_ref, ndt_ref,
+                  y_ref, invlen_ref, ntw_t_ref, nt_ref, eta_ref,
+                  z_out_ref, ndt_out_ref,
+                  *, alpha: float, beta: float, rho: float,
+                  supervised: bool, n_tokens: int, vocab_size: int):
+    eta = eta_ref[0, :]                       # [T]
+    nt = nt_ref[0, :]                         # [T]
+    ntw_t = ntw_t_ref[...]                    # [W, T] resident in VMEM
+    y = y_ref[:, 0]                           # [DB]
+    inv_len = invlen_ref[:, 0]                # [DB]
+    T = eta.shape[0]
+    topic_iota = jax.lax.broadcasted_iota(jnp.int32, (1, T), 1)
+
+    ndt0 = ndt_ref[...]                       # [DB, T]
+    s0 = ndt0 @ eta                           # [DB]  running Σ_t η_t N_dt
+
+    def token_step(n, carry):
+        ndt, s = carry
+        w = tokens_ref[:, n]                  # [DB] int32 word ids
+        m = mask_ref[:, n]                    # [DB]
+        u = unif_ref[:, n]                    # [DB]
+        z_old = z_ref[:, n]                   # [DB]
+
+        old = (topic_iota == z_old[:, None]).astype(jnp.float32) * m[:, None]
+        ndt = ndt - old
+        s = s - jnp.take(eta, z_old) * m
+
+        ntw_w = jnp.take(ntw_t, w, axis=0) - old        # [DB, T], -dn exact
+        logp = (jnp.log(ndt + alpha)
+                + jnp.log(ntw_w + beta)
+                - jnp.log(nt[None, :] - old + vocab_size * beta))
+        if supervised:
+            mu_t = (s[:, None] + eta[None, :]) * inv_len[:, None]
+            logp = logp - 0.5 * (y[:, None] - mu_t) ** 2 / rho
+
+        p = jnp.exp(logp - jnp.max(logp, axis=1, keepdims=True))
+        c = jnp.cumsum(p, axis=1)
+        z_new = jnp.sum((c < (u * c[:, -1])[:, None]).astype(jnp.int32), axis=1)
+        z_new = jnp.where(m > 0, z_new, z_old).astype(jnp.int32)
+
+        new = (topic_iota == z_new[:, None]).astype(jnp.float32) * m[:, None]
+        ndt = ndt + new
+        s = s + jnp.take(eta, z_new) * m
+        z_out_ref[:, n] = z_new
+        return ndt, s
+
+    ndt, _ = jax.lax.fori_loop(0, n_tokens, token_step, (ndt0, s0))
+    ndt_out_ref[...] = ndt
+
+
+def slda_gibbs_sweep_pallas(tokens, mask, uniforms, z, ndt, y, inv_len,
+                            ntw_t, nt, eta, *, alpha, beta, rho,
+                            supervised=True, doc_block=8, interpret=True):
+    """Blocked document-parallel Gibbs sweep.  Shapes as in ref.py.
+
+    D must be a multiple of doc_block (ops.py pads).  Returns (z_new, ndt_new).
+    """
+    D, N = tokens.shape
+    T = ndt.shape[-1]
+    W = ntw_t.shape[0]
+    assert D % doc_block == 0, (D, doc_block)
+    grid = (D // doc_block,)
+
+    doc_spec = lambda cols: pl.BlockSpec((doc_block, cols), lambda i: (i, 0))
+    full = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+
+    kernel = functools.partial(
+        _gibbs_kernel, alpha=float(alpha), beta=float(beta), rho=float(rho),
+        supervised=supervised, n_tokens=N, vocab_size=W)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[doc_spec(N), doc_spec(N), doc_spec(N), doc_spec(N),
+                  doc_spec(T), doc_spec(1), doc_spec(1),
+                  full((W, T)), full((1, T)), full((1, T))],
+        out_specs=[doc_spec(N), doc_spec(T)],
+        out_shape=[jax.ShapeDtypeStruct((D, N), jnp.int32),
+                   jax.ShapeDtypeStruct((D, T), jnp.float32)],
+        interpret=interpret,
+    )(tokens, mask, uniforms, z, ndt, y[:, None], inv_len[:, None],
+      ntw_t, nt[None, :], eta[None, :])

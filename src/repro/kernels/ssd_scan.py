@@ -1,0 +1,107 @@
+"""Mamba-2 SSD (state-space duality) chunked scan as a Pallas TPU kernel.
+
+The SSD insight: a chunk of the linear recurrence
+
+    h_t = exp(A·dt_t)·h_{t-1} + dt_t·x_t ⊗ B_t ,    y_t = C_t·h_t
+
+splits into an intra-chunk quadratic term (an L×L masked-decay matmul —
+MXU work) plus an inter-chunk state carry (rank-N).  The chunk dimension is
+the minor grid axis, so it runs sequentially per (batch, head) and the
+running state [P, N] persists in VMEM scratch across grid steps — the
+cross-chunk recurrence costs no HBM traffic at all.
+
+Grid: (B, H, S / CHUNK).  Blocks: x, y [1,1,L,P]; dt [1,1,L];
+B, C [1,L,N] (shared across heads, fetched once per head-sweep); A [H] in
+SMEM.  All matmuls are [L,N]·[N,L], [L,L]·[L,P], [P,L]·[L,N] — lane/MXU
+aligned for L, P, N multiples of 128/ hardware tiling (ops.py pads).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, state_scr,
+                *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _reset():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    A = a_ref[0, 0]                                  # scalar (this head)
+    x = x_ref[0, 0].astype(jnp.float32)              # [L, P]
+    dt = dt_ref[0, 0].astype(jnp.float32)            # [L]
+    Bm = b_ref[0].astype(jnp.float32)                # [L, N]
+    Cm = c_ref[0].astype(jnp.float32)                # [L, N]
+    L = chunk
+
+    a = A * dt                                       # [L]  (A < 0, dt > 0)
+    cum = jnp.cumsum(a)                              # [L]
+
+    # ---- intra-chunk (quadratic, MXU) ----
+    G = Cm @ Bm.T                                    # [L, L]
+    rows = cum[:, None] - cum[None, :]               # exp(cum_t - cum_s)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1) <= \
+          jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    M = jnp.where(tri, jnp.exp(rows), 0.0) * dt[None, :]
+    y = (G * M) @ x                                  # [L, P]
+
+    # ---- inter-chunk (state carry) ----
+    h0 = state_scr[...]                              # [P, N]
+    y = y + jnp.exp(cum)[:, None] * (Cm @ h0.T)      # [L,N]·[N,P]
+
+    # ---- state update ----
+    w = jnp.exp(cum[-1] - cum) * dt                  # [L]
+    state_scr[...] = h0 * jnp.exp(cum[-1]) + (x.T * w[None, :]) @ Bm
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk=64, interpret=True):
+    """x: [b, s, h, p]; dt: [b, s, h]; A: [h]; B, C: [b, s, n] → y like x.
+
+    s % chunk == 0 (ops.py pads).  Matches ref.ref_ssd.
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    grid = (b, h, s // chunk)
+
+    xt = jnp.swapaxes(x, 1, 2)                       # [b, h, s, p]
+    dtt = jnp.swapaxes(dt, 1, 2)                     # [b, h, s]
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    yt = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bi, hi, ci: (hi, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda bi, hi, ci: (bi, hi, ci)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, p),
+                               lambda bi, hi, ci: (bi, hi, ci, 0)),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((b, h, s, p), x.dtype),
+        interpret=interpret,
+    )(A[:, None].astype(jnp.float32), xt, dtt, B, C)
+    return jnp.swapaxes(yt, 1, 2)
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
+    """One-token SSD state update (serving path; pure jnp — bandwidth-bound,
+    no kernel warranted).  state: [b, h, p, n]; x_t: [b, h, p];
+    dt_t: [b, h]; A: [h]; B_t, C_t: [b, n].  Returns (state', y_t [b,h,p])."""
+    decay = jnp.exp(A[None, :] * dt_t)                            # [b, h]
+    upd = (dt_t[..., None] * x_t)[..., None] * B_t[:, None, None, :]
+    state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, C_t)
+    return state, y

@@ -1,0 +1,3 @@
+"""Distribution + launch layer: production meshes, sharding rules,
+train/serve step builders, the multi-pod dry-run, and the sLDA chain
+runner."""

@@ -1,0 +1,239 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production meshes and extract memory / cost / collective analyses.
+
+This is the proof that the distribution config is coherent without real
+hardware: a sharding mismatch, an OOM-at-compile or an unsupported
+collective fails the compile, and the compiled artifact feeds §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch internlm2-1.8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts/]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, RUNS, SHAPES, cells_for, input_specs
+from repro.models import ModelConfig, init_cache, init_params
+from repro.optim import OptConfig, init_opt_state
+from .hlo import collective_stats, roofline_terms
+from .hlo_cost import HloCost
+from .mesh import make_production_mesh
+from .sharding import (DistConfig, batch_specs, cache_specs, named,
+                       opt_state_specs, param_specs)
+from .steps import make_decode_step, make_prefill_step, make_train_step
+
+
+def _spec_struct(tree, dtype_map=None):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool,
+               chains_override: int | None = None,
+               dist_overrides: dict | None = None):
+    """Returns (lowered, meta) for one dry-run cell.
+
+    chains_override forces a chain count — e.g. n_chains=1 on the 2-pod
+    mesh is the standard cross-pod data-parallel BASELINE against which
+    the paper's communication-free chains are quantified.
+    dist_overrides tweaks DistConfig fields (§Perf switches)."""
+    cfg: ModelConfig = ARCHS[arch]
+    run = RUNS[arch]
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+
+    if chains_override is not None:
+        n_chains = chains_override
+    elif shape.kind == "train":
+        n_chains = run["chains_multi" if multi_pod else "chains_single"]
+    else:
+        n_chains = 1          # serving default: single replica per mesh
+    dist = DistConfig(
+        n_chains=n_chains, fsdp=run["fsdp"],
+        accum_steps=run["accum_steps"] if shape.kind == "train" else 1,
+        param_dtype=run["param_dtype"], opt_dtype=run["opt_dtype"],
+        use_pallas=False, **(dist_overrides or {}))
+    from repro.kernels import ops as _ops
+    from .sharding import chain_axes as _ca, dp_axes as _da, _maybe
+    _ops.OPT["causal_skip"] = dist.opt_causal_attention
+    _ops.OPT["block_q"] = dist.opt_attn_block_q
+    _ops.OPT["head_shard_axes"] = (
+        (_maybe(_ca(mesh, n_chains)), _maybe(_da(mesh, n_chains)))
+        if dist.opt_head_shard else None)
+    _ops.OPT["probs_bf16"] = dist.opt_probs_bf16
+    _ops.OPT["moe_ep_axes"] = (_maybe(_ca(mesh, n_chains))
+                               if dist.opt_moe_ep else None)
+    pdt = jnp.dtype(dist.param_dtype)
+
+    params_struct = jax.eval_shape(
+        lambda k: init_params(k, cfg, n_chains, pdt),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    pspecs = param_specs(params_struct, mesh, dist)
+    batch_struct = input_specs(cfg, shape, n_chains)
+    bspecs = batch_specs(batch_struct, mesh, dist,
+                         replicated_serve=shape.kind != "train")
+
+    with mesh:
+        if shape.kind == "train":
+            opt = OptConfig(opt_dtype=dist.opt_dtype)
+            opt_struct = jax.eval_shape(
+                lambda p: init_opt_state(p, opt), params_struct)
+            ospecs = opt_state_specs(pspecs, mesh)
+            step = make_train_step(cfg, dist, opt)
+            metrics_specs = None    # let the compiler place small outputs
+            lowered = jax.jit(
+                step,
+                in_shardings=(named(pspecs, mesh), named(ospecs, mesh),
+                              named(bspecs, mesh)),
+                out_shardings=(named(pspecs, mesh), named(ospecs, mesh),
+                               None),
+            ).lower(params_struct, opt_struct, batch_struct)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg, dist)
+            lowered = jax.jit(
+                step, in_shardings=(named(pspecs, mesh), named(bspecs, mesh)),
+            ).lower(params_struct, batch_struct)
+        else:                       # decode
+            b = shape.global_batch
+            cache_struct = jax.eval_shape(
+                lambda: init_cache(cfg, n_chains, b, shape.seq_len,
+                                   jnp.bfloat16))
+            cspecs = cache_specs(cache_struct, mesh, dist)
+            step = make_decode_step(cfg, dist, combine="none")
+            lowered = jax.jit(
+                step,
+                in_shardings=(named(pspecs, mesh), named(cspecs, mesh),
+                              named(bspecs, mesh)),
+                out_shardings=(None, named(cspecs, mesh)),
+            ).lower(params_struct, cache_struct, batch_struct)
+
+    meta = dict(arch=arch, shape=shape_name, kind=shape.kind,
+                multi_pod=multi_pod, n_chips=n_chips, n_chains=n_chains,
+                fsdp=dist.fsdp, accum=dist.accum_steps,
+                param_dtype=dist.param_dtype, opt_dtype=dist.opt_dtype,
+                params=cfg.param_count(),
+                active_params=cfg.active_param_count())
+    return lowered, meta
+
+
+def analyze(lowered, meta, *, verbose=True):
+    t0 = time.time()
+    compiled = lowered.compile()
+    meta["compile_s"] = round(time.time() - t0, 1)
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    meta["bytes_per_device"] = {
+        "arguments": getattr(mem, "argument_size_in_bytes", None),
+        "output": getattr(mem, "output_size_in_bytes", None),
+        "temp": getattr(mem, "temp_size_in_bytes", None),
+        "peak": getattr(mem, "peak_memory_in_bytes", None),
+    }
+    # raw XLA numbers (loop bodies counted ONCE — kept for reference)
+    meta["xla_flops_raw"] = float(ca.get("flops", 0.0))
+    meta["xla_bytes_raw"] = float(ca.get("bytes accessed", 0.0))
+    # loop-aware cost model (see hlo_cost.py) — the roofline source
+    text = compiled.as_text()
+    cost = HloCost(text, pod_size=256).total()
+    stats = collective_stats(text, pod_size=256)   # static (spec) count
+    meta["hlo_flops"] = cost.flops
+    meta["hlo_bytes"] = cost.hbm_bytes
+    meta["collective_bytes"] = cost.coll_bytes
+    meta["collective_bytes_cross_pod"] = cost.coll_cross_pod
+    meta["collective_count"] = cost.coll_count
+    meta["collective_by_kind"] = {k: float(v)
+                                  for k, v in cost.coll_by_kind.items()}
+    meta["collective_bytes_static"] = stats.bytes_total
+    meta["unknown_trip_loops"] = cost.unknown_trip_loops
+    # XLA reports the PARTITIONED (per-device) module → per_device=True
+    terms = roofline_terms(cost.flops, cost.hbm_bytes, cost.coll_bytes,
+                           meta["n_chips"])
+    meta.update(terms)
+    # useful-FLOP ratio: 6·N·D for train, 2·N·D per generated token
+    toks = {"train": SHAPES[meta["shape"]].global_batch *
+                     SHAPES[meta["shape"]].seq_len,
+            "prefill": SHAPES[meta["shape"]].global_batch *
+                       SHAPES[meta["shape"]].seq_len,
+            "decode": SHAPES[meta["shape"]].global_batch}[meta["kind"]]
+    mult = 6 if meta["kind"] == "train" else 2
+    meta["model_flops"] = mult * meta["active_params"] * toks
+    whole_flops = cost.flops * meta["n_chips"]
+    meta["useful_flop_ratio"] = (meta["model_flops"] / whole_flops
+                                 if whole_flops else 0.0)
+    if verbose:
+        print(json.dumps({k: v for k, v in meta.items()
+                          if k not in ("collective_by_kind",)}, indent=1))
+    return meta
+
+
+def run_cell(arch, shape_name, multi_pod, out_dir=None, verbose=True,
+             chains_override=None, tag_suffix="", dist_overrides=None):
+    lowered, meta = build_cell(arch, shape_name, multi_pod, chains_override,
+                               dist_overrides)
+    meta = analyze(lowered, meta, verbose=verbose)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = (f"{arch}_{shape_name}_{'multi' if multi_pod else 'single'}"
+               f"{tag_suffix}")
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(meta, f, indent=1)
+    return meta
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--chains", type=int, default=None,
+                    help="override chain count (e.g. 1 = standard DP "
+                         "baseline on the multi-pod mesh)")
+    ap.add_argument("--tag", default="", help="artifact filename suffix")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    if args.all:
+        archs = sorted(ARCHS)
+    elif args.arch:
+        archs = [args.arch]
+    else:
+        ap.error("--arch or --all required")
+
+    meshes = [False, True] if (args.both_meshes or args.all) else \
+        [args.multi_pod]
+    failures = []
+    for arch in archs:
+        shapes = [args.shape] if args.shape else cells_for(ARCHS[arch])
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} × {shape} × {'2-pod' if mp else '1-pod'}"
+                try:
+                    t0 = time.time()
+                    run_cell(arch, shape, mp, args.out, verbose=False,
+                             chains_override=args.chains,
+                             tag_suffix=args.tag)
+                    print(f"PASS {tag}  ({time.time() - t0:.0f}s)")
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    failures.append((tag, repr(e)))
+                    print(f"FAIL {tag}: {e}")
+                    traceback.print_exc()
+    print(f"\n{len(failures)} failures")
+    for tag, err in failures:
+        print(" ", tag, err)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

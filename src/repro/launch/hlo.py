@@ -1,0 +1,130 @@
+"""Post-compile HLO analysis: collective traffic + roofline terms.
+
+`cost_analysis()` gives FLOPs and HBM bytes but NOT collective bytes, so we
+parse the optimized HLO text.  XLA prints collectives as
+
+  %all-reduce.N = (f32[...], ...) all-reduce(%ref, ...), channel_id=...,
+      replica_groups=[G,N]<=[T]T(perm) | {{0,1},{2,3}}, ...
+
+Operands are refs (no shapes), so payloads derive from the OUTPUT shape:
+  all-reduce          2 × out        (ring traffic per device ≈ 2× payload)
+  all-gather          out            (output is the gathered full tensor)
+  reduce-scatter      out × group    (input = group_size × output)
+  all-to-all          out
+  collective-permute  out
+
+replica_groups (both explicit and iota forms) are expanded to split traffic
+into intra-pod (ICI) vs cross-pod (DCN) — the quantity the paper's
+communication-free chains drive to zero.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]\{?")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_OP_RE = re.compile(
+    r"=\s*(.*?)\s+(" + "|".join(_COLLECTIVES) + r")(-start|-done)?\(")
+_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+_EXPL_RE = re.compile(r"replica_groups=\{(\{[0-9,{}]*\})\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _groups(line: str):
+    """Expand replica_groups to a [G, N] int array, or None."""
+    m = _IOTA_RE.search(line)
+    if m:
+        g, n = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        ids = np.arange(math.prod(dims)).reshape(dims)
+        if m.group(4):
+            ids = ids.transpose([int(x) for x in m.group(4).split(",")])
+        return ids.reshape(g, n)
+    m = _EXPL_RE.search(line)
+    if m:
+        rows = re.findall(r"\{([0-9,]+)\}", m.group(1))
+        parsed = [[int(x) for x in r.split(",") if x] for r in rows]
+        width = max((len(p) for p in parsed), default=0)
+        if width == 0:
+            return None
+        return np.array([p for p in parsed if len(p) == width])
+    return None
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_total: float = 0.0
+    bytes_cross_pod: float = 0.0
+    count: int = 0
+    by_kind: dict = dataclasses.field(default_factory=dict)
+
+
+def collective_stats(hlo_text: str, pod_size: int = 256) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = _OP_RE.search(stripped)
+        if not m or m.group(3) == "-done":
+            continue
+        kind = m.group(2)
+        out_b = _shape_bytes(m.group(1))
+        groups = _groups(stripped)
+        gsize = groups.shape[1] if groups is not None else 1
+        payload = {"all-reduce": 2 * out_b,
+                   "all-gather": out_b,
+                   "reduce-scatter": out_b * gsize,
+                   "all-to-all": out_b,
+                   "collective-permute": out_b}[kind]
+        stats.bytes_total += payload
+        stats.count += 1
+        stats.by_kind[kind] = stats.by_kind.get(kind, 0.0) + payload
+        if groups is not None and (groups // pod_size !=
+                                   groups[:, :1] // pod_size).any():
+            stats.bytes_cross_pod += payload
+    return stats
+
+
+# --------------------------------------------------------------- roofline
+
+PEAK_FLOPS = 197e12        # bf16 / chip (TPU v5e)
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   n_chips: int, per_device: bool = True) -> dict:
+    """Three roofline terms in seconds.  XLA reports the PARTITIONED
+    (per-device) module, so flops/bytes are already per-chip; the parsed
+    collective payload is likewise the per-device program's traffic."""
+    div = 1 if per_device else n_chips
+    t_compute = flops / div / PEAK_FLOPS
+    t_memory = hbm_bytes / div / HBM_BW
+    t_coll = coll_bytes / div / ICI_BW
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    return {"t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "dominant": dominant}

@@ -1,0 +1,32 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — the dry-run must set
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before the first jax
+device query, and smoke tests must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; multi_pod stacks 2 pods → 512 chips.
+
+    Axis semantics (DESIGN.md §4):
+      pod   — the communication-free chain boundary for large models
+              (no collectives cross it during training)
+      data  — within-chain data parallelism / FSDP, or chain axis for
+              small models (16 chains per pod)
+      model — tensor/expert parallelism
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Single-process CPU mesh for tests/examples: every axis size 1 except
+    data, which takes all local devices."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

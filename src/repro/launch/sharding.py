@@ -1,0 +1,203 @@
+"""Sharding rules: how the chain / data / model axes map onto every tensor.
+
+Chain placement (DESIGN.md §4): the chain axis is the paper's
+communication-free boundary.  Valid chain counts are constrained by the
+mesh — a chain count must exactly cover whole mesh axes:
+
+  single-pod (data=16, model=16):   1 | 16
+  multi-pod (pod=2, data=16, model=16):   1 | 2 | 32
+
+`n_chains=1` on the multi-pod mesh is the *standard data-parallel
+baseline* (gradient all-reduce crosses the pod boundary) — it exists so
+the dry-run can quantify exactly how many inter-pod collective bytes the
+paper's technique removes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class DistConfig:
+    n_chains: int = 1
+    fsdp: bool = False
+    accum_steps: int = 1
+    param_dtype: str = "float32"
+    opt_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    use_pallas: bool = False       # False → partitionable jnp twins (dry-run)
+    remat: bool = True
+    # --- §Perf switches (all False/off in the paper-faithful baseline) ---
+    opt_causal_attention: bool = False   # triangular-scan causal skip
+    opt_replicate_embed: bool = False    # replicate untied embed table over
+                                         # 'model' (kills the gather reshard)
+    opt_prefill_last_only: bool = False  # prefill emits last-token logits
+    opt_attn_block_q: int = 0            # 0 = default; S = scan-free attn
+    opt_head_shard: bool = False         # head-aligned q/k/v constraints
+    opt_probs_bf16: bool = False         # bf16 attention probabilities
+    opt_moe_ep: bool = False             # explicit EP constraint on MoE
+    remat_policy: str = "full"           # "full" | "dots" (save matmul outs)
+
+
+def axis_sizes(mesh) -> dict:
+    # works for both Mesh and AbstractMesh
+    return dict(zip(mesh.axis_names, mesh.axis_sizes))
+
+
+def chain_axes(mesh: Mesh, n_chains: int) -> tuple:
+    sizes = axis_sizes(mesh)
+    multi = "pod" in sizes
+    if n_chains == 1:
+        return ()
+    if multi and n_chains == sizes["pod"]:
+        return ("pod",)
+    if multi and n_chains == sizes["pod"] * sizes["data"]:
+        return ("pod", "data")
+    if not multi and n_chains == sizes["data"]:
+        return ("data",)
+    raise ValueError(
+        f"n_chains={n_chains} must cover whole mesh axes of {sizes}")
+
+
+def dp_axes(mesh: Mesh, n_chains: int) -> tuple:
+    used = set(chain_axes(mesh, n_chains))
+    return tuple(a for a in mesh.axis_names if a != "model" and a not in used)
+
+
+def _maybe(axes):
+    """() → None, ('data',) → 'data', tuple stays tuple."""
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _fits(shape, spec, mesh: Mesh) -> P:
+    """Drop spec entries whose mesh-axis product doesn't divide the dim."""
+    sizes = axis_sizes(mesh)
+    out = []
+    for dim, entry in zip(shape, spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        out.append(entry if dim % total == 0 else None)
+    return P(*out)
+
+
+def param_specs(params, cfg_mesh: Mesh, dist: DistConfig):
+    """PartitionSpec tree matching the param tree (rules in DESIGN.md §6)."""
+    c = _maybe(chain_axes(cfg_mesh, dist.n_chains))
+    f = "data" if (dist.fsdp and "data" in dp_axes(cfg_mesh, dist.n_chains)) \
+        else None
+    m = "model"
+
+    def rule(path, leaf):
+        name = None
+        stacked = False
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                if p.key == "layers_stacked":
+                    stacked = True     # leaves carry a leading layer dim
+                name = p.key
+        nd = leaf.ndim - (1 if stacked else 0)
+        if name == "table":
+            # §Perf: replicating the (untied) embed table over 'model'
+            # turns the token gather into a local lookup (no reshard)
+            spec = (c, None, None) if dist.opt_replicate_embed else (c, m, f)
+        elif name in ("lm_head", "frontend_proj"):
+            spec = (c, f, m)
+        elif name in ("wq", "wk", "wv", "wz", "wx", "wbc", "wdt"):
+            spec = (c, f, m)
+        elif name in ("w_gate", "w_up"):
+            spec = (c, m, f, None) if nd == 4 else (c, f, m)   # moe | mlp
+        elif name == "w_down":
+            spec = (c, m, None, f) if nd == 4 else (c, m, f)
+        elif name in ("wo", "out_proj"):
+            spec = (c, m, f)
+        elif name in ("bq", "bk", "bv", "conv_b_x", "conv_b_bc", "out_norm",
+                      "A_log", "dt_bias"):
+            spec = (c, m)
+        elif name in ("conv_x", "conv_bc"):
+            spec = (c, None, m)
+        elif name == "router":
+            spec = (c, None, None)
+        else:                       # norms, q_norm/k_norm, small leaves
+            spec = (c,) + (None,) * (nd - 1)
+        spec = spec[:nd]
+        if stacked:
+            spec = (None,) + spec   # layer dim of scanned stacks: unsharded
+        return _fits(leaf.shape, spec, cfg_mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def batch_specs(batch, mesh: Mesh, dist: DistConfig, *, replicated_serve=False):
+    """Batch sharding: train batches split over chains×dp; serve batches
+    (replicated_serve) shard over dp only and replicate across chains."""
+    c = _maybe(chain_axes(mesh, dist.n_chains))
+    d = _maybe(dp_axes(mesh, dist.n_chains))
+    b_axis = None if replicated_serve and c is not None else d
+
+    def rule(_, leaf):
+        spec = (c, b_axis) + (None,) * (leaf.ndim - 2)
+        return _fits(leaf.shape, spec, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, batch)
+
+
+def cache_specs(cache, mesh: Mesh, dist: DistConfig):
+    """KV/SSM cache sharding: batch over dp; kv-heads over model when
+    divisible, else the cache SEQ dim over model (context sharding), else
+    replicated.  SSM states shard heads over model."""
+    c = _maybe(chain_axes(mesh, dist.n_chains))
+    d = _maybe(dp_axes(mesh, dist.n_chains))
+    msize = axis_sizes(mesh)["model"]
+
+    def rule(path, leaf):
+        name = None
+        stacked = False
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                if p.key == "layers_stacked":
+                    stacked = True
+                name = p.key
+        shape = leaf.shape[1:] if stacked and name != "pos" else leaf.shape
+        if name in ("len", "pos"):
+            spec = (c, d)
+        elif name in ("k", "v"):                 # [C, b, Hkv, S, hd]
+            if shape[2] % msize == 0:
+                spec = (c, d, "model", None, None)
+            elif shape[3] % msize == 0:
+                spec = (c, d, None, "model", None)
+            else:
+                spec = (c, d, None, None, None)
+        elif name == "ssm":                      # [C, b, H, P, N]
+            spec = (c, d, "model", None, None)
+        elif name in ("conv_x", "conv_bc"):      # [C, b, K-1, ch]
+            spec = (c, d, None, "model")
+        else:
+            spec = (c, d) + (None,) * (leaf.ndim - 2)
+        nd = leaf.ndim - (1 if stacked and name != "pos" else 0)
+        spec = spec[:nd]
+        if stacked and name != "pos":
+            spec = (None,) + spec
+        return _fits(leaf.shape, spec, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+def named(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(pspecs, mesh: Mesh):
+    """Optimizer state mirrors param sharding; the step counter replicates."""
+    return {"m": pspecs, "v": pspecs, "step": P()}

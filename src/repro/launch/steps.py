@@ -1,0 +1,104 @@
+"""jit-able train / prefill / decode steps, built per (arch × dist) config.
+
+train_step: microbatch gradient accumulation (lax.scan), per-chain loss and
+grad-clip, AdamW.  Nothing reduces over the chain dim — the communication-
+free property is structural, and the dry-run HLO proves it (no collectives
+over the chain mesh axes).
+
+decode_step: optionally combines per-chain logits with the paper's
+Simple/Weighted Average rules (serving-time ensemble = the paper's Eq. 6).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, decode_step as model_decode
+from repro.models import forward, loss_fn
+from repro.optim import OptConfig, adamw_update
+from .sharding import DistConfig
+
+
+def make_train_step(cfg: ModelConfig, dist: DistConfig, opt: OptConfig):
+    cd = jnp.dtype(dist.compute_dtype)
+
+    def loss_total(params, mb):
+        per_chain = loss_fn(params, mb, cfg, compute_dtype=cd,
+                            use_pallas=dist.use_pallas, remat=dist.remat,
+                            remat_policy=dist.remat_policy)
+        return per_chain.sum(), per_chain      # chains are independent
+
+    def train_step(params, opt_state, batch):
+        a = dist.accum_steps
+        if a == 1:
+            (_, per_chain), grads = jax.value_and_grad(
+                loss_total, has_aux=True)(params, batch)
+        else:
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (_, l), g = jax.value_and_grad(loss_total, has_aux=True)(
+                    params, mb)
+                g_acc = jax.tree.map(
+                    lambda x, y: x + y.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            # [C, B, ...] → [A, C, B/A, ...] microbatch-major for the scan
+            def split(x):
+                c, b = x.shape[:2]
+                return jnp.moveaxis(
+                    x.reshape((c, a, b // a) + x.shape[2:]), 1, 0)
+
+            mbs = jax.tree.map(split, batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            c = jax.tree.leaves(params)[0].shape[0]
+            (grads, per_chain), _ = jax.lax.scan(
+                micro, (g0, jnp.zeros((c,), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / a, grads)
+            per_chain = per_chain / a
+
+        params2, opt2, metrics = adamw_update(params, grads, opt_state, opt)
+        metrics["loss"] = per_chain
+        return params2, opt2, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, dist: DistConfig):
+    cd = jnp.dtype(dist.compute_dtype)
+
+    def prefill_step(params, batch):
+        logits, _ = forward(params, batch, cfg, compute_dtype=cd,
+                            use_pallas=dist.use_pallas, remat=False,
+                            last_token_only=dist.opt_prefill_last_only)
+        return logits
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, dist: DistConfig,
+                     combine: str = "none"):
+    """combine: "none" (per-chain logits out) | "simple" | "weighted".
+    Weighted expects batch["chain_weights"]: [C] (e.g. inverse validation
+    loss — the LM analogue of the paper's inverse training MSE)."""
+    cd = jnp.dtype(dist.compute_dtype)
+
+    def step(params, cache, batch):
+        logits, new_cache = model_decode(params, cache, batch, cfg,
+                                         compute_dtype=cd,
+                                         use_pallas=dist.use_pallas)
+        if combine == "none":
+            return logits, new_cache
+        # the paper's prediction combination, applied to token distributions
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        if combine == "simple":
+            mix = jnp.mean(probs, axis=0)                      # Eq. (7)
+        else:
+            w = batch["chain_weights"]
+            w = w / jnp.maximum(w.sum(), 1e-9)
+            mix = jnp.einsum("c,cbsv->bsv", w, probs)          # Eq. (9)
+        return jnp.log(jnp.maximum(mix, 1e-30)), new_cache
+
+    return step

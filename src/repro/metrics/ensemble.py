@@ -1,0 +1,54 @@
+"""Chain-ensemble health.
+
+Communication-free chains never synchronize, so operators need a cheap
+signal for (a) a diverging/NaN chain that should be dropped from the
+combine, and (b) ensemble collapse (chains too similar → no ensembling
+benefit).  Both come from per-chain predictions on a tiny probe batch —
+KBs of traffic, evaluated out-of-band, never touching the training path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chain_divergence(logits) -> jnp.ndarray:
+    """Mean pairwise symmetric KL between chains' token distributions.
+    logits: [C, ..., V] → scalar per chain pair average [C, C]."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    p = jnp.exp(logp)
+    # KL(i || j) averaged over all positions
+    kl = jnp.einsum("c...v,d...v->cd",
+                    p, logp) * -1.0 + jnp.einsum("c...v,c...v->c",
+                                                 p, logp)[:, None]
+    n = p.size // (p.shape[0] * p.shape[-1])
+    kl = kl / n
+    return 0.5 * (kl + kl.T)
+
+
+def ensemble_health(per_chain_loss, logits=None, *, loss_z_cut: float = 4.0,
+                    collapse_kl: float = 1e-3):
+    """Returns (alive [C] float mask, report dict).
+
+    A chain is marked dead if its probe loss is non-finite or further than
+    `loss_z_cut` robust z-scores above the chain median (diverged).
+    `collapsed` flags an ensemble whose surviving chains are nearly
+    identical (median pairwise KL below `collapse_kl`)."""
+    loss = jnp.asarray(per_chain_loss, jnp.float32)
+    finite = jnp.isfinite(loss)
+    med = jnp.median(jnp.where(finite, loss, jnp.nanmax(loss)))
+    mad = jnp.median(jnp.abs(jnp.where(finite, loss, med) - med)) + 1e-9
+    z = (loss - med) / (1.4826 * mad)
+    alive = (finite & (z < loss_z_cut)).astype(jnp.float32)
+
+    report = {"loss": loss, "z": z, "alive": alive, "collapsed": False}
+    if logits is not None and int(alive.sum()) >= 2:
+        kl = chain_divergence(logits)
+        c = kl.shape[0]
+        mask = (alive[:, None] * alive[None, :]
+                * (1 - jnp.eye(c)))
+        vals = jnp.where(mask > 0, kl, jnp.nan)
+        med_kl = jnp.nanmedian(vals)
+        report["median_pairwise_kl"] = med_kl
+        report["collapsed"] = bool(med_kl < collapse_kl)
+    return alive, report

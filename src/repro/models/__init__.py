@@ -1,0 +1,7 @@
+"""Unified model zoo: dense / MoE / SSM / hybrid decoders, one interface."""
+from .config import ModelConfig
+from .transformer import (init_params, forward, loss_fn, init_cache,
+                          decode_step)
+
+__all__ = ["ModelConfig", "init_params", "forward", "loss_fn", "init_cache",
+           "decode_step"]

@@ -1,0 +1,104 @@
+"""GQA attention with RoPE, optional QKV bias (qwen2) and qk-norm (qwen3);
+train path uses the flash kernel, decode path updates a KV cache in place."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .config import ModelConfig
+from .layers import dense_init, rmsnorm, rope
+
+
+def init_attention(key, cfg: ModelConfig, n_chains: int, dtype):
+    D, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], D, (n_chains, D, H * hd), dtype),
+        "wk": dense_init(ks[1], D, (n_chains, D, Hkv * hd), dtype),
+        "wv": dense_init(ks[2], D, (n_chains, D, Hkv * hd), dtype),
+        "wo": dense_init(ks[3], H * hd, (n_chains, H * hd, D), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((n_chains, H * hd), dtype)
+        p["bk"] = jnp.zeros((n_chains, Hkv * hd), dtype)
+        p["bv"] = jnp.zeros((n_chains, Hkv * hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((n_chains, hd), jnp.float32)
+        p["k_norm"] = jnp.ones((n_chains, hd), jnp.float32)
+    return p
+
+
+def attention(params, x, cfg: ModelConfig, *, positions, cache=None,
+              compute_dtype=jnp.bfloat16, use_pallas=True):
+    """x: [c, b, s, D].  cache: None (train, causal full-seq) or a dict
+    {"k","v": [c,b,Hkv,S_cache,hd], "len": [c,b]} for single-token decode.
+    Returns (out [c,b,s,D], new_cache)."""
+    c, b, s, D = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    q = jnp.einsum("cbsd,cdh->cbsh", x, params["wq"].astype(compute_dtype))
+    k = jnp.einsum("cbsd,cdh->cbsh", x, params["wk"].astype(compute_dtype))
+    v = jnp.einsum("cbsd,cdh->cbsh", x, params["wv"].astype(compute_dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(compute_dtype)[:, None, None]
+        k = k + params["bk"].astype(compute_dtype)[:, None, None]
+        v = v + params["bv"].astype(compute_dtype)[:, None, None]
+    q = q.reshape(c, b, s, H, hd)
+    k = k.reshape(c, b, s, Hkv, hd)
+    v = v.reshape(c, b, s, Hkv, hd)
+    if ops.OPT["head_shard_axes"] is not None:
+        # §Perf: pin heads (not head_dim) to the model axis — uneven head
+        # counts just pad; a sharded head_dim would make every attention
+        # einsum a partial-sum all-reduce of logits-sized tensors
+        from jax.sharding import PartitionSpec as P
+        ca, da = ops.OPT["head_shard_axes"]
+        spec = P(ca, da, None, "model", None)
+        q = jax.lax.with_sharding_constraint(q, spec)
+        k = jax.lax.with_sharding_constraint(k, spec)
+        v = jax.lax.with_sharding_constraint(v, spec)
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps).astype(compute_dtype)
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps).astype(compute_dtype)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    # [c,b,s,H,hd] → [(c b), H, s, hd] for the kernel
+    fold = lambda t: jnp.swapaxes(t, 2, 3).reshape(c * b, t.shape[3], s, hd)
+
+    new_cache = None
+    if cache is None:
+        out = ops.attention(fold(q), fold(k), fold(v), causal=True,
+                            use_pallas=use_pallas)
+    else:
+        # decode: append this step's k/v at position `len`, attend to prefix
+        assert s == 1
+        idx = cache["len"]                                   # [c, b]
+        k_cache = jax.lax.dynamic_update_slice_in_dim  # noqa: F841 (doc)
+        ci = jnp.arange(c)[:, None]
+        bi = jnp.arange(b)[None, :]
+        kc = cache["k"].at[ci, bi, :, idx].set(
+            jnp.swapaxes(k, 2, 3)[:, :, :, 0].astype(cache["k"].dtype))
+        vc = cache["v"].at[ci, bi, :, idx].set(
+            jnp.swapaxes(v, 2, 3)[:, :, :, 0].astype(cache["v"].dtype))
+        new_cache = {"k": kc, "v": vc, "len": idx + 1}
+        S = kc.shape[3]
+        out = ops.attention(
+            fold(q),
+            kc.reshape(c * b, Hkv, S, hd).astype(compute_dtype),
+            vc.reshape(c * b, Hkv, S, hd).astype(compute_dtype),
+            causal=True, kv_len=(idx + 1).reshape(c * b),
+            use_pallas=use_pallas)
+
+    out = jnp.swapaxes(out.reshape(c, b, H, s, hd), 2, 3).reshape(c, b, s, H * hd)
+    out = jnp.einsum("cbsh,chd->cbsd", out, params["wo"].astype(compute_dtype))
+    return out, new_cache
+
+
+def init_kv_cache(cfg: ModelConfig, n_chains, batch, max_len, dtype):
+    Hkv, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((n_chains, batch, Hkv, max_len, hd), dtype),
+        "v": jnp.zeros((n_chains, batch, Hkv, max_len, hd), dtype),
+        "len": jnp.zeros((n_chains, batch), jnp.int32),
+    }

@@ -1,0 +1,90 @@
+"""Shared building blocks.  Every activation/weight carries an explicit
+leading chain dim `c` — the paper's communication-free ensemble axis — so
+einsum strings spell it out and sharding specs can target it directly."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def uniform_init(key, shape, scale, dtype=jnp.float32):
+    return jax.random.uniform(key, shape, dtype, -1.0, 1.0) * scale
+
+
+def dense_init(key, fan_in, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * (fan_in ** -0.5)
+
+
+def rmsnorm(x, w, eps):
+    """x: [..., D]; w: [c, D] broadcast over the chain dim explicitly."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    while w.ndim < x.ndim:
+        w = w[:, None]
+    return (xf * jax.lax.rsqrt(var + eps) * w).astype(x.dtype)
+
+
+def rope(x, positions, theta):
+    """Rotary embedding.  x: [c, b, s, h, hd]; positions: [c, b, s]."""
+    hd = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, hd // 2, dtype=jnp.float32) / (hd // 2))
+    ang = positions[..., None].astype(jnp.float32) * freqs     # [c,b,s,hd/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- MLP
+
+def init_mlp(key, d_model, d_ff, n_chains, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, (n_chains, d_model, d_ff), dtype),
+        "w_up": dense_init(k2, d_model, (n_chains, d_model, d_ff), dtype),
+        "w_down": dense_init(k3, d_ff, (n_chains, d_ff, d_model), dtype),
+    }
+
+
+def mlp(params, x, compute_dtype):
+    """SwiGLU.  x: [c, b, s, D] → [c, b, s, D]."""
+    wg = params["w_gate"].astype(compute_dtype)
+    wu = params["w_up"].astype(compute_dtype)
+    wd = params["w_down"].astype(compute_dtype)
+    g = jnp.einsum("cbsd,cdf->cbsf", x, wg)
+    u = jnp.einsum("cbsd,cdf->cbsf", x, wu)
+    return jnp.einsum("cbsf,cfd->cbsd", jax.nn.silu(g) * u, wd)
+
+
+# ----------------------------------------------------------- embeddings
+
+def init_embedding(key, vocab, d_model, n_chains, dtype):
+    return {"table": dense_init(key, 1, (n_chains, vocab, d_model), dtype)}
+
+
+def embed(params, tokens, compute_dtype):
+    """tokens: [c, b, s] → [c, b, s, D] (one-hot free gather)."""
+    tbl = params["table"].astype(compute_dtype)
+    c = tokens.shape[0]
+    return jax.vmap(lambda t, e: jnp.take(e, t, axis=0))(
+        tokens.reshape(c, -1), tbl).reshape(tokens.shape + tbl.shape[-1:])
+
+
+def unembed(params, x, compute_dtype):
+    return jnp.einsum("cbsd,cvd->cbsv", x,
+                      params["table"].astype(compute_dtype))
+
+
+def cross_entropy(logits, targets, z_weight: float = 0.0):
+    """Per-chain mean CE.  logits: [c,b,s,V]; targets: [c,b,s] → loss [c].
+
+    Includes optional z-loss (stabilises large-vocab training)."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                               targets[..., None], axis=-1)[..., 0]
+    ce = lse - gold
+    if z_weight:
+        ce = ce + z_weight * jnp.square(lse)
+    return jnp.mean(ce, axis=(1, 2))

@@ -1,0 +1,116 @@
+"""Top-k token-choice MoE with capacity-buffer dispatch (GShard-style, but
+scatter-based rather than the quadratic dispatch-einsum).
+
+Route: softmax → top-k → renormalize.  Tokens are sorted by expert id, each
+token gets a position-in-expert slot, tokens beyond an expert's capacity
+  C_e = ceil(tokens · top_k / E) · capacity_factor
+are dropped (their residual passes through — standard).  The dispatch
+buffer is [c, E, C_e, D]; sharding E over the mesh's model axis makes this
+expert parallelism: the scatter into the buffer IS the all-to-all.
+
+Arctic's `moe_dense_d_ff` adds a small dense residual MLP in parallel.
+Aux load-balance loss (Switch-style) is returned for the train loss.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init, init_mlp, mlp
+
+
+def init_moe(key, cfg: ModelConfig, n_chains: int, dtype):
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], D, (n_chains, D, E), jnp.float32),
+        "w_gate": dense_init(ks[1], D, (n_chains, E, D, F), dtype),
+        "w_up": dense_init(ks[2], D, (n_chains, E, D, F), dtype),
+        "w_down": dense_init(ks[3], F, (n_chains, E, F, D), dtype),
+    }
+    if cfg.moe_dense_d_ff:
+        p["dense"] = init_mlp(ks[4], D, cfg.moe_dense_d_ff, n_chains, dtype)
+    return p
+
+
+def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    per = math.ceil(n_tokens * cfg.moe_top_k / cfg.n_experts)
+    return max(8, int(per * cfg.capacity_factor))
+
+
+def moe(params, x, cfg: ModelConfig, compute_dtype):
+    """x: [c, b, s, D] → (y [c, b, s, D], aux_loss [c])."""
+    c, b, s, D = x.shape
+    E, K = cfg.n_experts, cfg.moe_top_k
+    T = b * s
+    C = _capacity(T, cfg)
+    xt = x.reshape(c, T, D)
+
+    logits = jnp.einsum("ctd,cde->cte", xt.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                    # [c, T, E]
+    gate, eidx = jax.lax.top_k(probs, K)                       # [c, T, K]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # Switch aux loss: E · Σ_e (fraction routed to e) · (mean prob of e)
+    frac = jnp.mean(jax.nn.one_hot(eidx[..., 0], E, dtype=jnp.float32), 1)
+    aux = E * jnp.sum(frac * jnp.mean(probs, axis=1), axis=-1)  # [c]
+
+    # ---- slot bookkeeping: T·K slots, sorted by expert id ----
+    slot_e = eidx.reshape(c, T * K)                            # [c, TK]
+    order = jnp.argsort(slot_e, axis=-1)
+    sorted_e = jnp.take_along_axis(slot_e, order, axis=-1)
+    # position of each sorted slot within its expert group
+    pos = jnp.arange(T * K)[None, :] - jax.vmap(
+        lambda se: jnp.searchsorted(se, se, side="left"))(sorted_e)
+    keep = pos < C
+    tok_of_slot = order // K                                   # token index
+
+    # ---- dispatch: scatter tokens into the [E, C, D] buffer ----
+    def dispatch_one(xt_c, se, ps, kp, tos):
+        buf = jnp.zeros((E, C, D), compute_dtype)
+        upd = jnp.where(kp[:, None], xt_c[tos].astype(compute_dtype), 0)
+        return buf.at[se, jnp.minimum(ps, C - 1)].add(upd, mode="drop")
+
+    buf = jax.vmap(dispatch_one)(xt, sorted_e, pos, keep, tok_of_slot)
+    from repro.kernels import ops as _ops
+    if _ops.OPT["moe_ep_axes"] is not None:
+        # §Perf: pin the dispatch buffer to expert parallelism over the
+        # model axis (the scatter above IS the all-to-all); otherwise GSPMD
+        # may replicate it — across pods on the multi-pod mesh
+        from jax.sharding import PartitionSpec as P
+        ca = _ops.OPT["moe_ep_axes"]
+        buf = jax.lax.with_sharding_constraint(
+            buf, P(ca, "model", None, None))
+
+    # ---- expert compute (batched over E — MXU-dense) ----
+    wg = params["w_gate"].astype(compute_dtype)
+    wu = params["w_up"].astype(compute_dtype)
+    wd = params["w_down"].astype(compute_dtype)
+    g = jnp.einsum("cekd,cedf->cekf", buf, wg)
+    u = jnp.einsum("cekd,cedf->cekf", buf, wu)
+    out_buf = jnp.einsum("cekf,cefd->cekd", jax.nn.silu(g) * u, wd)
+    if _ops.OPT["moe_ep_axes"] is not None:
+        from jax.sharding import PartitionSpec as P
+        out_buf = jax.lax.with_sharding_constraint(
+            out_buf, P(_ops.OPT["moe_ep_axes"], "model", None, None))
+
+    # ---- combine: gather slots back, weight by gates, sum over K ----
+    sorted_gate = jnp.take_along_axis(gate.reshape(c, T * K), order, axis=-1)
+
+    def combine_one(ob, se, ps, kp, tos, sg):
+        vals = ob[se, jnp.minimum(ps, C - 1)]                  # [TK, D]
+        vals = jnp.where(kp[:, None], vals, 0) * sg[:, None]
+        return jnp.zeros((T, D), compute_dtype).at[tos].add(
+            vals.astype(compute_dtype))
+
+    y = jax.vmap(combine_one)(out_buf, sorted_e, pos, keep, tok_of_slot,
+                              sorted_gate)
+    y = y.reshape(c, b, s, D)
+
+    if cfg.moe_dense_d_ff:                                     # Arctic residual
+        y = y + mlp(params["dense"], x, compute_dtype)
+    return y, aux

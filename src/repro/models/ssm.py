@@ -1,0 +1,107 @@
+"""Mamba-2 mixer block (SSD), including the depthwise causal conv and the
+decode path that carries (conv_state, ssm_state) instead of a KV cache.
+
+The usual fused in_proj [D → 2·di + 2·N + H] is SPLIT into per-role
+projections (wz / wx / wbc / wdt) so each shards cleanly over the tensor-
+parallel axis without boundary-crossing reshards; depthwise conv splits the
+same way (exactly equivalent math — depthwise is per-channel)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .config import ModelConfig
+from .layers import dense_init, rmsnorm
+
+
+def init_mamba(key, cfg: ModelConfig, n_chains: int, dtype):
+    D, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    Kc = cfg.conv_kernel
+    ks = jax.random.split(key, 7)
+    return {
+        "wz": dense_init(ks[0], D, (n_chains, D, di), dtype),
+        "wx": dense_init(ks[1], D, (n_chains, D, di), dtype),
+        "wbc": dense_init(ks[2], D, (n_chains, D, 2 * N), dtype),
+        "wdt": dense_init(ks[3], D, (n_chains, D, H), dtype),
+        "conv_x": dense_init(ks[4], Kc, (n_chains, Kc, di), dtype),
+        "conv_bc": dense_init(ks[5], Kc, (n_chains, Kc, 2 * N), dtype),
+        "conv_b_x": jnp.zeros((n_chains, di), dtype),
+        "conv_b_bc": jnp.zeros((n_chains, 2 * N), dtype),
+        "A_log": jnp.zeros((n_chains, H), jnp.float32),      # A = -exp(A_log)
+        "dt_bias": jnp.zeros((n_chains, H), jnp.float32),
+        "out_norm": jnp.ones((n_chains, di), jnp.float32),
+        "out_proj": dense_init(ks[6], di, (n_chains, di, D), dtype),
+    }
+
+
+def _causal_conv(u, w, b):
+    """Depthwise causal conv over seq.  u: [c,b,s,ch]; w: [c,K,ch]."""
+    K = w.shape[1]
+    pad = jnp.pad(u, ((0, 0), (0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, :, i:i + u.shape[2], :] * w[:, None, None, i, :]
+              for i in range(K))
+    return jax.nn.silu(out + b[:, None, None, :])
+
+
+def mamba(params, x, cfg: ModelConfig, *, cache=None,
+          compute_dtype=jnp.bfloat16, use_pallas=True):
+    """x: [c, b, s, D] → (y, new_cache).  cache (decode): dict with
+    conv_x: [c,b,K-1,di], conv_bc: [c,b,K-1,2N], ssm: [c,b,H,P,N]."""
+    c, b, s, D = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    cd = compute_dtype
+    z = jnp.einsum("cbsd,cdi->cbsi", x, params["wz"].astype(cd))
+    xs = jnp.einsum("cbsd,cdi->cbsi", x, params["wx"].astype(cd))
+    bc = jnp.einsum("cbsd,cdn->cbsn", x, params["wbc"].astype(cd))
+    dt = jnp.einsum("cbsd,cdh->cbsh", x, params["wdt"].astype(cd))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][:, None, None, :])   # [c,b,s,H]
+    A = -jnp.exp(params["A_log"])                                  # [c, H]
+
+    new_cache = None
+    if cache is None:
+        xs = _causal_conv(xs, params["conv_x"].astype(cd),
+                          params["conv_b_x"].astype(cd))
+        bc = _causal_conv(bc, params["conv_bc"].astype(cd),
+                          params["conv_b_bc"].astype(cd))
+        Bm = bc[..., :N].astype(jnp.float32)
+        Cm = bc[..., N:].astype(jnp.float32)
+        y = jax.vmap(lambda xc, dc, ac, bv, cv: ops.ssd(
+            xc, dc, ac, bv, cv, use_pallas=use_pallas))(
+                xs.reshape(c, b, s, H, P), dt, A, Bm, Cm)
+        y = y.reshape(c, b, s, di).astype(cd)
+    else:
+        assert s == 1
+        hist_x = jnp.concatenate([cache["conv_x"], xs], axis=2)
+        hist_bc = jnp.concatenate([cache["conv_bc"], bc], axis=2)
+        xs1 = jax.nn.silu(
+            jnp.einsum("cbki,cki->cbi", hist_x, params["conv_x"].astype(cd))
+            + params["conv_b_x"].astype(cd)[:, None])
+        bc1 = jax.nn.silu(
+            jnp.einsum("cbkn,ckn->cbn", hist_bc, params["conv_bc"].astype(cd))
+            + params["conv_b_bc"].astype(cd)[:, None])
+        B1 = bc1[..., :N].astype(jnp.float32)
+        C1 = bc1[..., N:].astype(jnp.float32)
+        ssm, y1 = jax.vmap(ops.ssd_decode_step)(
+            cache["ssm"], xs1.reshape(c, b, H, P).astype(jnp.float32),
+            dt[:, :, 0], A, B1, C1)
+        y = y1.reshape(c, b, 1, di).astype(cd)
+        new_cache = {"conv_x": hist_x[:, :, 1:], "conv_bc": hist_bc[:, :, 1:],
+                     "ssm": ssm}
+
+    # gated RMSNorm (mamba2's norm(y * silu(z)))
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(cd),
+                params["out_norm"], cfg.norm_eps).astype(cd)
+    return jnp.einsum("cbsi,cid->cbsd", y,
+                      params["out_proj"].astype(cd)), new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, n_chains, batch, dtype):
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    K = cfg.conv_kernel
+    return {
+        "conv_x": jnp.zeros((n_chains, batch, K - 1, di), dtype),
+        "conv_bc": jnp.zeros((n_chains, batch, K - 1, 2 * N), dtype),
+        "ssm": jnp.zeros((n_chains, batch, H, P, N), jnp.float32),
+    }

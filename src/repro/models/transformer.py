@@ -1,0 +1,340 @@
+"""The unified decoder: dense / MoE / SSM / hybrid / stub-frontend models
+behind one `init_params` / `forward` / `decode_step` interface.
+
+Chain dim convention: every param leaf is [n_chains, ...], every activation
+[n_chains, batch, ...].  Chains are the paper's communication-free ensemble
+axis — nothing in this module ever reduces across it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention, init_attention, init_kv_cache
+from .config import ModelConfig
+from .layers import (cross_entropy, dense_init, embed, init_embedding,
+                     init_mlp, mlp, rmsnorm, unembed)
+from .moe import init_moe, moe
+from .ssm import init_mamba, init_ssm_cache, mamba
+
+
+def _init_layer(key, kind: str, cfg: ModelConfig, C: int, param_dtype):
+    lp = {"norm1": jnp.ones((C, cfg.d_model), jnp.float32)}
+    k1, k2 = jax.random.split(key)
+    if kind == "A":
+        lp["attn"] = init_attention(k1, cfg, C, param_dtype)
+        lp["norm2"] = jnp.ones((C, cfg.d_model), jnp.float32)
+        if cfg.is_moe:
+            lp["moe"] = init_moe(k2, cfg, C, param_dtype)
+        else:
+            lp["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, C, param_dtype)
+    elif kind == "M":
+        lp["mamba"] = init_mamba(k1, cfg, C, param_dtype)
+    else:
+        raise ValueError(f"unknown layer kind {kind!r}")
+    return lp
+
+
+def init_params(key, cfg: ModelConfig, n_chains: int = 1,
+                param_dtype=jnp.float32):
+    """Full parameter pytree, chain dim leading on every leaf.
+
+    With cfg.scan_layers the per-layer trees are STACKED (leaves
+    [L, C, ...]) and the forward pass scans over them — compile time stays
+    O(1) in depth instead of O(L)."""
+    ks = iter(jax.random.split(key, 4 * cfg.n_layers + 8))
+    C = n_chains
+    p = {"embed": init_embedding(next(ks), cfg.vocab_size, cfg.d_model, C,
+                                 param_dtype),
+         "final_norm": jnp.ones((C, cfg.d_model), jnp.float32),
+         "layers": []}
+    if cfg.scan_layers:
+        assert set(cfg.pattern) == {"A"} and not cfg.shared_attn_every, \
+            "scan_layers requires a homogeneous attention stack"
+        layer_keys = jax.random.split(next(ks), cfg.n_layers)
+        layers = [_init_layer(k, "A", cfg, C, param_dtype)
+                  for k in layer_keys]
+        p["layers_stacked"] = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                           *layers)
+        del p["layers"]
+        if not cfg.tie_embeddings:
+            p["lm_head"] = dense_init(next(ks), cfg.d_model,
+                                      (C, cfg.d_model, cfg.vocab_size),
+                                      param_dtype)
+        if cfg.frontend != "none":
+            p["frontend_proj"] = dense_init(next(ks), cfg.d_model,
+                                            (C, cfg.d_model, cfg.d_model),
+                                            param_dtype)
+        return p
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(next(ks), cfg.d_model,
+                                  (C, cfg.d_model, cfg.vocab_size), param_dtype)
+    if cfg.frontend != "none":
+        # stub frontend: a single projection of precomputed embeddings
+        p["frontend_proj"] = dense_init(next(ks), cfg.d_model,
+                                        (C, cfg.d_model, cfg.d_model),
+                                        param_dtype)
+    for ch in cfg.pattern:
+        lp = {"norm1": jnp.ones((C, cfg.d_model), jnp.float32)}
+        if ch == "A":
+            lp["attn"] = init_attention(next(ks), cfg, C, param_dtype)
+            lp["norm2"] = jnp.ones((C, cfg.d_model), jnp.float32)
+            if cfg.is_moe:
+                lp["moe"] = init_moe(next(ks), cfg, C, param_dtype)
+            else:
+                lp["mlp"] = init_mlp(next(ks), cfg.d_model, cfg.d_ff, C,
+                                     param_dtype)
+        elif ch == "M":
+            lp["mamba"] = init_mamba(next(ks), cfg, C, param_dtype)
+        else:
+            raise ValueError(f"unknown layer kind {ch!r}")
+        p["layers"].append(lp)
+    if cfg.shared_attn_every:
+        p["shared"] = {
+            "norm1": jnp.ones((C, cfg.d_model), jnp.float32),
+            "attn": init_attention(next(ks), cfg, C, param_dtype),
+            "norm2": jnp.ones((C, cfg.d_model), jnp.float32),
+            "mlp": init_mlp(next(ks), cfg.d_model, cfg.d_ff, C, param_dtype),
+        }
+    return p
+
+
+def _shared_block(params, x, cfg, positions, compute_dtype, use_pallas):
+    h, _ = attention(params["attn"], rmsnorm(x, params["norm1"], cfg.norm_eps)
+                     .astype(compute_dtype), cfg, positions=positions,
+                     compute_dtype=compute_dtype, use_pallas=use_pallas)
+    x = x + h
+    x = x + mlp(params["mlp"], rmsnorm(x, params["norm2"], cfg.norm_eps)
+                .astype(compute_dtype), compute_dtype)
+    return x
+
+
+def _ckpt(fn, policy: str, **kw):
+    """remat wrapper: 'full' recomputes everything; 'dots' saves matmul
+    outputs (§Perf: trades HBM for ~25% less recompute FLOPs)."""
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            **kw)
+    return jax.checkpoint(fn, **kw)
+
+
+def forward(params, batch, cfg: ModelConfig, *, compute_dtype=jnp.bfloat16,
+            use_pallas=True, remat=True, remat_policy="full",
+            last_token_only=False):
+    """Train-time forward.  batch: {"tokens": [c,b,s]} (+ "embeds"
+    [c,b,p,D] for stub frontends).  Returns (logits [c,b,s,V], aux [c]).
+
+    last_token_only: emit logits for the final position only — the serving
+    prefill path (§Perf: avoids materializing the [b, s, V] logits tensor,
+    which at 32k × 152k vocab is 100s of GB)."""
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens, compute_dtype)
+    if cfg.frontend != "none":
+        emb = batch["embeds"].astype(compute_dtype)
+        emb = jnp.einsum("cbpd,cde->cbpe", emb,
+                         params["frontend_proj"].astype(compute_dtype))
+        if cfg.frontend == "vision":
+            x = jnp.concatenate([emb, x], axis=2)     # prepend patch embeds
+        else:                                          # audio: frame-aligned
+            x = x + emb
+    c, b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, None],
+                                 (c, b, s))
+    aux_total = jnp.zeros((c,), jnp.float32)
+
+    def run_layer(lp, kind, x):
+        aux = jnp.zeros((c,), jnp.float32)
+        if kind == "A":
+            h, _ = attention(lp["attn"],
+                             rmsnorm(x, lp["norm1"], cfg.norm_eps)
+                             .astype(compute_dtype), cfg, positions=positions,
+                             compute_dtype=compute_dtype,
+                             use_pallas=use_pallas)
+            x = x + h
+            inner = rmsnorm(x, lp["norm2"], cfg.norm_eps).astype(compute_dtype)
+            if cfg.is_moe:
+                h, aux = moe(lp["moe"], inner, cfg, compute_dtype)
+            else:
+                h = mlp(lp["mlp"], inner, compute_dtype)
+            x = x + h
+        else:
+            h, _ = mamba(lp["mamba"],
+                         rmsnorm(x, lp["norm1"], cfg.norm_eps)
+                         .astype(compute_dtype), cfg,
+                         compute_dtype=compute_dtype, use_pallas=use_pallas)
+            x = x + h
+        return x, aux
+
+    if cfg.scan_layers:
+        def body(x, lp):
+            x, aux = run_layer(lp, "A", x)
+            return x, aux
+        if remat:
+            body = _ckpt(body, remat_policy)
+        x, auxs = jax.lax.scan(body, x, params["layers_stacked"])
+        aux_total = aux_total + auxs.sum(0)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps).astype(compute_dtype)
+        if cfg.frontend == "vision":
+            x = x[:, :, -tokens.shape[2]:]
+        if last_token_only:
+            x = x[:, :, -1:]
+        if cfg.tie_embeddings:
+            logits = unembed(params["embed"], x, compute_dtype)
+        else:
+            logits = jnp.einsum("cbsd,cdv->cbsv", x,
+                                params["lm_head"].astype(compute_dtype))
+        return logits, aux_total
+
+    for i, (lp, kind) in enumerate(zip(params["layers"], cfg.pattern)):
+        fn = run_layer
+        if remat:
+            fn = _ckpt(run_layer, remat_policy, static_argnums=(1,))
+        x, aux = fn(lp, kind, x)
+        aux_total = aux_total + aux
+        if cfg.shared_attn_every and (i + 1) % cfg.shared_attn_every == 0:
+            def blk(sp, x, pos):
+                return _shared_block(sp, x, cfg, pos, compute_dtype,
+                                     use_pallas)
+            if remat:
+                blk = _ckpt(blk, remat_policy)
+            x = blk(params["shared"], x, positions)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps).astype(compute_dtype)
+    if cfg.frontend == "vision":
+        x = x[:, :, -tokens.shape[2]:]     # logits over text positions only
+    if last_token_only:
+        x = x[:, :, -1:]
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x, compute_dtype)
+    else:
+        logits = jnp.einsum("cbsd,cdv->cbsv", x,
+                            params["lm_head"].astype(compute_dtype))
+    return logits, aux_total
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, compute_dtype=jnp.bfloat16,
+            use_pallas=True, remat=True, remat_policy="full"):
+    """Per-chain loss [c] — never reduced across chains."""
+    logits, aux = forward(params, batch, cfg, compute_dtype=compute_dtype,
+                          use_pallas=use_pallas, remat=remat,
+                          remat_policy=remat_policy)
+    ce = cross_entropy(logits, batch["targets"])
+    return ce + cfg.router_aux_weight * aux if cfg.is_moe else ce
+
+
+# ------------------------------------------------------------------ serving
+
+def init_cache(cfg: ModelConfig, n_chains, batch, max_len, dtype=jnp.bfloat16):
+    if cfg.scan_layers:
+        one = init_kv_cache(cfg, n_chains, batch, max_len, dtype)
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), one)
+        return {"layers_stacked": stacked,
+                "pos": jnp.zeros((n_chains, batch), jnp.int32)}
+    layers = []
+    for ch in cfg.pattern:
+        if ch == "A":
+            layers.append(init_kv_cache(cfg, n_chains, batch, max_len, dtype))
+        else:
+            layers.append(init_ssm_cache(cfg, n_chains, batch, dtype))
+    cache = {"layers": layers, "pos": jnp.zeros((n_chains, batch), jnp.int32)}
+    if cfg.shared_attn_every:
+        n_shared = cfg.n_layers // cfg.shared_attn_every
+        cache["shared"] = [init_kv_cache(cfg, n_chains, batch, max_len, dtype)
+                           for _ in range(n_shared)]
+    return cache
+
+
+def decode_step(params, cache, batch, cfg: ModelConfig, *,
+                compute_dtype=jnp.bfloat16, use_pallas=True):
+    """One decode step.  batch: {"tokens": [c,b,1], optional "embeds"
+    [c,b,1,D] (audio frame conditioning)} → (logits [c,b,1,V], cache')."""
+    tokens = batch["tokens"] if isinstance(batch, dict) else batch
+    x = embed(params["embed"], tokens, compute_dtype)
+    if isinstance(batch, dict) and "embeds" in batch:
+        x = x + jnp.einsum("cbpd,cde->cbpe",
+                           batch["embeds"].astype(compute_dtype),
+                           params["frontend_proj"].astype(compute_dtype))
+    c, b, s, _ = x.shape
+    pos_scalar = cache["pos"]                      # [c, b]
+    positions = pos_scalar[:, :, None]
+
+    if cfg.scan_layers:
+        def body(x, inp):
+            lp, lc = inp
+            h, nc = attention(lp["attn"],
+                              rmsnorm(x, lp["norm1"], cfg.norm_eps)
+                              .astype(compute_dtype), cfg,
+                              positions=positions, cache=lc,
+                              compute_dtype=compute_dtype,
+                              use_pallas=use_pallas)
+            x = x + h
+            inner = rmsnorm(x, lp["norm2"], cfg.norm_eps).astype(compute_dtype)
+            if cfg.is_moe:
+                h, _ = moe(lp["moe"], inner, cfg, compute_dtype)
+            else:
+                h = mlp(lp["mlp"], inner, compute_dtype)
+            return x + h, nc
+
+        x, new_stack = jax.lax.scan(
+            body, x, (params["layers_stacked"], cache["layers_stacked"]))
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps).astype(compute_dtype)
+        if cfg.tie_embeddings:
+            logits = unembed(params["embed"], x, compute_dtype)
+        else:
+            logits = jnp.einsum("cbsd,cdv->cbsv", x,
+                                params["lm_head"].astype(compute_dtype))
+        return logits, {"layers_stacked": new_stack, "pos": pos_scalar + 1}
+
+    new_layers = []
+    shared_i = 0
+    new_shared = list(cache.get("shared", []))
+    for i, (lp, kind) in enumerate(zip(params["layers"], cfg.pattern)):
+        if kind == "A":
+            h, nc = attention(lp["attn"],
+                              rmsnorm(x, lp["norm1"], cfg.norm_eps)
+                              .astype(compute_dtype), cfg,
+                              positions=positions, cache=cache["layers"][i],
+                              compute_dtype=compute_dtype,
+                              use_pallas=use_pallas)
+            x = x + h
+            inner = rmsnorm(x, lp["norm2"], cfg.norm_eps).astype(compute_dtype)
+            if cfg.is_moe:
+                h, _ = moe(lp["moe"], inner, cfg, compute_dtype)
+            else:
+                h = mlp(lp["mlp"], inner, compute_dtype)
+            x = x + h
+        else:
+            h, nc = mamba(lp["mamba"],
+                          rmsnorm(x, lp["norm1"], cfg.norm_eps)
+                          .astype(compute_dtype), cfg,
+                          cache=cache["layers"][i],
+                          compute_dtype=compute_dtype, use_pallas=use_pallas)
+            x = x + h
+        new_layers.append(nc)
+        if cfg.shared_attn_every and (i + 1) % cfg.shared_attn_every == 0:
+            sp = params["shared"]
+            h, nsc = attention(sp["attn"],
+                               rmsnorm(x, sp["norm1"], cfg.norm_eps)
+                               .astype(compute_dtype), cfg,
+                               positions=positions,
+                               cache=cache["shared"][shared_i],
+                               compute_dtype=compute_dtype,
+                               use_pallas=use_pallas)
+            x = x + h
+            x = x + mlp(sp["mlp"], rmsnorm(x, sp["norm2"], cfg.norm_eps)
+                        .astype(compute_dtype), compute_dtype)
+            new_shared[shared_i] = nsc
+            shared_i += 1
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps).astype(compute_dtype)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x, compute_dtype)
+    else:
+        logits = jnp.einsum("cbsd,cdv->cbsv", x,
+                            params["lm_head"].astype(compute_dtype))
+    new_cache = {"layers": new_layers, "pos": pos_scalar + 1}
+    if cfg.shared_attn_every:
+        new_cache["shared"] = new_shared
+    return logits, new_cache

@@ -1,0 +1,6 @@
+"""Optimizer substrate: AdamW with per-chain semantics."""
+from .adamw import (OptConfig, init_opt_state, adamw_update, lr_schedule,
+                    clip_by_global_norm_per_chain, quantize_grads)
+
+__all__ = ["OptConfig", "init_opt_state", "adamw_update", "lr_schedule",
+           "clip_by_global_norm_per_chain", "quantize_grads"]

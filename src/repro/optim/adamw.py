@@ -1,0 +1,135 @@
+"""AdamW with explicit per-chain semantics.
+
+Every param leaf is [n_chains, ...]; all optimizer statistics keep that
+leading dim and every reduction (grad-norm clip, metrics) is per-chain —
+nothing crosses the chain axis, preserving the paper's communication-free
+property at the optimizer level.
+
+Distributed-optimization tricks included:
+  * low-precision optimizer state (`opt_dtype="bfloat16"` halves m/v bytes;
+    the update math still runs in fp32),
+  * optional int8 stochastic-rounding gradient quantization
+    (`grad_quant_bits=8`) emulating compressed gradient aggregation,
+  * decoupled weight decay + warmup-cosine schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    opt_dtype: str = "float32"       # "bfloat16" halves optimizer-state HBM
+    grad_quant_bits: int = 0         # 0 = off; 8 = int8 stochastic rounding
+
+
+def lr_schedule(cfg: OptConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params, cfg: OptConfig):
+    dt = jnp.dtype(cfg.opt_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _chain_axis(path) -> int:
+    """Chain dim position: leaves under 'layers_stacked' carry a leading
+    layer dim (scanned stacks), so their chain dim is axis 1."""
+    return 1 if any(isinstance(p, jax.tree_util.DictKey)
+                    and p.key == "layers_stacked" for p in path) else 0
+
+
+def _per_chain_sq(path, g):
+    """Sum of squares per chain: [..., C, ...] → [C]."""
+    ax = _chain_axis(path)
+    axes = tuple(i for i in range(g.ndim) if i != ax)
+    return jnp.sum(jnp.square(g.astype(jnp.float32)), axis=axes)
+
+
+def global_norm_per_chain(grads):
+    flat, _ = jax.tree_util.tree_flatten_with_path(grads)
+    return jnp.sqrt(sum(_per_chain_sq(path, g) for path, g in flat))
+
+
+def clip_by_global_norm_per_chain(grads, clip_norm):
+    norm = global_norm_per_chain(grads)                     # [C]
+    scale = jnp.minimum(1.0, clip_norm / (norm + 1e-9))     # [C]
+
+    def apply(path, g):
+        ax = _chain_axis(path)
+        shape = [1] * g.ndim
+        shape[ax] = -1
+        s = scale.reshape(shape)
+        return (g.astype(jnp.float32) * s).astype(g.dtype)
+
+    return jax.tree_util.tree_map_with_path(apply, grads), norm
+
+
+def quantize_grads(grads, key, bits: int = 8):
+    """Per-tensor-scale stochastic-rounding quantization (error ≤ 1 ulp).
+    Emulates int8 compressed all-reduce payloads; unbiased by construction."""
+    qmax = 2.0 ** (bits - 1) - 1
+
+    def q(path, g):
+        k = jax.random.fold_in(key, hash(str(path)) % (2 ** 31))
+        gf = g.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / qmax
+        scaled = gf / scale
+        noise = jax.random.uniform(k, g.shape) - 0.5
+        return (jnp.round(scaled + noise) * scale).astype(g.dtype)
+
+    return jax.tree_util.tree_map_with_path(q, grads)
+
+
+def adamw_update(params, grads, state, cfg: OptConfig):
+    """One AdamW step.  Returns (params', state', metrics dict)."""
+    grads, gnorm = clip_by_global_norm_per_chain(grads, cfg.clip_norm)
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+        mhat, vhat = mf / bc1, vf / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * \
+            p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * delta
+        return p2.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    params2 = jax.tree.unflatten(tdef, [o[0] for o in out])
+    m2 = jax.tree.unflatten(tdef, [o[1] for o in out])
+    v2 = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return params2, {"m": m2, "v": v2, "step": step}, {"grad_norm": gnorm,
+                                                       "lr": lr}

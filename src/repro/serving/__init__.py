@@ -1,0 +1,4 @@
+"""Serving substrate: batched generation with chain-ensemble combination."""
+from .engine import GenerationConfig, ServingEngine, sample_token
+
+__all__ = ["GenerationConfig", "ServingEngine", "sample_token"]

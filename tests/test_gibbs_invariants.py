@@ -1,0 +1,89 @@
+"""Property-based invariants of the collapsed-Gibbs sampler."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import (Corpus, SLDAConfig, counts_from_assignments,
+                        init_state, sweep, zbar, phi_hat)
+from repro.data import make_slda_corpus
+
+# fixed shape menu so jit caches hit across hypothesis examples
+_SHAPES = [(2, 32, 8, 10), (4, 64, 8, 16), (8, 32, 12, 20)]
+
+
+@st.composite
+def corpus_and_cfg(draw):
+    n_topics, vocab, n_docs, doc_len = draw(st.sampled_from(_SHAPES))
+    seed = draw(st.integers(0, 2 ** 16))
+    cfg = SLDAConfig(n_topics=n_topics, vocab_size=vocab, n_iters=2)
+    corpus, _ = make_slda_corpus(jax.random.PRNGKey(seed), n_docs, vocab,
+                                 n_topics, doc_len)
+    return cfg, corpus, seed
+
+
+@given(corpus_and_cfg())
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+def test_sweep_preserves_count_invariants(args):
+    """After any sweep: counts are consistent with z, totals are conserved,
+    z stays in range, padding tokens never move."""
+    cfg, corpus, seed = args
+    state = init_state(jax.random.PRNGKey(seed + 1), corpus, cfg)
+    z_before = state.z
+    state2 = sweep(jax.random.PRNGKey(seed + 2), corpus, state, cfg)
+
+    # z in range
+    assert int(state2.z.min()) >= 0 and int(state2.z.max()) < cfg.n_topics
+    # padded tokens unchanged
+    pad = corpus.mask == 0
+    assert np.array_equal(np.asarray(state2.z)[np.asarray(pad)],
+                          np.asarray(z_before)[np.asarray(pad)])
+    # counts exactly match assignments
+    ndt, ntw, nt = counts_from_assignments(corpus.tokens, corpus.mask,
+                                           state2.z, cfg.n_topics,
+                                           cfg.vocab_size)
+    np.testing.assert_allclose(np.asarray(state2.ndt), np.asarray(ndt))
+    np.testing.assert_allclose(np.asarray(state2.ntw), np.asarray(ntw))
+    np.testing.assert_allclose(np.asarray(state2.nt), np.asarray(nt))
+    # token mass conserved
+    total = float(corpus.mask.sum())
+    assert abs(float(state2.ndt.sum()) - total) < 1e-3
+    assert abs(float(state2.ntw.sum()) - total) < 1e-3
+
+
+@given(corpus_and_cfg())
+@settings(max_examples=6, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+def test_zbar_and_phi_are_distributions(args):
+    cfg, corpus, seed = args
+    state = init_state(jax.random.PRNGKey(seed + 3), corpus, cfg)
+    state = sweep(jax.random.PRNGKey(seed + 4), corpus, state, cfg)
+    zb = np.asarray(zbar(state, corpus))
+    assert (zb >= 0).all()
+    np.testing.assert_allclose(zb.sum(-1), 1.0, atol=1e-4)
+    ph = np.asarray(phi_hat(state, cfg))
+    assert (ph > 0).all()
+    np.testing.assert_allclose(ph.sum(-1), 1.0, atol=1e-4)
+
+
+def test_sweep_deterministic_given_key():
+    cfg = SLDAConfig(n_topics=4, vocab_size=32)
+    corpus, _ = make_slda_corpus(jax.random.PRNGKey(0), 8, 32, 4, 12)
+    state = init_state(jax.random.PRNGKey(1), corpus, cfg)
+    s1 = sweep(jax.random.PRNGKey(2), corpus, state, cfg)
+    s2 = sweep(jax.random.PRNGKey(2), corpus, state, cfg)
+    assert np.array_equal(np.asarray(s1.z), np.asarray(s2.z))
+
+
+def test_supervision_pulls_topics_toward_label_fit():
+    """With a strongly informative η, the supervised term must change the
+    sampled assignments relative to unsupervised sampling."""
+    cfg = SLDAConfig(n_topics=4, vocab_size=64, rho=0.01)
+    corpus, _ = make_slda_corpus(jax.random.PRNGKey(5), 16, 64, 4, 20)
+    state = init_state(jax.random.PRNGKey(6), corpus, cfg)
+    state = state.__class__(state.z, state.ndt, state.ntw, state.nt,
+                            jnp.asarray([10.0, -10.0, 5.0, -5.0]))
+    sup = sweep(jax.random.PRNGKey(7), corpus, state, cfg, supervised=True)
+    uns = sweep(jax.random.PRNGKey(7), corpus, state, cfg, supervised=False)
+    assert not np.array_equal(np.asarray(sup.z), np.asarray(uns.z))

@@ -1,0 +1,80 @@
+"""Validation of the loop-aware HLO cost model against hand-computed
+ground truth (this model is the §Roofline source, so it gets its own
+tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import HloCost, parse_module
+
+
+def _cost(fn, *args):
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    return HloCost(txt).total()
+
+
+def test_plain_matmul_flops_exact():
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    t = _cost(lambda a, b: a @ b, a, b)
+    assert t.flops == 2 * 128 * 256 * 64
+
+
+def test_scanned_matmul_flops_loop_expanded():
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=8)
+        return y
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    t = _cost(f, x, w)
+    assert t.flops == 8 * 2 * 64 ** 3
+    assert t.unknown_trip_loops == 0
+
+
+def test_nested_scan_multiplies_trips():
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            c, _ = jax.lax.scan(inner, c, None, length=3)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, None, length=4)
+        return y
+
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    w = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    t = _cost(f, x, w)
+    assert t.flops == 12 * 2 * 32 ** 3
+
+
+def test_batched_dot_counts_batch_dims():
+    a = jax.ShapeDtypeStruct((4, 16, 32), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 32, 8), jnp.float32)
+    t = _cost(lambda a, b: jnp.einsum("bik,bkj->bij", a, b), a, b)
+    assert t.flops == 2 * 4 * 16 * 32 * 8
+
+
+def test_comment_stripping_in_big_tuples():
+    """Loop states with >5 elements get /*index=N*/ comments in the HLO;
+    parsing must survive them (regression: arctic train once cost 0 flops)."""
+    def f(a, b, c, d, e, g, w):
+        def body(carry, _):
+            a, b, c, d, e, g = carry
+            return (a @ w, b + 1, c, d, e, g), None
+        (a, *_), _ = jax.lax.scan(body, (a, b, c, d, e, g), None, length=5)
+        return a
+
+    s = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    t = _cost(f, s, s, s, s, s, s, s)
+    assert t.flops == 5 * 2 * 16 ** 3
+
+
+def test_hbm_includes_elementwise_traffic():
+    a = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    t = _cost(lambda a: a * 2 + 1, a)
+    # at least one read + one write of 4 MB
+    assert t.hbm_bytes >= 2 * 4 * 1024 * 1024

@@ -1,0 +1,162 @@
+"""Per-kernel validation: Pallas (interpret mode) vs the pure-jnp oracle,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Corpus, SLDAConfig, init_state
+from repro.data import make_slda_corpus
+from repro.kernels import ops, ref
+
+
+def keys(n, seed=0):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ---------------------------------------------------------------- attention
+
+@pytest.mark.parametrize("b,hq,hkv,sq,sk,dh", [
+    (1, 2, 2, 32, 32, 16),       # MHA, square
+    (2, 4, 2, 64, 64, 32),       # GQA 2:1
+    (1, 8, 1, 96, 96, 64),       # MQA; seq not a block multiple (pads)
+    (2, 4, 4, 1, 128, 32),       # decode: 1 query vs cache
+    (1, 4, 2, 16, 80, 32),       # ragged cache prefix
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(b, hq, hkv, sq, sk, dh, dtype):
+    ks = keys(3)
+    q = jax.random.normal(ks[0], (b, hq, sq, dh), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, sk, dh), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, sk, dh), dtype)
+    out = ops.attention(q, k, v, causal=True, block_q=32, block_k=32)
+    exp = ref.ref_attention(q, k, v, causal=True)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_kv_len_masks_padded_cache():
+    ks = keys(3)
+    b, h, sk, dh = 2, 4, 64, 32
+    q = jax.random.normal(ks[0], (b, h, 1, dh))
+    k = jax.random.normal(ks[1], (b, h, sk, dh))
+    v = jax.random.normal(ks[2], (b, h, sk, dh))
+    kv_len = jnp.array([17, 50], jnp.int32)
+    out = ops.attention(q, k, v, causal=True, kv_len=kv_len, block_k=32)
+    exp = ref.ref_attention(q, k, v, causal=True, kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5)
+    # poisoning the masked tail must not change the output
+    k2 = k.at[:, :, 55:].set(1e4)
+    out2 = ops.attention(q, k2, v, causal=True, kv_len=kv_len, block_k=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2), atol=1e-5)
+
+
+def test_flash_attention_noncausal():
+    ks = keys(3)
+    q = jax.random.normal(ks[0], (1, 2, 32, 16))
+    k = jax.random.normal(ks[1], (1, 2, 64, 16))
+    v = jax.random.normal(ks[2], (1, 2, 64, 16))
+    out = ops.attention(q, k, v, causal=False, block_q=16, block_k=16)
+    exp = ref.ref_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-6)
+
+
+# ---------------------------------------------------------------------- ssd
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (1, 64, 2, 8, 8, 16),
+    (2, 128, 4, 16, 8, 32),
+    (1, 96, 1, 32, 16, 32),      # s not a power of two
+    (1, 50, 2, 8, 8, 16),        # s not a chunk multiple (pads)
+])
+def test_ssd_matches_ref(b, s, h, p, n, chunk):
+    ks = keys(5, seed=3)
+    x = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, n)) * 0.5
+    C = jax.random.normal(ks[4], (b, s, n)) * 0.5
+    out = ops.ssd(x, dt, A, B, C, chunk=chunk)
+    exp = ref.ref_ssd(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_ssd_decode_matches_scan():
+    """Running the decode step token-by-token must equal the chunked scan."""
+    ks = keys(5, seed=4)
+    b, s, h, p, n = 2, 32, 2, 8, 8
+    x = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, n)) * 0.5
+    C = jax.random.normal(ks[4], (b, s, n)) * 0.5
+    state = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        state, y_t = ops.ssd_decode_step(state, x[:, t], dt[:, t], A,
+                                         B[:, t], C[:, t])
+        ys.append(y_t)
+    got = jnp.stack(ys, axis=1)                       # [b, s, h, p]
+    exp = ref.ref_ssd(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                               atol=2e-4, rtol=2e-4)
+
+
+# ------------------------------------------------------------------ rmsnorm
+
+@pytest.mark.parametrize("shape", [(4, 64), (3, 7, 96), (130, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_matches_ref(shape, dtype):
+    ks = keys(2, seed=5)
+    x = jax.random.normal(ks[0], shape, dtype)
+    w = jax.random.normal(ks[1], shape[-1:], jnp.float32)
+    out = ops.rmsnorm(x, w)
+    exp = ref.ref_rmsnorm(x, w)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol, rtol=tol)
+
+
+# --------------------------------------------------------------- slda gibbs
+
+@pytest.mark.parametrize("n_docs,n_topics,vocab,doc_len,doc_block", [
+    (16, 8, 100, 30, 8),
+    (10, 16, 64, 20, 4),         # D not a doc_block multiple (pads)
+    (8, 128, 200, 16, 8),        # full-lane topic dim
+])
+@pytest.mark.parametrize("supervised", [True, False])
+def test_slda_gibbs_kernel_matches_ref(n_docs, n_topics, vocab, doc_len,
+                                       doc_block, supervised):
+    cfg = SLDAConfig(n_topics=n_topics, vocab_size=vocab)
+    corpus, _ = make_slda_corpus(jax.random.PRNGKey(0), n_docs, vocab,
+                                 n_topics, doc_len)
+    state = init_state(jax.random.PRNGKey(1), corpus, cfg)
+    eta = state.eta + 0.3                 # non-trivial η to exercise the
+    uniforms = jax.random.uniform(jax.random.PRNGKey(2), corpus.tokens.shape)
+    inv_len = 1.0 / jnp.maximum(corpus.mask.sum(-1), 1.0)
+    args = (corpus.tokens, corpus.mask, uniforms, state.z, state.ndt,
+            corpus.y, inv_len, state.ntw, state.nt, eta)
+    kw = dict(alpha=cfg.alpha, beta=cfg.beta, rho=cfg.rho,
+              supervised=supervised)
+    z_k, ndt_k = ops.slda_gibbs_sweep(*args, doc_block=doc_block, **kw)
+    z_r, ndt_r = ops.slda_gibbs_sweep(*args, use_pallas=False, **kw)
+    assert np.array_equal(np.asarray(z_k), np.asarray(z_r))
+    np.testing.assert_allclose(np.asarray(ndt_k), np.asarray(ndt_r), atol=0)
+
+
+def test_slda_gibbs_counts_consistent():
+    """ndt returned by the kernel must equal counts recomputed from z."""
+    cfg = SLDAConfig(n_topics=8, vocab_size=64)
+    corpus, _ = make_slda_corpus(jax.random.PRNGKey(3), 16, 64, 8, 24)
+    state = init_state(jax.random.PRNGKey(4), corpus, cfg)
+    uniforms = jax.random.uniform(jax.random.PRNGKey(5), corpus.tokens.shape)
+    inv_len = 1.0 / jnp.maximum(corpus.mask.sum(-1), 1.0)
+    z, ndt = ops.slda_gibbs_sweep(
+        corpus.tokens, corpus.mask, uniforms, state.z, state.ndt, corpus.y,
+        inv_len, state.ntw, state.nt, state.eta,
+        alpha=cfg.alpha, beta=cfg.beta, rho=cfg.rho)
+    d_idx = jnp.arange(corpus.n_docs)[:, None]
+    expect = jnp.zeros_like(ndt).at[d_idx, z].add(corpus.mask)
+    np.testing.assert_allclose(np.asarray(ndt), np.asarray(expect), atol=0)
