@@ -1,0 +1,287 @@
+"""Before/after wall-clock for the fused prediction path (ISSUE 1 tentpole).
+
+Measures the end-to-end Weighted Average algorithm — the paper's slowest
+variant, dominated by test-time Gibbs sweeps over BOTH the test set and
+the full training set — with prediction routed through
+
+  * the SEED implementation (reconstructed below verbatim: per-document
+    `vmap` of a sweep scan, per-sweep threefry uniforms, log-space
+    categorical with a lane-dim `log_phi[:, w]` column gather), and
+  * the fused path (`kernels.ops.slda_predict_sweeps`: all sweeps in one
+    scan, [W, T] row gather, matmul prefix sums, counter-hash PRNG).
+
+Also reports predict-only timings for both.  Writes BENCH_slda_predict.json
+(repo root by default) with the methodology embedded, so the perf
+trajectory of this hot path is recorded run over run.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_slda_predict [--scale 1.0]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SLDAConfig, run_weighted_average
+from repro.core import parallel as parallel_mod
+from repro.core.gibbs import init_state, phi_hat, zbar
+from repro.core.regression import solve_eta
+from repro.core.types import (Corpus, GibbsState, SLDAModel,
+                              counts_from_assignments)
+from repro.data import make_slda_corpus, train_test_split
+
+
+# --------------------------------------------------------- seed baseline
+# Verbatim reconstruction of the pre-fusion core/predict.py (seed commit),
+# kept here so the "before" column stays measurable after the rewrite.
+
+def _doc_predict_sweeps_seed(tokens, mask, key, z0, ndt0, log_phi, cfg):
+    T = cfg.n_topics
+    topic_iota = jnp.arange(T, dtype=jnp.int32)
+    n_sweeps = cfg.n_pred_burnin + cfg.n_pred_samples
+
+    def token_step(carry, inp):
+        ndt_d = carry
+        w, m, z_old, u = inp
+        old_onehot = (topic_iota == z_old).astype(jnp.float32) * m
+        ndt_d = ndt_d - old_onehot
+        logp = jnp.log(ndt_d + cfg.alpha) + log_phi[:, w]
+        p = jnp.exp(logp - jnp.max(logp))
+        c = jnp.cumsum(p)
+        z_new = jnp.sum((c < u * c[-1]).astype(jnp.int32))
+        z_new = jnp.where(m > 0, z_new, z_old).astype(jnp.int32)
+        ndt_d = ndt_d + (topic_iota == z_new).astype(jnp.float32) * m
+        return ndt_d, z_new
+
+    def sweep_step(carry, sweep_idx):
+        z, ndt_d = carry
+        us = jax.random.uniform(jax.random.fold_in(key, sweep_idx),
+                                tokens.shape)
+        ndt_d, z = jax.lax.scan(token_step, ndt_d, (tokens, mask, z, us))
+        return (z, ndt_d), ndt_d
+
+    (_, _), ndt_hist = jax.lax.scan(sweep_step, (z0, ndt0),
+                                    jnp.arange(n_sweeps))
+    keep = ndt_hist[cfg.n_pred_burnin:]
+    return jnp.mean(keep, axis=0)
+
+
+def predict_seed(key, model: SLDAModel, corpus: Corpus, cfg: SLDAConfig):
+    k_init, k_sweeps = jax.random.split(key)
+    z0 = jax.random.randint(k_init, corpus.tokens.shape, 0, cfg.n_topics,
+                            jnp.int32)
+    d_idx = jnp.arange(corpus.n_docs)[:, None]
+    ndt0 = jnp.zeros((corpus.n_docs, cfg.n_topics), jnp.float32)
+    ndt0 = ndt0.at[d_idx, z0].add(corpus.mask)
+    doc_keys = jax.random.split(k_sweeps, corpus.n_docs)
+    log_phi = jnp.log(model.phi)
+    ndt_avg = jax.vmap(
+        _doc_predict_sweeps_seed, in_axes=(0, 0, 0, 0, 0, None, None)
+    )(corpus.tokens, corpus.mask, doc_keys, z0, ndt0, log_phi, cfg)
+    zbar = ndt_avg / jnp.maximum(corpus.lengths(), 1.0)[:, None]
+    return zbar @ model.eta
+
+
+# Seed training loop: cumsum categorical in the sweep and a full
+# counts_from_assignments re-scatter every iteration (no incremental
+# deltas, no matmul prefix sums).
+
+def _doc_sweep_seed(tokens, mask, uniforms, z, ndt, y, inv_len,
+                    ntw, nt, eta, cfg, supervised):
+    T = cfg.n_topics
+    s0 = jnp.dot(ndt, eta)
+    topic_iota = jnp.arange(T, dtype=jnp.int32)
+
+    def step(carry, inp):
+        ndt_d, s = carry
+        w, m, z_old, u = inp
+        old_onehot = (topic_iota == z_old).astype(jnp.float32) * m
+        ndt_d = ndt_d - old_onehot
+        s = s - eta[z_old] * m
+        ntw_w = ntw[:, w] - old_onehot
+        nt_m = nt - old_onehot
+        logp = (jnp.log(ndt_d + cfg.alpha)
+                + jnp.log(ntw_w + cfg.beta)
+                - jnp.log(nt_m + cfg.vocab_size * cfg.beta))
+        if supervised:
+            mu_t = (s + eta) * inv_len
+            logp = logp - 0.5 * (y - mu_t) ** 2 / cfg.rho
+        p = jnp.exp(logp - jnp.max(logp))
+        c = jnp.cumsum(p)
+        z_new = jnp.sum((c < u * c[-1]).astype(jnp.int32))
+        z_new = jnp.where(m > 0, z_new, z_old).astype(jnp.int32)
+        new_onehot = (topic_iota == z_new).astype(jnp.float32) * m
+        ndt_d = ndt_d + new_onehot
+        s = s + eta[z_new] * m
+        return (ndt_d, s), z_new
+
+    (ndt, _), z_new = jax.lax.scan(step, (ndt, s0), (tokens, mask, z, uniforms))
+    return z_new, ndt
+
+
+def train_chain_seed(key, corpus: Corpus, cfg: SLDAConfig):
+    k_init, k_sweeps = jax.random.split(key)
+    state0 = init_state(k_init, corpus, cfg)
+    inv_len = 1.0 / jnp.maximum(corpus.lengths(), 1.0)
+
+    def em_step(state, k):
+        uniforms = jax.random.uniform(k, corpus.tokens.shape)
+        z, _ = jax.vmap(
+            _doc_sweep_seed,
+            in_axes=(0, 0, 0, 0, 0, 0, 0, None, None, None, None, None)
+        )(corpus.tokens, corpus.mask, uniforms, state.z, state.ndt,
+          corpus.y, inv_len, state.ntw, state.nt, state.eta, cfg, True)
+        ndt, ntw, nt = counts_from_assignments(
+            corpus.tokens, corpus.mask, z, cfg.n_topics, cfg.vocab_size)
+        state = GibbsState(z=z, ndt=ndt, ntw=ntw, nt=nt, eta=state.eta)
+        eta = solve_eta(zbar(state, corpus), corpus.y, cfg)
+        return GibbsState(state.z, state.ndt, state.ntw, state.nt, eta), None
+
+    state, _ = jax.lax.scan(em_step, state0,
+                            jax.random.split(k_sweeps, cfg.n_iters))
+    yhat_tr = zbar(state, corpus) @ state.eta
+    mse = jnp.mean((yhat_tr - corpus.y) ** 2)
+    acc = jnp.mean(((yhat_tr > 0.5) == (corpus.y > 0.5)).astype(jnp.float32))
+    model = SLDAModel(phi=phi_hat(state, cfg), eta=state.eta,
+                      train_mse=mse, train_acc=acc)
+    return state, model
+
+
+# ------------------------------------------------------------- harness
+
+def _timed(fn, *args, reps):
+    out = fn(*args)
+    jax.block_until_ready(out)          # warm-up (compile excluded)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps, out
+
+
+def _make_weighted_average(train_chain_fn, predict_fn):
+    """A run_weighted_average twin wired to explicit train/predict impls.
+
+    Distinct FUNCTION OBJECTS per implementation pair — monkey-patching
+    `parallel.predict` under `jax.jit` is unreliable because jit caches by
+    the identity of the underlying callable, so a patched retrace can
+    silently reuse the unpatched computation.
+    """
+    from repro.core import combine
+
+    def wa(key, train: Corpus, test: Corpus, cfg: SLDAConfig, m: int):
+        k1, k2, k3 = jax.random.split(key, 3)
+        shards = parallel_mod.partition(train, m)
+        keys = jax.random.split(k1, m)
+        _, models = jax.vmap(train_chain_fn,
+                             in_axes=(0, 0, None))(keys, shards, cfg)
+        pred = jax.vmap(predict_fn, in_axes=(0, 0, None, None))
+        yhat_te = pred(jax.random.split(k2, m), models, test, cfg)
+        yhat_tr = pred(jax.random.split(k3, m), models, train, cfg)
+        mse = ((yhat_tr - train.y[None, :]) ** 2).mean(-1)
+        return combine.weighted_average(yhat_te, train_mse=mse)
+
+    return wa
+
+
+def run(scale: float = 1.0, reps: int = 3):
+    """Returns the result dict (also what lands in the JSON)."""
+    d_total = max(int(640 * scale), 64)
+    cfg = SLDAConfig(n_topics=32, vocab_size=1000, n_iters=30, rho=0.25)
+    m = 8   # the paper's regime: many communication-free chains, every one
+            # of which predicts the full train set for the Eq. (9) weights
+    # partition() needs d_train divisible by the chain count at any --scale
+    d_train = max(int(d_total * 0.8) // m * m, m)
+    corpus, _ = make_slda_corpus(jax.random.PRNGKey(0), d_total, 1000, 32,
+                                 64, rho=0.25)
+    train, test = train_test_split(corpus, d_train)
+    key = jax.random.PRNGKey(7)
+
+    results = {}
+
+    # predict-only: one trained-shape model over the full training corpus
+    phi = jax.random.dirichlet(jax.random.PRNGKey(1),
+                               jnp.full((1000,), 0.01), (32,))
+    model = SLDAModel(phi=phi,
+                      eta=jax.random.normal(jax.random.PRNGKey(2), (32,)),
+                      train_mse=jnp.zeros(()), train_acc=jnp.zeros(()))
+    from repro.core.predict import predict as predict_fused
+    for name, fn in (("seed", predict_seed), ("fused", predict_fused)):
+        f = jax.jit(fn, static_argnums=(3,))
+        s, _ = _timed(f, key, model, train, cfg, reps=reps)
+        results[f"predict_only_{name}_s"] = round(s, 4)
+
+    # end-to-end weighted average (train + test & full-train prediction):
+    # the seed row uses BOTH halves of the seed hot path — the pre-fusion
+    # predict and the cumsum/full-rebuild training sweep
+    from repro.core.gibbs import train_chain as train_chain_cur
+    wa_seed = jax.jit(_make_weighted_average(train_chain_seed, predict_seed),
+                      static_argnums=(3, 4))
+    wa_new = jax.jit(_make_weighted_average(train_chain_cur, predict_fused),
+                     static_argnums=(3, 4))
+    s, y_seed = _timed(wa_seed, key, train, test, cfg, m, reps=reps)
+    results["weighted_average_seed_s"] = round(s, 4)
+    s, y_new = _timed(wa_new, key, train, test, cfg, m, reps=reps)
+    results["weighted_average_fused_s"] = round(s, 4)
+    # cross-check: the public entry point matches the fused twin's timing
+    s, _ = _timed(jax.jit(run_weighted_average, static_argnums=(3, 4)),
+                  key, train, test, cfg, m, reps=reps)
+    results["weighted_average_public_entry_s"] = round(s, 4)
+
+    results["weighted_average_speedup"] = round(
+        results["weighted_average_seed_s"]
+        / results["weighted_average_fused_s"], 2)
+    results["predict_only_speedup"] = round(
+        results["predict_only_seed_s"] / results["predict_only_fused_s"], 2)
+    results["test_mse_seed"] = round(float(jnp.mean((y_seed - test.y) ** 2)), 4)
+    results["test_mse_fused"] = round(float(jnp.mean((y_new - test.y) ** 2)), 4)
+    return {
+        "benchmark": "slda_predict fused multi-sweep path (ISSUE 1)",
+        "methodology": (
+            f"run_weighted_average (train {cfg.n_iters} EM iters on {m} "
+            "chains, then every chain predicts test + FULL train set, "
+            "15 burn-in + 10 sample sweeps) on a synthetic sLDA corpus "
+            f"[D={d_total} (train {d_train}), W=1000, T=32, N=64]; the seed "
+            "row wires the algorithm to reconstructed seed implementations "
+            "(per-doc vmap predict with threefry uniforms + "
+            "cumsum-categorical training sweep with a full count re-scatter "
+            "per iteration), the fused row to the current code, as distinct "
+            "function objects (no monkey-patching: jit caches by callable "
+            "identity); both jit-compiled, warm-up excluded, mean of "
+            f"{reps} reps; jnp fast path (use_pallas=False) on "
+            f"{jax.default_backend()}."),
+        "platform": {"backend": jax.default_backend(),
+                     "machine": platform.machine(),
+                     "jax": jax.__version__},
+        "shapes": {"d_total": d_total, "d_train": d_train, "vocab": 1000,
+                   "n_topics": 32, "doc_len": 64, "chains": m,
+                   "n_iters": cfg.n_iters,
+                   "pred_sweeps": cfg.n_pred_burnin + cfg.n_pred_samples},
+        "results": results,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="corpus-size multiplier (1.0 ≈ 1 min on CPU)")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_slda_predict.json")
+    args = ap.parse_args(argv)
+    payload = run(scale=args.scale, reps=args.reps)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    r = payload["results"]
+    print(f"weighted-average: seed {r['weighted_average_seed_s']}s → fused "
+          f"{r['weighted_average_fused_s']}s "
+          f"({r['weighted_average_speedup']}x); predict-only "
+          f"{r['predict_only_speedup']}x; wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

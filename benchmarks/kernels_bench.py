@@ -11,7 +11,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import SLDAConfig, init_state
+from repro.core import SLDAConfig, init_state, phi_hat
 from repro.data import make_slda_corpus
 from repro.kernels import ops
 
@@ -43,6 +43,33 @@ def run():
     sweep_jnp = jax.jit(lambda *a: ops.slda_gibbs_sweep(
         *a, alpha=cfg.alpha, beta=cfg.beta, rho=cfg.rho, use_pallas=False))
     rows.append(("slda_gibbs_sweep_jnp_64x64", _time(sweep_jnp, *args), ""))
+
+    # slda prediction sweeps — fused jnp fast path vs the seed-style
+    # per-document vmap (all 25 test-time sweeps, the Weighted Average
+    # hot path; see bench_slda_predict.py for the end-to-end numbers)
+    n_burnin, n_samples = cfg.n_pred_burnin, cfg.n_pred_samples
+    phi = phi_hat(state, cfg)                       # smoothed φ̂, Eq. (3)
+    seeds = jax.random.randint(ks[3], (corpus.n_docs,), 0, 2 ** 31 - 1,
+                               jnp.int32)
+    pred_fused = jax.jit(lambda *a: ops.slda_predict_sweeps(
+        *a, alpha=cfg.alpha, n_burnin=n_burnin, n_samples=n_samples,
+        use_pallas=False))
+    pargs = (corpus.tokens, corpus.mask, state.z, state.ndt, phi, seeds)
+    us_fused = _time(pred_fused, *pargs)
+    rows.append((f"slda_predict_{n_burnin + n_samples}sweeps_fused_jnp_64x64",
+                 us_fused, ""))
+
+    # the one canonical reconstruction of the seed sampler lives in
+    # bench_slda_predict — one baseline, two reports
+    from .bench_slda_predict import _doc_predict_sweeps_seed
+    log_phi = jnp.log(phi)
+    pred_seed = jax.jit(lambda t, m, z, n: jax.vmap(
+        _doc_predict_sweeps_seed, in_axes=(0, 0, 0, 0, 0, None, None))(
+            t, m, jax.random.split(ks[4], corpus.n_docs), z, n,
+            log_phi, cfg))
+    us_seed = _time(pred_seed, corpus.tokens, corpus.mask, state.z, state.ndt)
+    rows.append((f"slda_predict_{n_burnin + n_samples}sweeps_seed_vmap_64x64",
+                 us_seed, f"fused_speedup={us_seed / us_fused:.2f}x"))
 
     # attention: blocked jnp (train path)
     q = jax.random.normal(ks[3], (2, 8, 512, 64), jnp.float32)

@@ -3,6 +3,7 @@
   fig6  MD&A (continuous y): 4 algorithms × (time, test MSE)     [Fig. 6]
   fig7  IMDB (binary y): 4 algorithms × (time, test accuracy)    [Fig. 7]
   kernels  per-kernel µs/call
+  slda_predict  fused-prediction before/after → BENCH_slda_predict.json
   roofline  aggregated dry-run roofline table (if artifacts exist)
 
 Prints ``name,us_per_call,derived`` CSV rows plus per-figure detail.
@@ -19,7 +20,8 @@ def main(argv=None):
     ap.add_argument("--full", action="store_true",
                     help="paper-scale corpora (slow on CPU)")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig6,fig7,kernels,roofline")
+                    help="comma list: fig6,fig7,kernels,roofline; opt-in "
+                         "extras: ablation,slda_predict")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
@@ -47,6 +49,16 @@ def main(argv=None):
         from . import kernels_bench
         for r in kernels_bench.run():
             print(f"kernel_{r['name']},{r['us_per_call']},{r['derived']}")
+    if only is not None and "slda_predict" in only:
+        # end-to-end before/after for the fused prediction path (slow —
+        # trains 8 chains twice; opt-in).  `python -m
+        # benchmarks.bench_slda_predict` writes the JSON artifact.
+        from . import bench_slda_predict
+        payload = bench_slda_predict.run(scale=1.0 if args.full else 0.25)
+        r = payload["results"]
+        for k in ("weighted_average_seed_s", "weighted_average_fused_s"):
+            print(f"slda_predict_{k},{r[k] * 1e6:.0f},"
+                  f"speedup={r['weighted_average_speedup']}x")
     if only is None or "roofline" in only:
         try:
             from . import roofline

@@ -1,5 +1,6 @@
 """Paper core: communication-free embarrassingly parallel MCMC for sLDA."""
-from .types import Corpus, GibbsState, SLDAConfig, SLDAModel, counts_from_assignments
+from .types import (Corpus, GibbsState, SLDAConfig, SLDAModel,
+                    apply_count_deltas, counts_from_assignments)
 from .gibbs import init_state, sweep, train_chain, zbar, phi_hat
 from .regression import solve_eta, solve_eta_ols
 from .predict import predict
@@ -9,7 +10,8 @@ from .parallel import (ALGORITHMS, partition, train_chains, predict_chains,
                        run_weighted_average)
 
 __all__ = [
-    "Corpus", "GibbsState", "SLDAConfig", "SLDAModel", "counts_from_assignments",
+    "Corpus", "GibbsState", "SLDAConfig", "SLDAModel",
+    "apply_count_deltas", "counts_from_assignments",
     "init_state", "sweep", "train_chain", "zbar", "phi_hat",
     "solve_eta", "solve_eta_ols", "predict",
     "simple_average", "weighted_average", "median", "COMBINERS",

@@ -19,7 +19,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .types import Corpus, GibbsState, SLDAConfig, SLDAModel, counts_from_assignments
+from repro.mathutil import upper_tri_ones
+from .types import (Corpus, GibbsState, SLDAConfig, SLDAModel,
+                    apply_count_deltas, counts_from_assignments)
 from .regression import solve_eta
 
 
@@ -43,6 +45,9 @@ def _doc_sweep(tokens, mask, uniforms, z, ndt, y, inv_len,
     T = cfg.n_topics
     s0 = jnp.dot(ndt, eta)            # running  Σ_t η_t N_dt  statistic
     topic_iota = jnp.arange(T, dtype=jnp.int32)
+    # prefix-sum-as-matmul: one gemm instead of a fusion-breaking cumsum,
+    # the same contraction as the Pallas kernel
+    tri_u = upper_tri_ones(T)
 
     def step(carry, inp):
         ndt_d, s = carry
@@ -63,7 +68,7 @@ def _doc_sweep(tokens, mask, uniforms, z, ndt, y, inv_len,
 
         # categorical sample from the given uniform (branch-free inverse-CDF)
         p = jnp.exp(logp - jnp.max(logp))
-        c = jnp.cumsum(p)
+        c = jnp.dot(p, tri_u)
         z_new = jnp.sum((c < u * c[-1]).astype(jnp.int32))
         z_new = jnp.where(m > 0, z_new, z_old).astype(jnp.int32)
 
@@ -77,24 +82,46 @@ def _doc_sweep(tokens, mask, uniforms, z, ndt, y, inv_len,
 
 
 def sweep(key: jax.Array, corpus: Corpus, state: GibbsState,
-          cfg: SLDAConfig, supervised: bool = True) -> GibbsState:
-    """One document-parallel sweep + exact count refresh."""
+          cfg: SLDAConfig, supervised: bool = True,
+          exact_rebuild=True) -> GibbsState:
+    """One document-parallel sweep + count refresh.
+
+    The per-document sweep already maintains `ndt` exactly, so it is taken
+    from the sweep output directly.  The global tables refresh two ways:
+    `exact_rebuild=True` re-scatters ntw/nt from scratch (seed behaviour,
+    and the periodic drift bound); `False` applies the exact (z_old, z_new)
+    delta updates only.  A traced bool selects at runtime via `lax.cond`
+    (train_chain drives this with `cfg.count_rebuild_every`).
+    """
     uniforms = jax.random.uniform(key, corpus.tokens.shape)
     inv_len = 1.0 / jnp.maximum(corpus.lengths(), 1.0)
     if cfg.use_pallas:
         from repro.kernels import ops  # local import: kernels are optional
-        z, _ = ops.slda_gibbs_sweep(
+        z, ndt = ops.slda_gibbs_sweep(
             corpus.tokens, corpus.mask, uniforms, state.z, state.ndt,
             corpus.y, inv_len, state.ntw, state.nt, state.eta,
             alpha=cfg.alpha, beta=cfg.beta, rho=cfg.rho, supervised=supervised)
     else:
-        z, _ = jax.vmap(
+        z, ndt = jax.vmap(
             _doc_sweep,
             in_axes=(0, 0, 0, 0, 0, 0, 0, None, None, None, None, None)
         )(corpus.tokens, corpus.mask, uniforms, state.z, state.ndt,
           corpus.y, inv_len, state.ntw, state.nt, state.eta, cfg, supervised)
-    ndt, ntw, nt = counts_from_assignments(
-        corpus.tokens, corpus.mask, z, cfg.n_topics, cfg.vocab_size)
+
+    def rebuild():
+        ndt_r, ntw, nt = counts_from_assignments(
+            corpus.tokens, corpus.mask, z, cfg.n_topics, cfg.vocab_size)
+        return ndt_r, ntw, nt
+
+    def incremental():
+        ntw, nt = apply_count_deltas(state.ntw, state.nt, corpus.tokens,
+                                     corpus.mask, state.z, z)
+        return ndt, ntw, nt
+
+    if isinstance(exact_rebuild, bool):
+        ndt, ntw, nt = rebuild() if exact_rebuild else incremental()
+    else:
+        ndt, ntw, nt = jax.lax.cond(exact_rebuild, rebuild, incremental)
     return GibbsState(z=z, ndt=ndt, ntw=ntw, nt=nt, eta=state.eta)
 
 
@@ -116,13 +143,20 @@ def train_chain(key: jax.Array, corpus: Corpus, cfg: SLDAConfig) -> tuple[GibbsS
     """
     k_init, k_sweeps = jax.random.split(key)
     state0 = init_state(k_init, corpus, cfg)
+    every = cfg.count_rebuild_every
 
-    def em_step(state, k):
-        state = sweep(k, corpus, state, cfg, supervised=True)
+    def em_step(state, inp):
+        k, it = inp
+        # incremental delta refresh between periodic exact rebuilds
+        rebuild = (it % every == 0) if every > 0 else False
+        state = sweep(k, corpus, state, cfg, supervised=True,
+                      exact_rebuild=rebuild)
         eta = solve_eta(zbar(state, corpus), corpus.y, cfg)
         return GibbsState(state.z, state.ndt, state.ntw, state.nt, eta), None
 
-    state, _ = jax.lax.scan(em_step, state0, jax.random.split(k_sweeps, cfg.n_iters))
+    state, _ = jax.lax.scan(
+        em_step, state0, (jax.random.split(k_sweeps, cfg.n_iters),
+                          jnp.arange(cfg.n_iters)))
 
     yhat_tr = zbar(state, corpus) @ state.eta
     mse = jnp.mean((yhat_tr - corpus.y) ** 2)

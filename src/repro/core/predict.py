@@ -12,6 +12,14 @@ documents under
 
 (averaging over samples follows Nguyen et al. 2014, which the paper builds
 its MCMC procedure on).
+
+All sweeps run through the fused multi-sweep path in
+`kernels.ops.slda_predict_sweeps` (DESIGN.md §Predict-kernel): one launch
+per document block, φ̂ row-gathered from the transposed [W, T] layout, and
+per-token uniforms derived from a counter-based hash of a per-document
+seed — precomputing [D, n_sweeps, N] uniforms up front is a multi-GB
+allocation at the paper's corpus sizes (found the hard way: the
+paper-scale Fig. 6 run OOMed).
 """
 from __future__ import annotations
 
@@ -21,59 +29,28 @@ import jax.numpy as jnp
 from .types import Corpus, SLDAConfig, SLDAModel
 
 
-def _doc_predict_sweeps(tokens, mask, key, z0, ndt0, log_phi, cfg: SLDAConfig):
-    """All prediction sweeps for one document; ndt is exact per token, φ̂ is
-    fixed so there is no cross-document state at all.
-
-    Uniforms are derived per sweep from a folded key INSIDE the scan —
-    precomputing [D, n_sweeps, N] uniforms up front is a multi-GB
-    allocation at the paper's corpus sizes (found the hard way: the
-    paper-scale Fig. 6 run OOMed)."""
-    T = cfg.n_topics
-    topic_iota = jnp.arange(T, dtype=jnp.int32)
-    n_sweeps = cfg.n_pred_burnin + cfg.n_pred_samples
-
-    def token_step(carry, inp):
-        ndt_d = carry
-        w, m, z_old, u = inp
-        old_onehot = (topic_iota == z_old).astype(jnp.float32) * m
-        ndt_d = ndt_d - old_onehot
-        logp = jnp.log(ndt_d + cfg.alpha) + log_phi[:, w]
-        p = jnp.exp(logp - jnp.max(logp))
-        c = jnp.cumsum(p)
-        z_new = jnp.sum((c < u * c[-1]).astype(jnp.int32))
-        z_new = jnp.where(m > 0, z_new, z_old).astype(jnp.int32)
-        ndt_d = ndt_d + (topic_iota == z_new).astype(jnp.float32) * m
-        return ndt_d, z_new
-
-    def sweep_step(carry, sweep_idx):
-        z, ndt_d = carry
-        us = jax.random.uniform(jax.random.fold_in(key, sweep_idx),
-                                tokens.shape)
-        ndt_d, z = jax.lax.scan(token_step, ndt_d, (tokens, mask, z, us))
-        return (z, ndt_d), ndt_d
-
-    (_, _), ndt_hist = jax.lax.scan(sweep_step, (z0, ndt0),
-                                    jnp.arange(n_sweeps))
-    # average z̄ over the post-burn-in sweeps
-    keep = ndt_hist[cfg.n_pred_burnin:]
-    return jnp.mean(keep, axis=0)
-
-
 def predict(key: jax.Array, model: SLDAModel, corpus: Corpus,
             cfg: SLDAConfig) -> jax.Array:
     """ŷ for every document in `corpus` under `model`. jit-able, local."""
-    k_init, k_sweeps = jax.random.split(key)
-    z0 = jax.random.randint(k_init, corpus.tokens.shape, 0, cfg.n_topics, jnp.int32)
+    # local import keeps the kernels package off core's module-import
+    # path; unlike the training sweep, BOTH predict routes (pallas and
+    # the batched-jnp fast path) live behind kernels.ops (DESIGN.md §1)
+    from repro.kernels import ops
+
+    k_init, k_seeds = jax.random.split(key)
+    z0 = jax.random.randint(k_init, corpus.tokens.shape, 0, cfg.n_topics,
+                            jnp.int32)
     d_idx = jnp.arange(corpus.n_docs)[:, None]
     ndt0 = jnp.zeros((corpus.n_docs, cfg.n_topics), jnp.float32)
     ndt0 = ndt0.at[d_idx, z0].add(corpus.mask)
-    doc_keys = jax.random.split(k_sweeps, corpus.n_docs)
+    seeds = jax.random.randint(k_seeds, (corpus.n_docs,), 0,
+                               jnp.iinfo(jnp.int32).max, jnp.int32)
 
-    log_phi = jnp.log(model.phi)
-    ndt_avg = jax.vmap(
-        _doc_predict_sweeps, in_axes=(0, 0, 0, 0, 0, None, None)
-    )(corpus.tokens, corpus.mask, doc_keys, z0, ndt0, log_phi, cfg)
+    ndt_avg, _ = ops.slda_predict_sweeps(
+        corpus.tokens, corpus.mask, z0, ndt0, model.phi, seeds,
+        alpha=cfg.alpha, n_burnin=cfg.n_pred_burnin,
+        n_samples=cfg.n_pred_samples, doc_block=cfg.pred_doc_block,
+        use_pallas=cfg.use_pallas)
 
     zbar = ndt_avg / jnp.maximum(corpus.lengths(), 1.0)[:, None]
     return zbar @ model.eta          # Eq. (5)

@@ -44,7 +44,15 @@ class SLDAConfig:
     n_iters: int = 60        # stochastic-EM iterations (Gibbs sweep + η solve)
     n_pred_burnin: int = 15  # test-time Gibbs burn-in sweeps
     n_pred_samples: int = 10 # test-time sweeps averaged for z̄
-    use_pallas: bool = False # route sweeps through the slda_gibbs TPU kernel
+    use_pallas: bool = False # route sweeps through the slda TPU kernels
+    pred_doc_block: int = 8  # doc block of the fused prediction kernel
+    count_rebuild_every: int = 16  # exact ntw/nt rebuild cadence during
+                             # training: iterations in between apply exact
+                             # (z_old, z_new) delta updates instead of the
+                             # full scatter; the periodic rebuild bounds
+                             # float32 accumulation drift.  0 = never
+                             # rebuild, 1 = rebuild every sweep (seed
+                             # behaviour).
 
 
 @_pytree
@@ -110,3 +118,21 @@ def counts_from_assignments(tokens: Array, mask: Array, z: Array,
     ntw = jnp.zeros((n_topics, vocab_size), jnp.float32)
     ntw = ntw.at[z, tokens].add(mask)
     return ndt, ntw, jnp.sum(ntw, axis=-1)
+
+
+def apply_count_deltas(ntw: Array, nt: Array, tokens: Array, mask: Array,
+                       z_old: Array, z_new: Array):
+    """Exact incremental (ntw, nt) refresh from one sweep's reassignments.
+
+    Only tokens whose topic actually changed carry weight, so the scatter
+    moves ±1 for the (typically small, late in sampling) changed set and
+    leaves everything else untouched — the delta form of the AD-LDA count
+    refresh (cf. Magnusson et al., sparse partially collapsed samplers).
+    Counts stay exact: ±1.0 float32 updates are lossless below 2^24, and
+    `SLDAConfig.count_rebuild_every` bounds drift beyond that.
+    """
+    changed = mask * (z_new != z_old).astype(mask.dtype)
+    ntw = ntw.at[z_old, tokens].add(-changed).at[z_new, tokens].add(changed)
+    nt = (nt + jnp.zeros_like(nt).at[z_new].add(changed)
+          - jnp.zeros_like(nt).at[z_old].add(changed))
+    return ntw, nt

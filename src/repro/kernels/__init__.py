@@ -2,6 +2,8 @@
 
   slda_gibbs      — the paper's hot loop: document-blocked collapsed-Gibbs
                     sweep, topic dim on lanes, doc block on sublanes
+  slda_predict    — fused multi-sweep test-time sampler: all prediction
+                    sweeps in one launch, counter-hash in-kernel PRNG
   flash_attention — blocked causal attention with native GQA index maps
   ssd_scan        — Mamba-2 chunked state-space scan (state in VMEM scratch)
   rmsnorm         — fused row-blocked RMSNorm

@@ -16,6 +16,8 @@ from . import ref
 from .flash_attention import flash_attention
 from .rmsnorm import rmsnorm as _rmsnorm_kernel
 from .slda_gibbs import slda_gibbs_sweep_pallas
+from .slda_predict import (slda_predict_sweeps_jnp,
+                           slda_predict_sweeps_pallas)
 from .ssd_scan import ssd_scan, ssd_decode_step  # noqa: F401 (re-export)
 
 
@@ -71,6 +73,43 @@ def slda_gibbs_sweep(tokens, mask, uniforms, z, ndt, y, inv_len, ntw, nt,
     if pad:
         z2, ndt2 = z2[:D], ndt2[:D]
     return z2, ndt2
+
+
+# ----------------------------------------------------------- slda predict
+
+def slda_predict_sweeps(tokens, mask, z0, ndt0, phi, seeds, *, alpha,
+                        n_burnin, n_samples, doc_block=8, use_pallas=True,
+                        tpu_prng=False):
+    """All `n_burnin + n_samples` test-time Gibbs sweeps in one fused pass.
+
+    phi: [T, W] (un-transposed — the row-gather [W, T] layout is an
+    internal kernel detail); seeds: int32 [D] per-document PRNG seeds.
+    Returns (ndt_avg [D, T], z_final [D, N]).
+
+    use_pallas=False routes to the batched-jnp fast path, which is
+    bit-identical to the interpret-mode kernel (shared counter-hash PRNG
+    and op order).  tpu_prng=True uses the native TPU PRNG inside the
+    compiled kernel (faster on hardware; one stream per doc block, so the
+    per-document seeds are honored only by the hash path, and results are
+    not reproducible against it).
+    """
+    phi_t = phi.T
+    kw = dict(alpha=alpha, n_burnin=n_burnin, n_samples=n_samples)
+    if not use_pallas:
+        return slda_predict_sweeps_jnp(tokens, mask, seeds, z0, ndt0,
+                                       phi_t, **kw)
+    D = tokens.shape[0]
+    pad = (-D) % doc_block
+    if pad:
+        pad2 = lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+        tokens, mask, z0, ndt0, seeds = map(pad2,
+                                            (tokens, mask, z0, ndt0, seeds))
+    ndt_avg, z_final = slda_predict_sweeps_pallas(
+        tokens, mask, seeds, z0, ndt0, phi_t, doc_block=doc_block,
+        interpret=_interpret(), tpu_prng=tpu_prng, **kw)
+    if pad:
+        ndt_avg, z_final = ndt_avg[:D], z_final[:D]
+    return ndt_avg, z_final
 
 
 # -------------------------------------------------------------- attention

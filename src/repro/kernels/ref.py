@@ -8,6 +8,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.mathutil import upper_tri_ones
 
 
 # ------------------------------------------------------------- slda_gibbs
@@ -24,6 +27,7 @@ def ref_slda_gibbs_sweep(tokens, mask, uniforms, z, ndt, y, inv_len,
     T = ndt.shape[-1]
     W = ntw_t.shape[0]
     topic_iota = jnp.arange(T, dtype=jnp.int32)
+    tri_u = upper_tri_ones(T)
 
     def doc(tokens_d, mask_d, us_d, z_d, ndt_d, y_d, il_d):
         s0 = jnp.dot(ndt_d, eta)
@@ -41,7 +45,7 @@ def ref_slda_gibbs_sweep(tokens, mask, uniforms, z, ndt, y, inv_len,
                 mu_t = (s + eta) * il_d
                 logp = logp - 0.5 * (y_d - mu_t) ** 2 / rho
             p = jnp.exp(logp - jnp.max(logp))
-            c = jnp.cumsum(p)
+            c = jnp.dot(p, tri_u)    # prefix sums, rounding-matched to kernel
             z_new = jnp.sum((c < u * c[-1]).astype(jnp.int32))
             z_new = jnp.where(m > 0, z_new, z_old).astype(jnp.int32)
             new = (topic_iota == z_new).astype(jnp.float32) * m
@@ -52,6 +56,58 @@ def ref_slda_gibbs_sweep(tokens, mask, uniforms, z, ndt, y, inv_len,
         return z_new, ndt_d
 
     return jax.vmap(doc)(tokens, mask, uniforms, z, ndt, y, inv_len)
+
+
+# ----------------------------------------------------------- slda_predict
+
+def ref_slda_predict_sweeps(tokens, mask, uniforms, z0, ndt0, phi_t,
+                            alpha, n_burnin: int):
+    """Fused prediction-sweep oracle with EXPLICIT uniforms.
+
+    tokens/mask/z0 : [D, N]; uniforms [D, S, N] (S = burnin + samples);
+    ndt0 [D, T]; phi_t [W, T] (row-gather layout).
+    Runs all S unsupervised test-time sweeps per document under frozen φ̂,
+        p(z=t | ·) ∝ (N_dt^{-dn} + α) · φ̂_{t,w}
+    and returns (ndt_avg [D, T], z_final [D, N]) where ndt_avg is the mean
+    doc-topic count over the post-burn-in sweeps.  The kernel and the
+    batched-jnp fast path derive the uniforms from a counter hash
+    (slda_predict.predict_uniforms materializes the same tensor for tests).
+    """
+    T = ndt0.shape[-1]
+    S = uniforms.shape[1]
+    n_samples = S - n_burnin
+    topic_iota = jnp.arange(T, dtype=jnp.int32)
+    tri_u = upper_tri_ones(T)
+
+    def doc(tokens_d, mask_d, us_d, z_d, ndt_d):
+        def token_step(ndt_d, inp):
+            w, m, z_old, u = inp
+            old = (topic_iota == z_old).astype(jnp.float32) * m
+            ndt_d = ndt_d - old
+            p = (ndt_d + alpha) * phi_t[w]
+            # prefix sums as the same upper-triangular contraction the
+            # kernel uses, so the comparison below rounds identically
+            c = jnp.dot(p, tri_u)
+            z_new = jnp.sum((c < u * c[-1]).astype(jnp.int32))
+            z_new = jnp.where(m > 0, z_new, z_old).astype(jnp.int32)
+            ndt_d = ndt_d + (topic_iota == z_new).astype(jnp.float32) * m
+            return ndt_d, z_new
+
+        def sweep_step(carry, inp):
+            z_d, ndt_d, acc = carry
+            s, us_s = inp
+            ndt_d, z_d = jax.lax.scan(token_step, ndt_d,
+                                      (tokens_d, mask_d, z_d, us_s))
+            keep = (s >= n_burnin).astype(jnp.float32)
+            return (z_d, ndt_d, acc + keep * ndt_d), None
+
+        (z_d, _, acc), _ = jax.lax.scan(
+            sweep_step, (z_d, ndt_d, jnp.zeros_like(ndt_d)),
+            (jnp.arange(S, dtype=jnp.int32), us_d))
+        # f32 reciprocal multiply, matching the fused kernel bit-for-bit
+        return acc * np.float32(1.0 / n_samples), z_d
+
+    return jax.vmap(doc)(tokens, mask, uniforms, z0, ndt0)
 
 
 # -------------------------------------------------------- flash_attention

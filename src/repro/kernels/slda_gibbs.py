@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.mathutil import upper_tri_ones
+
 
 def _gibbs_kernel(tokens_ref, mask_ref, unif_ref, z_ref, ndt_ref,
                   y_ref, invlen_ref, ntw_t_ref, nt_ref, eta_ref,
@@ -37,6 +39,7 @@ def _gibbs_kernel(tokens_ref, mask_ref, unif_ref, z_ref, ndt_ref,
     inv_len = invlen_ref[:, 0]                # [DB]
     T = eta.shape[0]
     topic_iota = jax.lax.broadcasted_iota(jnp.int32, (1, T), 1)
+    tri_u = upper_tri_ones(T)   # prefix-sum-as-matmul (see slda_predict.py)
 
     ndt0 = ndt_ref[...]                       # [DB, T]
     s0 = ndt0 @ eta                           # [DB]  running Σ_t η_t N_dt
@@ -61,7 +64,7 @@ def _gibbs_kernel(tokens_ref, mask_ref, unif_ref, z_ref, ndt_ref,
             logp = logp - 0.5 * (y[:, None] - mu_t) ** 2 / rho
 
         p = jnp.exp(logp - jnp.max(logp, axis=1, keepdims=True))
-        c = jnp.cumsum(p, axis=1)
+        c = jnp.dot(p, tri_u)
         z_new = jnp.sum((c < (u * c[:, -1])[:, None]).astype(jnp.int32), axis=1)
         z_new = jnp.where(m > 0, z_new, z_old).astype(jnp.int32)
 

@@ -1,0 +1,253 @@
+"""Pallas TPU kernel for the sLDA *prediction* sweeps — the true hot path.
+
+The paper's slowest variant (Weighted Average, Section III-C(d)) spends its
+time predicting: every chain must run `n_pred_burnin + n_pred_samples`
+test-time Gibbs sweeps over BOTH the test set and the full training set.
+The training kernel (slda_gibbs.py) launches once per sweep because the
+topic-word table must be refreshed globally between sweeps; prediction has
+no such barrier — φ̂ is frozen — so ALL sweeps for a document block fuse
+into ONE kernel launch here (DESIGN.md §Predict-kernel).
+
+Three things make the fused kernel cheap:
+
+  * layout — φ̂ is stored transposed, ``phi_t [W, T]``, resident in VMEM,
+    so the per-token access is a sublane-dim *row* gather (the same trick
+    as the train kernel's ``ntw_t``);
+  * no log/exp — prediction is unsupervised, p(z=t) ∝ (N_dt^{-dn}+α)·φ̂_tw,
+    a product of positives, so the categorical is sampled from the plain
+    product instead of a log-sum-exp (the Gaussian response term that
+    forces the train kernel into log space does not appear at test time);
+  * matmul prefix-sum — the inverse-CDF's cumulative sum is computed as
+    ``p @ U`` with U upper-triangular ones: one [DB, T]·[T, T] contraction
+    that lands on the MXU on TPU and on a single gemm call on XLA:CPU,
+    instead of a fusion-breaking `cumsum` + reduce pair per token (the
+    single biggest CPU win — the token loop is dispatch-bound, not
+    FLOP-bound);
+  * counter-based PRNG — per-token uniforms are derived in-kernel from a
+    murmur3-style mix of (doc_seed, sweep·N + n).  The seed path
+    pre-materialized a ``[D, n_sweeps, N]`` uniform tensor, a multi-GB
+    allocation at the paper's corpus sizes (it OOMed the Fig. 6 run).  On
+    real TPU hardware ``tpu_prng=True`` swaps in the native
+    ``pltpu.prng_random_bits`` generator — one hardware stream per doc
+    block, seeded from a murmur mix of the block's first per-document
+    seed and the grid index, so the per-DOCUMENT seed contract holds only
+    on the portable hash path (off by default; also not bit-reproducible
+    against the hash).
+
+Post-burn-in ``ndt`` averages are accumulated in-kernel, so the only
+outputs are ``ndt_avg [D, T]`` and the final assignments ``z [D, N]``.
+
+Grid: (D / doc_block,).  `ref.ref_slda_predict_sweeps` is the oracle;
+`slda_predict_sweeps_jnp` below is the bit-identical batched-jnp CPU fast
+path (the one the benchmarks measure on this container).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.mathutil import upper_tri_ones
+
+try:  # pltpu imports on CPU builds too; guard for exotic installs
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+# murmur3 finalizer constants (public domain, Austin Appleby)
+_MIX1 = np.uint32(0x85EBCA6B)
+_MIX2 = np.uint32(0xC2B2AE35)
+_GOLDEN = np.uint32(0x9E3779B9)
+_INV24 = np.float32(2.0 ** -24)
+
+
+def counter_uniform(seed, ctr):
+    """Counter-based uniform in [0, 1): murmur3-finalizer mix of (seed, ctr).
+
+    Pure elementwise integer ops — identical results inside a Pallas kernel
+    (interpret or compiled), under jit, and in plain numpy-style jnp, which
+    is what lets the kernel, the batched-jnp fast path, and the ref oracle
+    share uniforms bit-for-bit.  Broadcasts over both arguments.
+    """
+    x = jnp.asarray(seed).astype(jnp.uint32) ^ (
+        jnp.asarray(ctr).astype(jnp.uint32) * _GOLDEN)
+    x = (x ^ (x >> 16)) * _MIX1
+    x = (x ^ (x >> 13)) * _MIX2
+    x = x ^ (x >> 16)
+    # top 24 bits → f32 in [0, 1); strictly < 1 so inverse-CDF stays in range
+    return (x >> 8).astype(jnp.float32) * _INV24
+
+
+def predict_uniforms(seeds, n_sweeps: int, n_tokens: int):
+    """Materialize the full [D, n_sweeps, N] uniform tensor the kernel
+    derives on the fly — for feeding the ref oracle in equivalence tests.
+    (Never used in production: this allocation is exactly what the fused
+    kernel exists to avoid.)"""
+    ctr = (jnp.arange(n_sweeps, dtype=jnp.int32)[:, None] * n_tokens
+           + jnp.arange(n_tokens, dtype=jnp.int32)[None, :])
+    return counter_uniform(seeds[:, None, None], ctr[None])
+
+
+def _predict_kernel(tokens_ref, mask_ref, seed_ref, z_ref, ndt_ref, phi_t_ref,
+                    z_out_ref, avg_ref,
+                    *, alpha: float, n_burnin: int, n_samples: int,
+                    n_tokens: int, tpu_prng: bool):
+    phi_t = phi_t_ref[...]                    # [W, T] resident in VMEM
+    seeds = seed_ref[:, 0]                    # [DB]
+    T = phi_t.shape[1]
+    topic_iota = jax.lax.broadcasted_iota(jnp.int32, (1, T), 1)
+    tri_u = upper_tri_ones(T)
+
+    if tpu_prng:
+        # one hardware stream per DOC BLOCK (the per-core PRNG is stateful,
+        # so per-document seeds cannot be honored here — only the portable
+        # hash path keeps that contract).  Mix the block's first seed with
+        # the grid position through the murmur finalizer so that distinct
+        # blocks get structurally uncorrelated streams (a plain
+        # `seed + program_id` collides whenever s_i + i == s_j + j).
+        mixed = seed_ref[0, 0].astype(jnp.uint32) ^ (
+            pl.program_id(0).astype(jnp.uint32) * _GOLDEN)
+        mixed = (mixed ^ (mixed >> 16)) * _MIX1
+        mixed = (mixed ^ (mixed >> 13)) * _MIX2
+        pltpu.prng_seed((mixed ^ (mixed >> 16)).astype(jnp.int32))
+
+    z_out_ref[...] = z_ref[...]               # z persists across sweeps here
+    ndt0 = ndt_ref[...]                       # [DB, T]
+
+    def sweep_body(s, carry):
+        ndt, acc = carry
+
+        def token_step(n, ndt):
+            w = tokens_ref[:, n]              # [DB] int32 word ids
+            m = mask_ref[:, n]                # [DB]
+            z_old = z_out_ref[:, n]           # [DB]
+            if tpu_prng:
+                bits = pltpu.bitcast(
+                    pltpu.prng_random_bits(w.shape), jnp.uint32)
+                u = (bits >> 8).astype(jnp.float32) * _INV24
+            else:
+                u = counter_uniform(seeds, s * n_tokens + n)
+
+            old = (topic_iota == z_old[:, None]).astype(jnp.float32) * m[:, None]
+            ndt = ndt - old
+            p = (ndt + alpha) * jnp.take(phi_t, w, axis=0)      # row gather
+            c = jnp.dot(p, tri_u)                               # prefix sums
+            z_new = jnp.sum((c < (u * c[:, -1])[:, None]).astype(jnp.int32),
+                            axis=1)
+            z_new = jnp.where(m > 0, z_new, z_old).astype(jnp.int32)
+            ndt = ndt + (topic_iota == z_new[:, None]).astype(jnp.float32) \
+                * m[:, None]
+            z_out_ref[:, n] = z_new
+            return ndt
+
+        ndt = jax.lax.fori_loop(0, n_tokens, token_step, ndt)
+        keep = (s >= n_burnin).astype(jnp.float32)
+        return ndt, acc + keep * ndt
+
+    _, acc = jax.lax.fori_loop(0, n_burnin + n_samples, sweep_body,
+                               (ndt0, jnp.zeros_like(ndt0)))
+    # explicit f32 reciprocal multiply: a literal `acc / n` is rewritten to
+    # divide-or-reciprocal at XLA's whim, which costs 1 ulp of cross-path
+    # reproducibility when n is not a power of two
+    avg_ref[...] = acc * np.float32(1.0 / n_samples)
+
+
+def slda_predict_sweeps_pallas(tokens, mask, seeds, z0, ndt0, phi_t, *,
+                               alpha, n_burnin, n_samples, doc_block=8,
+                               interpret=True, tpu_prng=False):
+    """All prediction sweeps for every document in ONE launch per doc block.
+
+    tokens/mask/z0: [D, N]; seeds: int32 [D]; ndt0: [D, T]; phi_t: [W, T].
+    Returns (ndt_avg [D, T], z_final [D, N]).  D must be a multiple of
+    doc_block (ops.py pads).
+    """
+    D, N = tokens.shape
+    T = ndt0.shape[-1]
+    W = phi_t.shape[0]
+    assert D % doc_block == 0, (D, doc_block)
+    grid = (D // doc_block,)
+
+    doc_spec = lambda cols: pl.BlockSpec((doc_block, cols), lambda i: (i, 0))
+    full = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+
+    kernel = functools.partial(
+        _predict_kernel, alpha=float(alpha), n_burnin=int(n_burnin),
+        n_samples=int(n_samples), n_tokens=N, tpu_prng=tpu_prng)
+
+    z_final, ndt_avg = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[doc_spec(N), doc_spec(N), doc_spec(1),
+                  doc_spec(N), doc_spec(T), full((W, T))],
+        out_specs=[doc_spec(N), doc_spec(T)],
+        out_shape=[jax.ShapeDtypeStruct((D, N), jnp.int32),
+                   jax.ShapeDtypeStruct((D, T), jnp.float32)],
+        interpret=interpret,
+    )(tokens, mask, seeds[:, None], z0, ndt0, phi_t)
+    return ndt_avg, z_final
+
+
+def slda_predict_sweeps_jnp(tokens, mask, seeds, z0, ndt0, phi_t, *,
+                            alpha, n_burnin, n_samples, unroll=8):
+    """Batched-jnp twin of the fused kernel — the CPU fast path.
+
+    Same restructuring as the kernel, expressed as XLA-friendly jnp: all D
+    documents advance in lockstep (one [D, T] vector op per token instead
+    of a vmap of per-document scans), φ̂ is row-gathered from the
+    transposed [W, T] layout, prefix sums are the same `p @ U` contraction,
+    all sweeps fuse into one `lax.scan` (unrolled ×8: the token loop is
+    dispatch-bound on CPU), and the uniforms come from the same counter
+    hash — so no [D, S, N] tensor, no per-sweep threefry, no log/exp.
+    Bit-identical to the interpret-mode kernel (shared op order + PRNG).
+
+    For small topic counts (T ≤ 16, where the gemm no longer dominates,
+    and only while the gathered [N, D, T] tensor stays under 64 MB) the
+    φ̂ row gather is additionally hoisted out of the sweep loop so the
+    sweeps share it instead of re-gathering every sweep.
+    """
+    D, N = tokens.shape
+    n_sweeps = n_burnin + n_samples
+    T = ndt0.shape[-1]
+    topic_iota = jnp.arange(T, dtype=jnp.int32)[None, :]
+    tok_t = tokens.T                           # [N, D] token-major for scan
+    mask_t = mask.T
+    n_iota = jnp.arange(N, dtype=jnp.int32)
+    tri_u = upper_tri_ones(T)
+    # hoist the sweep-invariant φ̂ gather when the [N, D, T] tensor is small
+    # — small in T (where the gemm no longer dominates) AND in absolute
+    # bytes, so paper-scale corpora never re-materialize the kind of
+    # multi-GB tensor this module exists to avoid
+    hoist = T <= 16 and N * D * T * 4 <= 64 * 2 ** 20
+    phi_w = jnp.take(phi_t, tok_t, axis=0) if hoist else None
+
+    def one_sweep(carry, s):
+        z_t, ndt, acc = carry                  # [N, D], [D, T], [D, T]
+
+        def token_step(ndt, inp):
+            pw_or_w, m, z_old, n = inp         # [D(,T)], [D], [D], scalar
+            pw = pw_or_w if hoist else jnp.take(phi_t, pw_or_w, axis=0)
+            u = counter_uniform(seeds, s * N + n)
+            old = (topic_iota == z_old[:, None]).astype(jnp.float32) * m[:, None]
+            ndt = ndt - old
+            p = (ndt + alpha) * pw
+            c = jnp.dot(p, tri_u)              # prefix sums on one gemm
+            z_new = jnp.sum((c < (u * c[:, -1])[:, None]).astype(jnp.int32),
+                            axis=1)
+            z_new = jnp.where(m > 0, z_new, z_old).astype(jnp.int32)
+            ndt = ndt + (topic_iota == z_new[:, None]).astype(jnp.float32) \
+                * m[:, None]
+            return ndt, z_new
+
+        xs = (phi_w if hoist else tok_t, mask_t, z_t, n_iota)
+        ndt, z_t = jax.lax.scan(token_step, ndt, xs, unroll=unroll)
+        keep = (s >= n_burnin).astype(jnp.float32)
+        return (z_t, ndt, acc + keep * ndt), None
+
+    (z_t, _, acc), _ = jax.lax.scan(
+        one_sweep, (z0.T, ndt0, jnp.zeros_like(ndt0)),
+        jnp.arange(n_sweeps, dtype=jnp.int32))
+    # f32 reciprocal multiply, matching the kernel bit-for-bit
+    return acc * np.float32(1.0 / n_samples), z_t.T

@@ -14,6 +14,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import (Corpus, SLDAConfig, combine, partition,
@@ -27,11 +28,14 @@ def parallel_slda_shard_map(key, train: Corpus, test: Corpus,
     predictions.  Returns ŷ [D_test]."""
     m = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
     shards = partition(train, m)                      # [M, D/M, ...]
-    keys = jax.random.split(key, m)
 
-    def chain_fn(keys_blk, shard_blk, test_blk):
-        # one chain per mesh slice: leading dim 1 inside the block
-        k = keys_blk[0]
+    def chain_fn(key_rep, shard_blk, test_blk):
+        # one chain per mesh slice: leading dim 1 inside the block.  The
+        # chain key is folded from the replicated base key INSIDE the shard
+        # — a pre-split [M, 2] keys array sharded over `axis` makes GSPMD
+        # lower the threefry split as a cross-device combine (an
+        # all-reduce), which would break the zero-collective guarantee.
+        k = jax.random.fold_in(key_rep, jax.lax.axis_index(axis))
         shard = jax.tree.map(lambda x: x[0], shard_blk)
         k1, k2 = jax.random.split(k)
         _, model = train_chain(k1, shard, cfg)        # NO collectives
@@ -42,14 +46,13 @@ def parallel_slda_shard_map(key, train: Corpus, test: Corpus,
         stats_all = jax.lax.all_gather(stats, axis)   # [M, 2]
         return yhat_all, stats_all
 
-    other = tuple(a for a in mesh.axis_names if a != axis)
-    fn = jax.shard_map(
+    fn = shard_map(
         chain_fn, mesh=mesh,
-        in_specs=(P(axis), P(axis), P()),
+        in_specs=(P(), P(axis), P()),
         out_specs=(P(), P()),
-        check_vma=False,   # chain-local scans carry unvarying state
+        check_rep=False,   # chain-local scans carry unvarying state
     )
-    yhat_all, stats_all = fn(keys, shards, test)
+    yhat_all, stats_all = fn(key, shards, test)
     if rule == "simple":
         return combine.simple_average(yhat_all)
     if rule == "weighted":

@@ -1,0 +1,24 @@
+"""Leaf-module numeric helpers shared by core and kernels.
+
+Import-dependency-free (jax only): `core` must stay importable without
+pulling the Pallas kernel stack, and `kernels` modules must be usable
+without importing `core` — anything both sides need lives here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def upper_tri_ones(n: int):
+    """U[j, k] = 1 ⇔ j ≤ k: the prefix-sum-as-matmul contraction matrix.
+
+    Single definition for every sLDA sampler (train + predict kernels,
+    oracles, jnp fast paths): `p @ U` is rounding-critical — the bitwise
+    kernel/ref/jnp equivalence the tests assert holds only while all
+    paths share the exact same contraction.  Built from broadcasted_iota
+    so it also lowers inside Pallas kernels.
+    """
+    return (jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+            <= jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+            ).astype(jnp.float32)

@@ -1,0 +1,158 @@
+"""Validation of the fused prediction-sweep kernel and the incremental
+count refresh (DESIGN.md §Predict-kernel, §3).
+
+The three implementations — Pallas kernel (interpret mode), batched-jnp
+fast path, per-document ref oracle — share the counter-hash PRNG and op
+order, so equality is asserted EXACTLY, not to a tolerance."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SLDAConfig, apply_count_deltas,
+                        counts_from_assignments, init_state, predict, sweep)
+from repro.data import make_slda_corpus
+from repro.kernels import ops, ref
+from repro.kernels.slda_predict import counter_uniform, predict_uniforms
+
+
+def _setup(n_docs, n_topics, vocab, doc_len, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    tokens = jax.random.randint(ks[0], (n_docs, doc_len), 0, vocab, jnp.int32)
+    lens = jax.random.randint(ks[1], (n_docs,), max(2, doc_len // 3),
+                              doc_len + 1)
+    mask = (jnp.arange(doc_len)[None, :] < lens[:, None]).astype(jnp.float32)
+    z0 = jax.random.randint(ks[2], (n_docs, doc_len), 0, n_topics, jnp.int32)
+    ndt0 = jnp.zeros((n_docs, n_topics), jnp.float32)
+    ndt0 = ndt0.at[jnp.arange(n_docs)[:, None], z0].add(mask)
+    phi = jax.random.dirichlet(ks[3], jnp.full((vocab,), 0.1), (n_topics,))
+    seeds = jax.random.randint(ks[4], (n_docs,), 0, 2 ** 31 - 1, jnp.int32)
+    return tokens, mask, z0, ndt0, phi, seeds
+
+
+# ------------------------------------------------------ oracle equivalence
+
+@pytest.mark.parametrize("n_docs,n_topics,vocab,doc_len,doc_block", [
+    (16, 8, 100, 30, 8),
+    (10, 16, 64, 20, 4),         # D not a doc_block multiple (pads)
+    (8, 128, 200, 16, 8),        # full-lane topic dim
+])
+@pytest.mark.parametrize("n_burnin,n_samples", [(3, 4), (0, 2)])
+def test_predict_kernel_matches_ref(n_docs, n_topics, vocab, doc_len,
+                                    doc_block, n_burnin, n_samples):
+    """Interpret-mode kernel == ref oracle fed the SAME uniforms, exactly."""
+    tokens, mask, z0, ndt0, phi, seeds = _setup(n_docs, n_topics, vocab,
+                                                doc_len)
+    kw = dict(alpha=0.1, n_burnin=n_burnin, n_samples=n_samples)
+    avg_k, z_k = ops.slda_predict_sweeps(tokens, mask, z0, ndt0, phi, seeds,
+                                         doc_block=doc_block, **kw)
+    uniforms = predict_uniforms(seeds, n_burnin + n_samples, doc_len)
+    avg_r, z_r = ref.ref_slda_predict_sweeps(tokens, mask, uniforms, z0,
+                                             ndt0, phi.T, 0.1, n_burnin)
+    assert np.array_equal(np.asarray(z_k), np.asarray(z_r))
+    np.testing.assert_allclose(np.asarray(avg_k), np.asarray(avg_r), atol=0)
+
+
+def test_predict_jnp_fast_path_matches_kernel():
+    """use_pallas=False (the CPU fast path) is bit-identical to the kernel."""
+    tokens, mask, z0, ndt0, phi, seeds = _setup(12, 8, 80, 24, seed=1)
+    kw = dict(alpha=0.1, n_burnin=2, n_samples=3)
+    avg_k, z_k = ops.slda_predict_sweeps(tokens, mask, z0, ndt0, phi, seeds,
+                                         doc_block=4, **kw)
+    avg_j, z_j = ops.slda_predict_sweeps(tokens, mask, z0, ndt0, phi, seeds,
+                                         use_pallas=False, **kw)
+    assert np.array_equal(np.asarray(z_k), np.asarray(z_j))
+    np.testing.assert_allclose(np.asarray(avg_k), np.asarray(avg_j), atol=0)
+
+
+def test_predict_sweeps_count_conservation():
+    """Every per-sweep ndt sums to the document length, so the average
+    must too; z stays in range; padded tokens never move."""
+    tokens, mask, z0, ndt0, phi, seeds = _setup(10, 6, 50, 20, seed=2)
+    avg, z = ops.slda_predict_sweeps(tokens, mask, z0, ndt0, phi, seeds,
+                                     alpha=0.1, n_burnin=2, n_samples=3,
+                                     use_pallas=False)
+    np.testing.assert_allclose(np.asarray(avg.sum(-1)),
+                               np.asarray(mask.sum(-1)), rtol=1e-6)
+    assert int(z.min()) >= 0 and int(z.max()) < 6
+    pad = np.asarray(mask) == 0
+    assert np.array_equal(np.asarray(z)[pad], np.asarray(z0)[pad])
+
+
+def test_counter_uniform_is_deterministic_and_uniform():
+    seeds = jnp.arange(64, dtype=jnp.int32) * 7919 + 13
+    u1 = predict_uniforms(seeds, 4, 32)
+    u2 = predict_uniforms(seeds, 4, 32)
+    assert np.array_equal(np.asarray(u1), np.asarray(u2))
+    u = np.asarray(u1).ravel()
+    assert u.min() >= 0.0 and u.max() < 1.0
+    assert abs(u.mean() - 0.5) < 0.02          # 8192 samples
+    # distinct counters decorrelate: no two consecutive tokens collide often
+    assert np.mean(np.abs(np.diff(u)) < 1e-6) < 0.01
+    # scalar form agrees with the batched helper
+    one = counter_uniform(seeds[3], 2 * 32 + 5)
+    np.testing.assert_allclose(np.asarray(u1)[3, 2, 5], np.asarray(one))
+
+
+def test_predict_end_to_end_learns_signal():
+    """core.predict routed through the fused path still predicts y."""
+    cfg = SLDAConfig(n_topics=8, vocab_size=100, n_iters=20, rho=0.25)
+    corpus, _ = make_slda_corpus(jax.random.PRNGKey(5), 120, 100, 8, 30,
+                                 rho=0.25)
+    from repro.core import train_chain
+    _, model = jax.jit(train_chain, static_argnums=(2,))(
+        jax.random.PRNGKey(6), corpus, cfg)
+    yhat = jax.jit(predict, static_argnums=(3,))(
+        jax.random.PRNGKey(7), model, corpus, cfg)
+    mse = float(jnp.mean((yhat - corpus.y) ** 2))
+    assert mse < 0.5 * float(jnp.var(corpus.y))
+
+
+# --------------------------------------------------- incremental counts
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_incremental_counts_match_rebuild_after_k_sweeps(use_pallas):
+    """K sweeps of delta updates == counts_from_assignments rebuild,
+    exactly (±1.0 f32 updates are lossless at these magnitudes)."""
+    cfg = SLDAConfig(n_topics=8, vocab_size=64, use_pallas=use_pallas)
+    corpus, _ = make_slda_corpus(jax.random.PRNGKey(8), 24, 64, 8, 20)
+    state = init_state(jax.random.PRNGKey(9), corpus, cfg)
+    for k in range(5):
+        state = sweep(jax.random.PRNGKey(10 + k), corpus, state, cfg,
+                      exact_rebuild=False)
+    ndt, ntw, nt = counts_from_assignments(corpus.tokens, corpus.mask,
+                                           state.z, cfg.n_topics,
+                                           cfg.vocab_size)
+    np.testing.assert_allclose(np.asarray(state.ndt), np.asarray(ndt), atol=0)
+    np.testing.assert_allclose(np.asarray(state.ntw), np.asarray(ntw), atol=0)
+    np.testing.assert_allclose(np.asarray(state.nt), np.asarray(nt), atol=0)
+
+
+def test_apply_count_deltas_identity_when_nothing_changes():
+    cfg = SLDAConfig(n_topics=4, vocab_size=32)
+    corpus, _ = make_slda_corpus(jax.random.PRNGKey(11), 8, 32, 4, 12)
+    state = init_state(jax.random.PRNGKey(12), corpus, cfg)
+    ntw, nt = apply_count_deltas(state.ntw, state.nt, corpus.tokens,
+                                 corpus.mask, state.z, state.z)
+    np.testing.assert_allclose(np.asarray(ntw), np.asarray(state.ntw), atol=0)
+    np.testing.assert_allclose(np.asarray(nt), np.asarray(state.nt), atol=0)
+
+
+def test_traced_rebuild_flag_under_cond():
+    """sweep() accepts a traced exact_rebuild bool (the train_chain path)."""
+    cfg = SLDAConfig(n_topics=4, vocab_size=32)
+    corpus, _ = make_slda_corpus(jax.random.PRNGKey(13), 8, 32, 4, 12)
+    state = init_state(jax.random.PRNGKey(14), corpus, cfg)
+
+    def run(flag):
+        return sweep(jax.random.PRNGKey(15), corpus, state, cfg,
+                     exact_rebuild=flag)
+
+    s_inc = jax.jit(run)(jnp.asarray(False))
+    s_reb = jax.jit(run)(jnp.asarray(True))
+    np.testing.assert_allclose(np.asarray(s_inc.ntw), np.asarray(s_reb.ntw),
+                               atol=0)
+    np.testing.assert_allclose(np.asarray(s_inc.nt), np.asarray(s_reb.nt),
+                               atol=0)
+    np.testing.assert_allclose(np.asarray(s_inc.ndt), np.asarray(s_reb.ndt),
+                               atol=0)
