@@ -1,0 +1,225 @@
+"""Before/after wall-clock for the fused multi-sweep TRAIN path (ISSUE 2).
+
+Measures `train_chain` — the training half of every chain's wall-clock —
+with the stochastic-EM loop wired to
+
+  * the PR 1 BASELINE (reconstructed below verbatim: per-sweep threefry
+    uniforms, one vmap'd `_doc_sweep` + one dense-delta count refresh +
+    one η solve per sweep), and
+  * the fused path (`kernels.ops.slda_train_sweeps` via
+    `SLDAConfig.sweeps_per_launch`: k sweeps per launch, counter-hash
+    PRNG, block-local in-launch delayed counts, compacted global deltas
+    between launches, η solve per launch),
+
+sweeping `sweeps_per_launch` and `count_rebuild_every` to pick tuned
+defaults.  Both sides run back-to-back in one process (this container
+shows ~2× cross-run wall-clock swings) as distinct function objects (jit
+caches by callable identity — static-arg cfg differences are safe, module
+monkey-patching is not).  Writes BENCH_slda_train.json with the
+methodology embedded.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_slda_train [--scale 1.0]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import platform
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SLDAConfig, train_chain
+from repro.core.gibbs import _doc_sweep, init_state, phi_hat, zbar
+from repro.core.regression import solve_eta
+from repro.core.types import (Corpus, GibbsState, SLDAModel,
+                              apply_count_deltas, counts_from_assignments)
+from repro.data import make_slda_corpus
+
+
+# --------------------------------------------------------- PR 1 baseline
+# Verbatim reconstruction of the pre-fusion train_chain (PR 1 commit),
+# kept here so the "before" column stays measurable after the rewrite:
+# one vmap'd document-parallel sweep per EM iteration, threefry uniforms
+# materialized per sweep, DENSE-delta incremental refresh with the
+# periodic exact rebuild, and an η solve per sweep.
+
+def train_chain_pr1(key, corpus: Corpus, cfg: SLDAConfig):
+    k_init, k_sweeps = jax.random.split(key)
+    state0 = init_state(k_init, corpus, cfg)
+    inv_len = 1.0 / jnp.maximum(corpus.lengths(), 1.0)
+    every = cfg.count_rebuild_every
+
+    def em_step(state, inp):
+        k, it = inp
+        uniforms = jax.random.uniform(k, corpus.tokens.shape)
+        z, ndt = jax.vmap(
+            _doc_sweep,
+            in_axes=(0, 0, 0, 0, 0, 0, 0, None, None, None, None, None)
+        )(corpus.tokens, corpus.mask, uniforms, state.z, state.ndt,
+          corpus.y, inv_len, state.ntw, state.nt, state.eta, cfg, True)
+
+        def rebuild(_):
+            return counts_from_assignments(corpus.tokens, corpus.mask, z,
+                                           cfg.n_topics, cfg.vocab_size)
+
+        def incremental(_):
+            ntw, nt = apply_count_deltas(state.ntw, state.nt, corpus.tokens,
+                                         corpus.mask, state.z, z, cap=0)
+            return ndt, ntw, nt
+
+        rebuild_now = (it % every == 0) if every > 0 else False
+        if isinstance(rebuild_now, bool):
+            ndt, ntw, nt = rebuild(None) if rebuild_now else incremental(None)
+        else:
+            ndt, ntw, nt = jax.lax.cond(rebuild_now, rebuild, incremental,
+                                        None)
+        state = GibbsState(z=z, ndt=ndt, ntw=ntw, nt=nt, eta=state.eta)
+        eta = solve_eta(zbar(state, corpus), corpus.y, cfg)
+        return GibbsState(z, ndt, ntw, nt, eta), None
+
+    state, _ = jax.lax.scan(
+        em_step, state0, (jax.random.split(k_sweeps, cfg.n_iters),
+                          jnp.arange(cfg.n_iters)))
+    yhat_tr = zbar(state, corpus) @ state.eta
+    mse = jnp.mean((yhat_tr - corpus.y) ** 2)
+    acc = jnp.mean(((yhat_tr > 0.5) == (corpus.y > 0.5)).astype(jnp.float32))
+    return state, SLDAModel(phi=phi_hat(state, cfg), eta=state.eta,
+                            train_mse=mse, train_acc=acc)
+
+
+# ------------------------------------------------------------- harness
+
+def _timed_round_robin(fns, args, reps):
+    """Time every fn min-of-`reps`, INTERLEAVED round-robin.
+
+    This container shows ~2x wall-clock interference swings on a scale of
+    minutes; measuring config A's reps and then config B's reps bakes
+    that drift into the comparison.  Interleaving exposes every config to
+    the same load profile, and the per-config minimum is the estimator
+    least contaminated by interference spikes.
+    """
+    outs = []
+    for fn in fns:                       # warm-up (compile excluded)
+        outs.append(fn(*args))
+        jax.block_until_ready(outs[-1])
+    best = [float("inf")] * len(fns)
+    for _ in range(reps):
+        for i, fn in enumerate(fns):
+            t0 = time.time()
+            out = fn(*args)
+            jax.block_until_ready(out)
+            best[i] = min(best[i], time.time() - t0)
+    return best, outs
+
+
+def run(scale: float = 1.0, reps: int = 5):
+    """Returns the result dict (also what lands in the JSON)."""
+    d = max(int(256 * scale) // 8 * 8, 16)
+    # n_iters stays at the SLDAConfig default (60): the fused path's win
+    # scales with the per-sweep refresh cost it amortizes, and the η-solve
+    # cadence quality cost shrinks as total solves grow
+    base = SLDAConfig(n_topics=32, vocab_size=1000, rho=0.25)
+    corpus, _ = make_slda_corpus(jax.random.PRNGKey(0), d, 1000, 32, 64,
+                                 rho=0.25)
+    key = jax.random.PRNGKey(7)
+    jit_train = jax.jit(train_chain, static_argnums=(2,))
+
+    # static grid, all measured interleaved: sweeps_per_launch at the
+    # default rebuild cadence, plus the rebuild cadence at spl=8 (cadence
+    # is counted in launches and is perf-only — both refresh forms exact)
+    points = ([(spl, base.count_rebuild_every) for spl in (1, 2, 4, 8)]
+              + [(8, every) for every in (1, 4, 0)])
+    cfgs = [dataclasses.replace(base, sweeps_per_launch=spl,
+                                count_rebuild_every=every)
+            for spl, every in points]
+    fns = [jax.jit(train_chain_pr1, static_argnums=(2,))] + [
+        (lambda c: lambda k, corp, _=None: jit_train(k, corp, c))(cfg)
+        for cfg in cfgs]
+    times, outs = _timed_round_robin(fns, (key, corpus, base), reps=reps)
+
+    # quality probe: train MSE averaged over extra seeds — the per-seed
+    # spread (~20%) swamps any single-seed comparison across configs
+    probe_keys = [jax.random.PRNGKey(s) for s in (17, 18)]
+    def mean_mse(fn, first):
+        mses = [first] + [float(fn(k, corpus, base)[1].train_mse)
+                          for k in probe_keys]
+        return sum(mses) / len(mses)
+
+    results = {"train_chain_pr1_baseline_s": round(times[0], 4),
+               "train_mse_pr1": round(
+                   mean_mse(fns[0], float(outs[0][1].train_mse)), 4)}
+    grid = [{"sweeps_per_launch": spl, "count_rebuild_every": every,
+             "seconds": round(t, 4),
+             "train_mse": round(
+                 mean_mse(fn, float(out[1].train_mse)), 4)}
+            for (spl, every), t, out, fn in zip(points, times[1:],
+                                                outs[1:], fns[1:])]
+
+    # tuned = fastest spl>1 point whose mean fit stays within 15% of the
+    # spl=1 run — fusing η solves out too far trades model quality for
+    # launches, which speed alone would mis-pick
+    mse1 = next(r["train_mse"] for r in grid if r["sweeps_per_launch"] == 1)
+    ok = [r for r in grid if r["sweeps_per_launch"] > 1
+          and r["train_mse"] <= 1.15 * mse1]
+    tuned = min(ok or grid, key=lambda r: r["seconds"])
+    results["train_chain_fused_s"] = tuned["seconds"]
+    results["train_chain_speedup"] = round(times[0] / tuned["seconds"], 2)
+    results["tuned_defaults"] = {
+        "sweeps_per_launch": tuned["sweeps_per_launch"],
+        "count_rebuild_every": tuned["count_rebuild_every"],
+        "train_doc_block": base.train_doc_block}
+    results["train_mse_fused"] = tuned["train_mse"]
+
+    return {
+        "benchmark": "slda_train fused multi-sweep path (ISSUE 2)",
+        "methodology": (
+            f"train_chain ({base.n_iters} EM sweeps, supervised) on a "
+            f"synthetic sLDA corpus [D={d}, W=1000, T=32, N=64]; the "
+            "baseline row reconstructs the PR 1 implementation verbatim "
+            "(per-sweep threefry uniforms, vmap'd _doc_sweep, dense-delta "
+            "refresh w/ rebuild-every-16, eta solve per sweep); fused rows "
+            "route through ops.slda_train_sweeps via "
+            "SLDAConfig.sweeps_per_launch (total sweeps held fixed at "
+            "n_iters; eta solves once per launch).  Tuned = fastest spl>1 "
+            "whose train MSE, averaged over 3 seeds (per-seed spread "
+            "~20%), stays within 15% of the spl=1 run (spl trades "
+            "eta-solve cadence for launches).  All rows jit-compiled "
+            f"distinct-static-config, warm-up excluded, MIN of {reps} "
+            "INTERLEAVED round-robin reps in ONE process (this container "
+            "shows ~2x wall-clock interference drift on the scale of "
+            "minutes; interleaving exposes every config to the same load "
+            "and the min discards the spikes); jnp fast path "
+            f"(use_pallas=False) on {jax.default_backend()}."),
+        "platform": {"backend": jax.default_backend(),
+                     "machine": platform.machine(),
+                     "jax": jax.__version__},
+        "shapes": {"d": d, "vocab": 1000, "n_topics": 32, "doc_len": 64,
+                   "n_iters": base.n_iters,
+                   "train_doc_block": base.train_doc_block},
+        "grid": grid,
+        "results": results,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="corpus-size multiplier")
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--out", default="BENCH_slda_train.json")
+    args = ap.parse_args(argv)
+    payload = run(scale=args.scale, reps=args.reps)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    r = payload["results"]
+    print(f"train-chain: pr1 {r['train_chain_pr1_baseline_s']}s → fused "
+          f"{r['train_chain_fused_s']}s ({r['train_chain_speedup']}x) at "
+          f"{r['tuned_defaults']}; wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -52,14 +52,24 @@ def weighted_average(yhat: jnp.ndarray, train_mse: jnp.ndarray = None,
 
 
 def median(yhat: jnp.ndarray, alive=None) -> jnp.ndarray:
-    """[extension] robust elementwise median over alive chains."""
+    """[extension] robust elementwise median over alive chains.
+
+    Dead chains are sorted to the top and the median indices are computed
+    from the ALIVE count, so dropping a chain via `alive` equals removing
+    it — exactly.  (An earlier version averaged medians over ±big-padded
+    copies, which mis-locates the median whenever the padding straddles
+    it, e.g. one survivor out of two chains came back halved.)  All-dead
+    degrades to 0.0, matching the other rules.
+    """
     a = _alive(yhat, alive)
-    # push dead chains to +inf/-inf symmetrically so they never win the median
     big = jnp.nanmax(jnp.abs(yhat)) + 1.0
-    lo = jnp.where(a[:, None] > 0, yhat, -big)
-    hi = jnp.where(a[:, None] > 0, yhat, big)
-    # average of median over lo-padded and hi-padded cancels the padding bias
-    return 0.5 * (jnp.median(lo, axis=0) + jnp.median(hi, axis=0))
+    s = jnp.sort(jnp.where(a[:, None] > 0, yhat, big), axis=0)
+    n = jnp.sum(a > 0).astype(jnp.int32)
+    m = yhat.shape[0]
+    i0 = jnp.clip((n - 1) // 2, 0, m - 1)
+    i1 = jnp.clip(n // 2, 0, m - 1)
+    med = 0.5 * (jnp.take(s, i0, axis=0) + jnp.take(s, i1, axis=0))
+    return jnp.where(n > 0, med, jnp.zeros_like(med))
 
 
 COMBINERS = {

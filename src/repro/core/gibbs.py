@@ -135,28 +135,99 @@ def phi_hat(state: GibbsState, cfg: SLDAConfig) -> jax.Array:
     return (state.ntw + cfg.beta) / (state.nt[:, None] + cfg.vocab_size * cfg.beta)
 
 
+def _train_chain_fused(k_sweeps: jax.Array, corpus: Corpus,
+                       state0: GibbsState, cfg: SLDAConfig) -> GibbsState:
+    """Stochastic-EM via the fused multi-sweep launch (sweeps_per_launch>1).
+
+    Each launch runs `spl` Gibbs sweeps through `ops.slda_train_sweeps`
+    (counter-hash PRNG, block-local delayed counts between in-launch
+    sweeps, DESIGN.md §Train-kernel); between launches the global tables
+    refresh exactly — compacted deltas with a periodic
+    `count_rebuild_every` re-scatter, both exact — and η re-solves.
+    Total sweeps stay cfg.n_iters: a remainder launch mops up when
+    n_iters is not a multiple of spl.
+    """
+    spl = cfg.sweeps_per_launch
+    every = cfg.count_rebuild_every
+    D = corpus.n_docs
+    # clamp the block to the corpus (rounded to the sublane tile) so a
+    # small shard doesn't pad up to a mostly-empty block
+    doc_block = min(cfg.train_doc_block, -(-D // 8) * 8)
+    inv_len = 1.0 / jnp.maximum(corpus.lengths(), 1.0)
+    from repro.kernels import ops  # local import: kernels are optional
+
+    def launch(state: GibbsState, k, it, n_sweeps: int) -> GibbsState:
+        seeds = jax.random.randint(k, (D,), 0, jnp.iinfo(jnp.int32).max,
+                                   jnp.int32)
+        z, ndt = ops.slda_train_sweeps(
+            corpus.tokens, corpus.mask, state.z, state.ndt, corpus.y,
+            inv_len, state.ntw, state.nt, state.eta, seeds,
+            alpha=cfg.alpha, beta=cfg.beta, rho=cfg.rho,
+            n_sweeps=n_sweeps, supervised=True,
+            doc_block=doc_block, use_pallas=cfg.use_pallas)
+
+        def rebuild(_):
+            return counts_from_assignments(corpus.tokens, corpus.mask, z,
+                                           cfg.n_topics, cfg.vocab_size)
+
+        def incremental(_):
+            ntw, nt = apply_count_deltas(state.ntw, state.nt, corpus.tokens,
+                                         corpus.mask, state.z, z)
+            return ndt, ntw, nt
+
+        # exact global refresh from (z_launch_start, z_final); periodic
+        # full rebuild on the count_rebuild_every cadence (in launches)
+        if every > 0:
+            ndt, ntw, nt = jax.lax.cond(it % every == 0, rebuild,
+                                        incremental, None)
+        else:
+            ndt, ntw, nt = incremental(None)
+        state = GibbsState(z=z, ndt=ndt, ntw=ntw, nt=nt, eta=state.eta)
+        eta = solve_eta(zbar(state, corpus), corpus.y, cfg)
+        return GibbsState(z, ndt, ntw, nt, eta)
+
+    n_full, rem = divmod(cfg.n_iters, spl)
+    keys = jax.random.split(k_sweeps, n_full + (1 if rem else 0))
+    state = state0
+    if n_full:
+        state, _ = jax.lax.scan(
+            lambda s, inp: (launch(s, inp[0], inp[1], spl), None),
+            state, (keys[:n_full], jnp.arange(n_full)))
+    if rem:  # remainder launch keeps total sweeps == n_iters exactly
+        state = launch(state, keys[-1], jnp.asarray(n_full), rem)
+    return state
+
+
 def train_chain(key: jax.Array, corpus: Corpus, cfg: SLDAConfig) -> tuple[GibbsState, SLDAModel]:
     """Full stochastic-EM loop for ONE chain on ONE (sub-)corpus.
 
-    Alternates a Gibbs sweep over z with the ridge solve for η (Eq. 2).
-    Fully jit-able; contains no collectives — chains run communication-free.
+    Alternates Gibbs sweeps over z with the ridge solve for η (Eq. 2).
+    `cfg.sweeps_per_launch = 1` is the seed path: one sweep per η solve,
+    threefry uniforms, globally sweep-frozen counts.  `> 1` fuses that
+    many sweeps into each `ops.slda_train_sweeps` launch (η solve stays
+    between launches).  Fully jit-able; contains no collectives — chains
+    run communication-free.
     """
     k_init, k_sweeps = jax.random.split(key)
     state0 = init_state(k_init, corpus, cfg)
     every = cfg.count_rebuild_every
 
-    def em_step(state, inp):
-        k, it = inp
-        # incremental delta refresh between periodic exact rebuilds
-        rebuild = (it % every == 0) if every > 0 else False
-        state = sweep(k, corpus, state, cfg, supervised=True,
-                      exact_rebuild=rebuild)
-        eta = solve_eta(zbar(state, corpus), corpus.y, cfg)
-        return GibbsState(state.z, state.ndt, state.ntw, state.nt, eta), None
+    if cfg.sweeps_per_launch > 1:
+        state = _train_chain_fused(k_sweeps, corpus, state0, cfg)
+    else:
+        def em_step(state, inp):
+            k, it = inp
+            # incremental delta refresh between periodic exact rebuilds
+            rebuild = (it % every == 0) if every > 0 else False
+            state = sweep(k, corpus, state, cfg, supervised=True,
+                          exact_rebuild=rebuild)
+            eta = solve_eta(zbar(state, corpus), corpus.y, cfg)
+            return GibbsState(state.z, state.ndt, state.ntw, state.nt,
+                              eta), None
 
-    state, _ = jax.lax.scan(
-        em_step, state0, (jax.random.split(k_sweeps, cfg.n_iters),
-                          jnp.arange(cfg.n_iters)))
+        state, _ = jax.lax.scan(
+            em_step, state0, (jax.random.split(k_sweeps, cfg.n_iters),
+                              jnp.arange(cfg.n_iters)))
 
     yhat_tr = zbar(state, corpus) @ state.eta
     mse = jnp.mean((yhat_tr - corpus.y) ** 2)

@@ -52,7 +52,28 @@ class SLDAConfig:
                              # full scatter; the periodic rebuild bounds
                              # float32 accumulation drift.  0 = never
                              # rebuild, 1 = rebuild every sweep (seed
-                             # behaviour).
+                             # behaviour).  Cadence counts LAUNCHES when
+                             # sweeps_per_launch > 1.  Either refresh form
+                             # is exact, so this knob is perf-only
+                             # (BENCH_slda_train.json records the sweep).
+    sweeps_per_launch: int = 1  # training Gibbs sweeps fused into one
+                             # kernel launch / scan body.  1 = seed
+                             # semantics (threefry uniforms, η solve every
+                             # sweep, globally sweep-frozen counts).  >1
+                             # routes train_chain through the fused
+                             # kernels/slda_train.py path: counter-hash
+                             # PRNG, η solve between launches, and the
+                             # AD-LDA block-local delayed-count refresh
+                             # between in-launch sweeps (DESIGN.md
+                             # §Train-kernel; tuned value in
+                             # BENCH_slda_train.json).
+    train_doc_block: int = 128  # doc block of the fused train kernel —
+                             # also the delayed-count granularity
+                             # (semantics, not just tiling, when
+                             # sweeps_per_launch>1).  Bigger blocks are
+                             # faster on CPU (fewer vmap lanes) AND less
+                             # delayed (fewer blocks to defer across);
+                             # train_chain clamps it to the corpus size.
 
 
 @_pytree
@@ -121,18 +142,54 @@ def counts_from_assignments(tokens: Array, mask: Array, z: Array,
 
 
 def apply_count_deltas(ntw: Array, nt: Array, tokens: Array, mask: Array,
-                       z_old: Array, z_new: Array):
+                       z_old: Array, z_new: Array, cap: int | None = None):
     """Exact incremental (ntw, nt) refresh from one sweep's reassignments.
 
-    Only tokens whose topic actually changed carry weight, so the scatter
-    moves ±1 for the (typically small, late in sampling) changed set and
-    leaves everything else untouched — the delta form of the AD-LDA count
-    refresh (cf. Magnusson et al., sparse partially collapsed samplers).
-    Counts stay exact: ±1.0 float32 updates are lossless below 2^24, and
+    Only tokens whose topic actually changed carry weight (typically few,
+    late in sampling — Magnusson et al., sparse partially collapsed
+    samplers), so the scatter is issued in **changed-token compaction**
+    form: gather the positions where `z_old != z_new` into a static-width
+    buffer of `cap` slots and scatter only those ±1 updates, instead of a
+    dense [D·N]-index 2-scatter that is mostly zero-weight no-ops.  If a
+    sweep reassigns more than `cap` tokens (early sweeps), a `lax.cond`
+    falls back to the dense form — exactness never depends on the cap.
+
+    cap=None picks the backend's measured winner: max(128, D·N/8) slots
+    where scatter cost scales with the index count (TPU/GPU), the dense
+    form on CPU — on XLA:CPU the nonzero+gather overhead makes the
+    compacted branch ~3× a dense scatter even at 5 % change
+    (DESIGN.md §Train-kernel).  Pass `cap=0` to force dense, or an
+    explicit slot count to force compaction.  Counts stay exact either
+    way: ±1.0 float32 updates are lossless below 2^24, and
     `SLDAConfig.count_rebuild_every` bounds drift beyond that.
     """
     changed = mask * (z_new != z_old).astype(mask.dtype)
-    ntw = ntw.at[z_old, tokens].add(-changed).at[z_new, tokens].add(changed)
-    nt = (nt + jnp.zeros_like(nt).at[z_new].add(changed)
-          - jnp.zeros_like(nt).at[z_old].add(changed))
-    return ntw, nt
+    flat = changed.ravel()
+    total = flat.shape[0]
+    if cap is None:
+        cap = 0 if jax.default_backend() == "cpu" else max(128, total // 8)
+    cap = int(min(cap, total))
+
+    def dense(_):
+        ntw2 = (ntw.at[z_old, tokens].add(-changed)
+                .at[z_new, tokens].add(changed))
+        nt2 = (nt + jnp.zeros_like(nt).at[z_new].add(changed)
+               - jnp.zeros_like(nt).at[z_old].add(changed))
+        return ntw2, nt2
+
+    if cap <= 0 or cap >= total:
+        return dense(None)
+
+    n_changed = jnp.sum(flat > 0)
+    w_all, zo_all, zn_all = tokens.ravel(), z_old.ravel(), z_new.ravel()
+
+    def sparse(_):
+        idx = jnp.nonzero(flat > 0, size=cap, fill_value=0)[0]
+        wt = (jnp.arange(cap) < n_changed).astype(ntw.dtype)
+        w, zo, zn = w_all[idx], zo_all[idx], zn_all[idx]
+        ntw2 = ntw.at[zo, w].add(-wt).at[zn, w].add(wt)
+        nt2 = (nt + jnp.zeros_like(nt).at[zn].add(wt)
+               - jnp.zeros_like(nt).at[zo].add(wt))
+        return ntw2, nt2
+
+    return jax.lax.cond(n_changed <= cap, sparse, dense, None)

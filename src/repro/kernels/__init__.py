@@ -4,6 +4,9 @@
                     sweep, topic dim on lanes, doc block on sublanes
   slda_predict    — fused multi-sweep test-time sampler: all prediction
                     sweeps in one launch, counter-hash in-kernel PRNG
+  slda_train      — fused multi-sweep TRAINING launch: k sweeps per
+                    launch with an in-kernel block-local delayed-count
+                    refresh of the topic-word table (VMEM scratch)
   flash_attention — blocked causal attention with native GQA index maps
   ssd_scan        — Mamba-2 chunked state-space scan (state in VMEM scratch)
   rmsnorm         — fused row-blocked RMSNorm

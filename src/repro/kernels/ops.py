@@ -18,6 +18,8 @@ from .rmsnorm import rmsnorm as _rmsnorm_kernel
 from .slda_gibbs import slda_gibbs_sweep_pallas
 from .slda_predict import (slda_predict_sweeps_jnp,
                            slda_predict_sweeps_pallas)
+from .slda_train import (slda_train_sweeps_jnp,
+                         slda_train_sweeps_pallas)
 from .ssd_scan import ssd_scan, ssd_decode_step  # noqa: F401 (re-export)
 
 
@@ -70,6 +72,51 @@ def slda_gibbs_sweep(tokens, mask, uniforms, z, ndt, y, inv_len, ntw, nt,
         tokens, mask, uniforms, z, ndt, y, inv_len, ntw_t, nt, eta,
         alpha=alpha, beta=beta, rho=rho, supervised=supervised,
         doc_block=doc_block, interpret=_interpret())
+    if pad:
+        z2, ndt2 = z2[:D], ndt2[:D]
+    return z2, ndt2
+
+
+# ------------------------------------------------------------- slda train
+
+def slda_train_sweeps(tokens, mask, z0, ndt0, y, inv_len, ntw, nt, eta,
+                      seeds, *, alpha, beta, rho, n_sweeps, supervised=True,
+                      doc_block=8, use_pallas=True, tpu_prng=False,
+                      unroll=8):
+    """`n_sweeps` training Gibbs sweeps in one fused launch per doc block.
+
+    ntw: [T, W] (un-transposed — the row-gather [W, T] layout is an
+    internal kernel detail); seeds: int32 [D] per-document PRNG seeds.
+    Returns (z_final [D, N], ndt_final [D, T]).  The topic-word table
+    refreshes *block-locally* between the launch's sweeps (delayed counts
+    across blocks, DESIGN.md §Train-kernel) — the caller applies the
+    exact global refresh from (z0, z_final) afterwards, e.g. via
+    `core.types.apply_count_deltas`.  At n_sweeps=1 the launch is exactly
+    one seed-semantics sweep.
+
+    use_pallas=False routes to the blocked-jnp fast path, bit-identical
+    to the interpret-mode kernel (shared counter-hash PRNG + op order).
+    The doc_block is part of the *semantics* here (it sets the delayed-
+    count granularity), so both routes pad D to a doc_block multiple and
+    share the same block partition.
+    """
+    ntw_t = ntw.T
+    D = tokens.shape[0]
+    pad = (-D) % doc_block
+    if pad:
+        pad2 = lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+        tokens, mask, z0, ndt0, y, inv_len, seeds = map(
+            pad2, (tokens, mask, z0, ndt0, y, inv_len, seeds))
+    kw = dict(alpha=alpha, beta=beta, rho=rho, supervised=supervised,
+              n_sweeps=n_sweeps, doc_block=doc_block)
+    if use_pallas:
+        z2, ndt2 = slda_train_sweeps_pallas(
+            tokens, mask, seeds, z0, ndt0, y, inv_len, ntw_t, nt, eta,
+            interpret=_interpret(), tpu_prng=tpu_prng, **kw)
+    else:
+        z2, ndt2 = slda_train_sweeps_jnp(
+            tokens, mask, seeds, z0, ndt0, y, inv_len, ntw_t, nt, eta,
+            unroll=unroll, **kw)
     if pad:
         z2, ndt2 = z2[:D], ndt2[:D]
     return z2, ndt2

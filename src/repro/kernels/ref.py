@@ -58,6 +58,66 @@ def ref_slda_gibbs_sweep(tokens, mask, uniforms, z, ndt, y, inv_len,
     return jax.vmap(doc)(tokens, mask, uniforms, z, ndt, y, inv_len)
 
 
+# ------------------------------------------------------------- slda_train
+
+def ref_slda_train_sweeps(tokens, mask, uniforms, z0, ndt0, y, inv_len,
+                          ntw_t, nt, eta, alpha, beta, rho,
+                          supervised: bool, doc_block: int):
+    """Fused multi-sweep TRAINING oracle with EXPLICIT uniforms and the
+    per-block delayed-count refresh semantics (DESIGN.md §Train-kernel).
+
+    tokens/mask/z0 : [D, N]; uniforms [D, S, N]; ndt0 [D, T]; y/inv_len
+    [D]; ntw_t [W, T] (row-gather layout); nt/eta [T].  Each `doc_block`
+    of documents carries its own copy of the topic-word table: every sweep
+    is one `ref_slda_gibbs_sweep` against the block-local sweep-frozen
+    tables, followed by a ±1 scatter of the block's own reassignments
+    (exact per block, delayed across blocks — the AD-LDA argument of
+    DESIGN.md §3 applied inside the launch).  The block partition pads D
+    up to a doc_block multiple exactly like `ops.slda_train_sweeps`, so
+    the padded-block structure — which is part of the semantics here,
+    unlike prediction — matches the kernel's.
+
+    Returns (z_final [D, N], ndt_final [D, T]); global `ntw`/`nt` are the
+    caller's to refresh from (z0, z_final).
+    """
+    D, N = tokens.shape
+    T = ndt0.shape[-1]
+    S = uniforms.shape[1]
+    pad = (-D) % doc_block
+    if pad:
+        pad2 = lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+        tokens, mask, uniforms, z0, ndt0, y, inv_len = map(
+            pad2, (tokens, mask, uniforms, z0, ndt0, y, inv_len))
+    B = (D + pad) // doc_block
+    blk = lambda a: a.reshape((B, doc_block) + a.shape[1:])
+
+    def block_fn(tok_b, mask_b, us_b, z_b, ndt_b, y_b, il_b):
+        w_flat = tok_b.ravel()
+
+        def sweep_step(carry, us_s):
+            z_b, ndt_b, ntw_loc, nt_loc = carry
+            z_new, ndt_new = ref_slda_gibbs_sweep(
+                tok_b, mask_b, us_s, z_b, ndt_b, y_b, il_b,
+                ntw_loc, nt_loc, eta, alpha, beta, rho, supervised)
+            zo, zn = z_b.ravel(), z_new.ravel()
+            changed = mask_b.ravel() * (zn != zo).astype(jnp.float32)
+            ntw_loc = (ntw_loc.at[w_flat, zo].add(-changed)
+                       .at[w_flat, zn].add(changed))
+            nt_loc = nt_loc + jnp.sum(ndt_new - ndt_b, axis=0)
+            return (z_new, ndt_new, ntw_loc, nt_loc), None
+
+        (z_b, ndt_b, _, _), _ = jax.lax.scan(
+            sweep_step, (z_b, ndt_b, ntw_t, nt),
+            jnp.moveaxis(us_b, 1, 0))          # [DB, S, N] → [S, DB, N]
+        return z_b, ndt_b
+
+    z_fin, ndt_fin = jax.vmap(block_fn)(
+        blk(tokens), blk(mask), blk(uniforms), blk(z0), blk(ndt0), blk(y),
+        blk(inv_len))
+    z_fin = z_fin.reshape(D + pad, N)[:D]
+    return z_fin.astype(jnp.int32), ndt_fin.reshape(D + pad, T)[:D]
+
+
 # ----------------------------------------------------------- slda_predict
 
 def ref_slda_predict_sweeps(tokens, mask, uniforms, z0, ndt0, phi_t,

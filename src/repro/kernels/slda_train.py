@@ -1,0 +1,345 @@
+"""Pallas TPU kernel for fused multi-sweep sLDA *training* launches.
+
+PR 1 fused all prediction sweeps into one launch (slda_predict.py); this
+module does the same for training, the other half of every chain's
+wall-clock.  The seed training loop pays, per sweep: one kernel launch,
+one `[D, N]` threefry uniforms materialization, and one host-visible
+count refresh.  The fused path amortizes all three over
+``n_sweeps = SLDAConfig.sweeps_per_launch`` Gibbs sweeps per launch.
+
+What carries over from the predict kernel (DESIGN.md §Predict-kernel):
+
+  * counter-hash PRNG — per-token uniforms from a murmur3-style mix of
+    (doc_seed, sweep·N + n), shared bit-for-bit by kernel / jnp twin /
+    oracle through `train_uniforms` (same contract as `predict_uniforms`);
+  * transposed `[W, T]` row-gather layout for the topic-word table;
+  * matmul prefix sums (`p @ U`, U upper-triangular ones) for the
+    inverse-CDF categorical.
+
+What is new — **in-kernel delayed-count refresh** (DESIGN.md
+§Train-kernel): unlike prediction, training must refresh `ntw`/`nt`
+between sweeps.  DESIGN.md §3's AD-LDA delayed-count argument already
+treats the table as *stale within a sweep* and exact afterwards; the same
+argument licenses keeping a block-local copy of the table in VMEM scratch
+and applying the block's own ±1 deltas between the sweeps of one launch:
+
+  * within a sweep the table is frozen (sweep-frozen lockstep documents,
+    exactly the seed semantics);
+  * between sweeps each `doc_block` applies ITS OWN documents' deltas to
+    its local copy — exact per block, delayed across blocks until the
+    launch ends and the host applies the exact global
+    `apply_count_deltas(z_launch_start, z_final)` refresh;
+  * only changed tokens pay: the per-token refresh row-update is skipped
+    with `pl.when` when no document in the block moved that token
+    (Magnusson et al.: the count-update cost is dominated by unchanged
+    tokens, which late in sampling is nearly all of them).
+
+At ``n_sweeps=1`` no in-launch refresh happens and the launch is exactly
+one seed-semantics sweep (bitwise: tests/test_train_kernel.py asserts
+agreement with the single-sweep `slda_gibbs` kernel under shared
+uniforms).
+
+All count arithmetic is ±1.0 in float32 — exact below 2^24 — so the
+kernel's sequential row updates, the jnp twin's scatter-adds, and the
+oracle's scatter-adds produce bit-identical tables regardless of
+accumulation order.
+
+Grid: (D / doc_block,).  `ref.ref_slda_train_sweeps` is the oracle;
+`slda_train_sweeps_jnp` below is the bit-identical blocked-jnp CPU fast
+path (what the benchmarks measure on this container).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.mathutil import upper_tri_ones
+from .slda_predict import _GOLDEN, _INV24, _MIX1, _MIX2, counter_uniform
+from .slda_predict import predict_uniforms as _uniforms_tensor
+
+try:  # pltpu imports on CPU builds too; guard for exotic installs
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+
+def train_uniforms(seeds, n_sweeps: int, n_tokens: int):
+    """Materialize the [D, n_sweeps, N] uniforms the fused train paths
+    derive on the fly — the shared-uniforms contract for driving the ref
+    oracle (and the seed single-sweep path) in equivalence tests.  Same
+    counter layout as `predict_uniforms`; never used in production."""
+    return _uniforms_tensor(seeds, n_sweeps, n_tokens)
+
+
+def _train_kernel(tokens_ref, mask_ref, seed_ref, z_ref, ndt_ref, y_ref,
+                  invlen_ref, ntw_t_ref, nt_ref, eta_ref,
+                  z_out_ref, ndt_out_ref, ntw_scratch,
+                  *, alpha: float, beta: float, rho: float, supervised: bool,
+                  n_sweeps: int, n_tokens: int, vocab_size: int,
+                  tpu_prng: bool):
+    eta = eta_ref[0, :]                       # [T]
+    seeds = seed_ref[:, 0]                    # [DB]
+    y = y_ref[:, 0]                           # [DB]
+    inv_len = invlen_ref[:, 0]                # [DB]
+    T = eta.shape[0]
+    DB = tokens_ref.shape[0]
+    topic_iota = jax.lax.broadcasted_iota(jnp.int32, (1, T), 1)
+    tri_u = upper_tri_ones(T)
+
+    if tpu_prng:
+        # one hardware stream per doc block, murmur-mixed with the grid
+        # index (same caveats as the predict kernel: the per-DOCUMENT seed
+        # contract holds only on the portable hash path)
+        mixed = seed_ref[0, 0].astype(jnp.uint32) ^ (
+            pl.program_id(0).astype(jnp.uint32) * _GOLDEN)
+        mixed = (mixed ^ (mixed >> 16)) * _MIX1
+        mixed = (mixed ^ (mixed >> 13)) * _MIX2
+        pltpu.prng_seed((mixed ^ (mixed >> 16)).astype(jnp.int32))
+
+    ntw_scratch[...] = ntw_t_ref[...]         # [W, T] block-local copy
+    z_out_ref[...] = z_ref[...]               # z persists across sweeps
+
+    def sweep_body(s, carry):
+        ndt_start, nt = carry                 # [DB, T], [T] sweep-frozen
+        ntw_t = ntw_scratch[...]              # frozen snapshot for the sweep
+        z_prev = z_out_ref[...]               # [DB, N] sweep-start z
+        s0 = ndt_start @ eta                  # [DB] running Σ_t η_t N_dt
+
+        def token_step(n, carry2):
+            ndt, st = carry2
+            w = tokens_ref[:, n]              # [DB] int32 word ids
+            m = mask_ref[:, n]                # [DB]
+            z_old = z_out_ref[:, n]           # [DB]
+            if tpu_prng:
+                bits = pltpu.bitcast(
+                    pltpu.prng_random_bits(w.shape), jnp.uint32)
+                u = (bits >> 8).astype(jnp.float32) * _INV24
+            else:
+                u = counter_uniform(seeds, s * n_tokens + n)
+
+            old = (topic_iota == z_old[:, None]).astype(jnp.float32) \
+                * m[:, None]
+            ndt = ndt - old
+            st = st - jnp.take(eta, z_old) * m
+
+            ntw_w = jnp.take(ntw_t, w, axis=0) - old    # [DB, T], -dn exact
+            logp = (jnp.log(ndt + alpha)
+                    + jnp.log(ntw_w + beta)
+                    - jnp.log(nt[None, :] - old + vocab_size * beta))
+            if supervised:
+                mu_t = (st[:, None] + eta[None, :]) * inv_len[:, None]
+                logp = logp - 0.5 * (y[:, None] - mu_t) ** 2 / rho
+
+            p = jnp.exp(logp - jnp.max(logp, axis=1, keepdims=True))
+            c = jnp.dot(p, tri_u)                       # prefix sums
+            z_new = jnp.sum((c < (u * c[:, -1])[:, None]).astype(jnp.int32),
+                            axis=1)
+            z_new = jnp.where(m > 0, z_new, z_old).astype(jnp.int32)
+
+            ndt = ndt + (topic_iota == z_new[:, None]).astype(jnp.float32) \
+                * m[:, None]
+            st = st + jnp.take(eta, z_new) * m
+            z_out_ref[:, n] = z_new
+            return ndt, st
+
+        ndt, _ = jax.lax.fori_loop(0, n_tokens, token_step, (ndt_start, s0))
+
+        # block-local delayed-count refresh: ±1 row updates for the tokens
+        # THIS block reassigned this sweep.  Skipped after the final sweep
+        # (the local table is not an output) and — per token — whenever no
+        # document in the block moved (the common case late in sampling).
+        @pl.when(s < n_sweeps - 1)
+        def _refresh():
+            def refresh_token(n, _):
+                w = tokens_ref[:, n]
+                m = mask_ref[:, n]
+                zo = z_prev[:, n]
+                zn = z_out_ref[:, n]
+                moved = (zo != zn) & (m > 0)
+
+                @pl.when(jnp.any(moved))
+                def _rows():
+                    def refresh_doc(d, __):
+                        @pl.when(moved[d])
+                        def _upd():
+                            row = pl.load(ntw_scratch,
+                                          (pl.dslice(w[d], 1), slice(None)))
+                            dvec = ((topic_iota == zn[d]).astype(jnp.float32)
+                                    - (topic_iota == zo[d])
+                                    .astype(jnp.float32))
+                            pl.store(ntw_scratch,
+                                     (pl.dslice(w[d], 1), slice(None)),
+                                     row + dvec)
+                        return 0
+                    jax.lax.fori_loop(0, DB, refresh_doc, 0)
+                return 0
+            jax.lax.fori_loop(0, n_tokens, refresh_token, 0)
+
+        # Δnt is the column-sum of the block's ndt deltas — exact, no
+        # per-token work (±1.0 f32 adds are lossless at these magnitudes)
+        return ndt, nt + jnp.sum(ndt - ndt_start, axis=0)
+
+    ndt_final, _ = jax.lax.fori_loop(0, n_sweeps, sweep_body,
+                                     (ndt_ref[...], nt_ref[0, :]))
+    ndt_out_ref[...] = ndt_final
+
+
+def slda_train_sweeps_pallas(tokens, mask, seeds, z0, ndt0, y, inv_len,
+                             ntw_t, nt, eta, *, alpha, beta, rho,
+                             supervised=True, n_sweeps=1, doc_block=8,
+                             interpret=True, tpu_prng=False):
+    """All `n_sweeps` training sweeps for a doc block in ONE launch.
+
+    tokens/mask/z0: [D, N]; seeds: int32 [D]; ndt0: [D, T]; y/inv_len: [D];
+    ntw_t: [W, T] (row-gather layout); nt/eta: [T].  D must be a multiple
+    of doc_block (ops.py pads).  Returns (z_final [D, N], ndt_final [D, T]);
+    the caller refreshes the global tables from (z0, z_final).
+    """
+    D, N = tokens.shape
+    T = ndt0.shape[-1]
+    W = ntw_t.shape[0]
+    assert D % doc_block == 0, (D, doc_block)
+    grid = (D // doc_block,)
+
+    doc_spec = lambda cols: pl.BlockSpec((doc_block, cols), lambda i: (i, 0))
+    full = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+
+    kernel = functools.partial(
+        _train_kernel, alpha=float(alpha), beta=float(beta), rho=float(rho),
+        supervised=supervised, n_sweeps=int(n_sweeps), n_tokens=N,
+        vocab_size=W, tpu_prng=tpu_prng)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[doc_spec(N), doc_spec(N), doc_spec(1), doc_spec(N),
+                  doc_spec(T), doc_spec(1), doc_spec(1),
+                  full((W, T)), full((1, T)), full((1, T))],
+        out_specs=[doc_spec(N), doc_spec(T)],
+        out_shape=[jax.ShapeDtypeStruct((D, N), jnp.int32),
+                   jax.ShapeDtypeStruct((D, T), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((W, T), jnp.float32)],
+        interpret=interpret,
+    )(tokens, mask, seeds[:, None], z0, ndt0, y[:, None], inv_len[:, None],
+      ntw_t, nt[None, :], eta[None, :])
+
+
+def slda_train_sweeps_jnp(tokens, mask, seeds, z0, ndt0, y, inv_len,
+                          ntw_t, nt, eta, *, alpha, beta, rho,
+                          supervised=True, n_sweeps=1, doc_block=8,
+                          unroll=8):
+    """Blocked-jnp twin of the fused train kernel — the CPU fast path.
+
+    Same restructuring expressed as XLA-friendly jnp: a vmap over doc
+    blocks, each block's documents advancing in lockstep (one [DB, T]
+    vector op per token, identical op order to the kernel so the bits
+    match), the token scan unrolled ×8, and the block-local between-sweep
+    refresh as a scalar 2-scatter over the block's tokens (same exact
+    integer arithmetic as the kernel's sequential row updates, so the
+    tables agree bit-for-bit regardless of accumulation order).
+
+    Two twin-only rewrites keep the bits while cutting the CPU cost:
+
+      * hoisted log tables — `log(ntw+β)` / `log(nt+Wβ)` are sweep-frozen,
+        so they are computed ONCE per sweep ([W, T] + [T] logs) and row-
+        gathered per token; the only entry the -dn exclusion touches is
+        the document's own (w, z_old) cell, which gets a scalar fixup
+        `log((v-1)+β)`.  Bitwise-safe because `(v - 0.0) + β ≡ v + β` in
+        IEEE f32, so every element equals the kernel's
+        `log((v - old) + β)` exactly — the per-token transcendental count
+        drops from ~3·DB·T to ~2·DB·T + 2·DB (carrying `log(ndt+α)`
+        incrementally as well measured SLOWER on XLA:CPU: the extra
+        selects/gathers cost more than the saved log);
+      * the token loop is a `lax.scan` unrolled ×8 (dispatch-bound).
+
+    Memory: each block carries its own [W, T] count + log-table copy, so
+    the live footprint is 2·(D/doc_block)·W·T floats — larger doc_block
+    is both faster (fewer vmap lanes) and *less* delayed (fewer blocks);
+    core.gibbs clamps it to the corpus size.
+    """
+    D, N = tokens.shape
+    T = ndt0.shape[-1]
+    W = ntw_t.shape[0]
+    assert D % doc_block == 0, (D, doc_block)
+    B = D // doc_block
+    topic_iota = jnp.arange(T, dtype=jnp.int32)[None, :]
+    tri_u = upper_tri_ones(T)
+    n_iota = jnp.arange(N, dtype=jnp.int32)
+
+    blk = lambda a: a.reshape((B, doc_block) + a.shape[1:])
+
+    def block_fn(tok_b, mask_b, seed_b, z_b, ndt_b, y_b, il_b):
+        tok_t = tok_b.T                        # [N, DB] token-major for scan
+        mask_t = mask_b.T
+        w_flat = tok_b.ravel()                 # [DB*N] for the refresh
+
+        def one_sweep(carry, s, refresh=True):
+            z_t, ndt_start, ntw_loc, nt_loc = carry
+            s0 = ndt_start @ eta
+            # sweep-frozen hoisted log tables (see docstring: bit-equal to
+            # the kernel's per-token logs because (v - 0.0) + β ≡ v + β)
+            log_ntw = jnp.log(ntw_loc + beta)          # [W, T]
+            log_nt = jnp.log(nt_loc + W * beta)        # [T]
+
+            def token_step(carry2, inp):
+                ndt, st = carry2
+                w, m, z_old, n = inp
+                u = counter_uniform(seed_b, s * N + n)
+                own = (topic_iota == z_old[:, None]) & (m[:, None] > 0)
+                old = own.astype(jnp.float32)
+                ndt = ndt - old
+                st = st - jnp.take(eta, z_old) * m
+                # own-token -dn fixups: one scalar log per document
+                v_own = ntw_loc[w, z_old]              # [DB]
+                fix_ntw = jnp.log((v_own - 1.0) + beta)
+                fix_nt = jnp.log((jnp.take(nt_loc, z_old) - 1.0) + W * beta)
+                lw = jnp.where(own, fix_ntw[:, None],
+                               jnp.take(log_ntw, w, axis=0))
+                ln = jnp.where(own, fix_nt[:, None], log_nt[None, :])
+                logp = jnp.log(ndt + alpha) + lw - ln
+                if supervised:
+                    mu_t = (st[:, None] + eta[None, :]) * il_b[:, None]
+                    logp = logp - 0.5 * (y_b[:, None] - mu_t) ** 2 / rho
+                p = jnp.exp(logp - jnp.max(logp, axis=1, keepdims=True))
+                c = jnp.dot(p, tri_u)
+                z_new = jnp.sum(
+                    (c < (u * c[:, -1])[:, None]).astype(jnp.int32), axis=1)
+                z_new = jnp.where(m > 0, z_new, z_old).astype(jnp.int32)
+                ndt = ndt + (topic_iota == z_new[:, None]) \
+                    .astype(jnp.float32) * m[:, None]
+                st = st + jnp.take(eta, z_new) * m
+                return (ndt, st), z_new
+
+            (ndt, _), z_t_new = jax.lax.scan(
+                token_step, (ndt_start, s0), (tok_t, mask_t, z_t, n_iota),
+                unroll=unroll)
+
+            # block-local delayed-count refresh: scalar ±1 2-scatter over
+            # the block's changed tokens (exact; see module docstring).
+            # Skipped after the final sweep — the tables are not outputs —
+            # mirroring the kernel's pl.when (bits unchanged)
+            if refresh:
+                zo = z_t.T.ravel()
+                zn = z_t_new.T.ravel()
+                changed = mask_b.ravel() * (zn != zo).astype(jnp.float32)
+                ntw_loc = (ntw_loc.at[w_flat, zo].add(-changed)
+                           .at[w_flat, zn].add(changed))
+                nt_loc = nt_loc + jnp.sum(ndt - ndt_start, axis=0)
+            return (z_t_new, ndt, ntw_loc, nt_loc), None
+
+        carry = (z_b.T, ndt_b, ntw_t, nt)
+        if n_sweeps > 1:
+            carry, _ = jax.lax.scan(
+                one_sweep, carry, jnp.arange(n_sweeps - 1, dtype=jnp.int32))
+        (z_t, ndt_b, _, _), _ = one_sweep(
+            carry, jnp.int32(n_sweeps - 1), refresh=False)
+        return z_t.T, ndt_b
+
+    z_fin, ndt_fin = jax.vmap(block_fn)(
+        blk(tokens), blk(mask), blk(seeds), blk(z0), blk(ndt0), blk(y),
+        blk(inv_len))
+    return (z_fin.reshape(D, N).astype(jnp.int32),
+            ndt_fin.reshape(D, T))

@@ -10,6 +10,7 @@ implements the paper's combination stage (Eq. 6).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -21,11 +22,29 @@ from repro.core import (Corpus, SLDAConfig, combine, partition,
                         predict, train_chain)
 
 
+def mesh_supports_pallas(mesh: Mesh) -> bool:
+    """True when every device in the mesh compiles the sLDA Pallas kernels
+    natively (TPU).  On CPU/GPU meshes the kernels would run in interpret
+    mode — correct but slower than the batched-jnp twins, so the runner
+    keeps use_pallas off there."""
+    return all(d.platform == "tpu" for d in mesh.devices.flat)
+
+
 def parallel_slda_shard_map(key, train: Corpus, test: Corpus,
                             cfg: SLDAConfig, mesh: Mesh,
-                            axis: str = "data", rule: str = "simple"):
+                            axis: str = "data", rule: str = "simple",
+                            auto_pallas: bool = True):
     """Run M = mesh.shape[axis] chains, one per mesh slice, then combine
-    predictions.  Returns ŷ [D_test]."""
+    predictions.  Returns ŷ [D_test].
+
+    auto_pallas=True flips `cfg.use_pallas` on when the mesh backend
+    compiles the kernels natively (TPU), so chains take the fused
+    train/predict kernel paths without the caller having to re-tune the
+    config per backend; an explicit `use_pallas=True` in cfg is always
+    honored (including interpret mode on CPU meshes, which the
+    communication-freedom test exercises)."""
+    if auto_pallas and not cfg.use_pallas and mesh_supports_pallas(mesh):
+        cfg = dataclasses.replace(cfg, use_pallas=True)
     m = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
     shards = partition(train, m)                      # [M, D/M, ...]
 

@@ -75,6 +75,10 @@ def test_dead_chains_are_ignored(rows):
     want_w = combine.weighted_average(yhat[1:], train_mse=jnp.ones(m - 1))
     np.testing.assert_allclose(np.asarray(got_w), np.asarray(want_w),
                                rtol=1e-5, atol=1e-5)
+    got_m = combine.median(yhat, alive=alive)
+    want_m = combine.median(yhat[1:])
+    np.testing.assert_allclose(np.asarray(got_m), np.asarray(want_m),
+                               rtol=1e-5, atol=1e-5)
 
 
 def test_weighted_prefers_better_chain():
@@ -102,6 +106,88 @@ def test_equal_mse_weighted_equals_simple(rows):
     want = combine.simple_average(yhat)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
+
+
+@given(yhat_strategy(min_chains=2),
+       st.lists(st.booleans(), min_size=2, max_size=8))
+@settings(max_examples=60, deadline=None)
+def test_alive_renormalization_sums_to_one(rows, alive_bits):
+    """The implied combination weights renormalize to EXACTLY one over the
+    survivors: combining chains that all predict the constant c must
+    return c, for any alive mask with at least one survivor."""
+    m = len(rows)
+    alive = jnp.asarray(((alive_bits * m)[:m]), jnp.float32)
+    if float(alive.sum()) == 0.0:
+        alive = alive.at[0].set(1.0)
+    c = jnp.asarray(rows[0][:1], jnp.float32)[0]
+    yhat = jnp.full((m, 3), c, jnp.float32)
+    mse = jnp.linspace(0.1, 1.0, m)
+    for out in (combine.simple_average(yhat, alive=alive),
+                combine.weighted_average(yhat, train_mse=mse, alive=alive),
+                combine.median(yhat, alive=alive)):
+        np.testing.assert_allclose(np.asarray(out), float(c), rtol=1e-5,
+                                   atol=1e-5)
+
+
+@given(yhat_strategy(min_chains=2), st.integers(0, 7))
+@settings(max_examples=60, deadline=None)
+def test_single_survivor_reduces_to_identity(rows, which):
+    """With exactly one alive chain, every rule returns that chain's
+    prediction — the degenerate end of the fault-tolerance contract."""
+    yhat = jnp.asarray(rows, jnp.float32)
+    m = yhat.shape[0]
+    k = which % m
+    alive = jnp.zeros((m,), jnp.float32).at[k].set(1.0)
+    mse = jnp.linspace(0.1, 1.0, m)
+    for out in (combine.simple_average(yhat, alive=alive),
+                combine.weighted_average(yhat, train_mse=mse, alive=alive),
+                combine.median(yhat, alive=alive)):
+        np.testing.assert_allclose(np.asarray(out), np.asarray(yhat[k]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@given(yhat_strategy(min_chains=1))
+@settings(max_examples=60, deadline=None)
+def test_all_dead_mask_is_well_defined(rows):
+    """An all-dead mask must not divide by zero or emit NaN/inf — a fleet
+    that lost every chain degrades to a defined (zero) prediction rather
+    than poisoning downstream consumers."""
+    yhat = jnp.asarray(rows, jnp.float32)
+    m = yhat.shape[0]
+    alive = jnp.zeros((m,), jnp.float32)
+    mse = jnp.linspace(0.1, 1.0, m)
+    for out in (combine.simple_average(yhat, alive=alive),
+                combine.weighted_average(yhat, train_mse=mse, alive=alive),
+                combine.median(yhat, alive=alive)):
+        assert np.all(np.isfinite(np.asarray(out)))
+
+
+@given(yhat_strategy(min_chains=2), st.randoms(use_true_random=False))
+@settings(max_examples=60, deadline=None)
+def test_weighted_and_median_are_permutation_invariant(rows, rng):
+    """Chains are exchangeable: permuting them (with their weights and
+    alive flags) must not change any combined prediction."""
+    yhat = jnp.asarray(rows, jnp.float32)
+    m = yhat.shape[0]
+    perm = list(range(m))
+    rng.shuffle(perm)
+    perm = jnp.asarray(perm)
+    mse = jnp.linspace(0.1, 1.0, m)
+    alive = jnp.ones((m,), jnp.float32).at[0].set(0.0)
+    np.testing.assert_allclose(
+        np.asarray(combine.simple_average(yhat[perm], alive=alive[perm])),
+        np.asarray(combine.simple_average(yhat, alive=alive)),
+        rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(combine.weighted_average(yhat[perm], train_mse=mse[perm],
+                                            alive=alive[perm])),
+        np.asarray(combine.weighted_average(yhat, train_mse=mse,
+                                            alive=alive)),
+        rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(combine.median(yhat[perm], alive=alive[perm])),
+        np.asarray(combine.median(yhat, alive=alive)),
+        rtol=1e-5, atol=1e-5)
 
 
 @given(yhat_strategy(min_chains=2),

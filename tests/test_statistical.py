@@ -1,0 +1,195 @@
+"""Statistical-correctness tier for the sLDA samplers (@slow).
+
+Bitwise equivalence (test_train_kernel.py) pins the three implementations
+to each other; this tier pins them to the *model*.  Two instruments:
+
+  * a Geweke-style joint-distribution test: the collapsed Gibbs transition
+    (through the NEW fused multi-sweep train path), composed with exact
+    word- and label-resampling conditionals, must leave the joint prior
+    p(z, w, y) invariant — so marginal topic-count statistics of the
+    successive-conditional chain must match independent forward samples
+    from the generative model (Geweke 2004; Grosse & Duvenaud 2014).
+    This catches the bugs bitwise tests cannot: a wrong -dn exclusion, a
+    dropped prior term, or a mis-scaled supervised likelihood all shift
+    these marginals even while all three implementations agree perfectly.
+
+  * long-run count-invariant tests: after 50 sweeps of purely incremental
+    (never-rebuilt) refresh, the ndt/ntw/nt tables must remain EXACTLY
+    consistent with z — the ±1.0-float32-is-lossless claim of DESIGN.md
+    §3, held to atol=0 over a horizon an order of magnitude past the
+    tier-1 versions.
+
+The Gibbs sweep freezes the topic-word table within a sweep (AD-LDA
+delayed counts, DESIGN.md §3), so its transition is *approximately*
+invariant; the corpus here is tiny with strong smoothing, keeping that
+bias far below the test resolution (thresholds hold with >2x margin, and
+the statistics have enough power to catch the gross errors above).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SLDAConfig, counts_from_assignments, init_state,
+                        sweep, train_chain)
+from repro.data import make_slda_corpus
+from repro.kernels import ops
+
+# tiny joint model: strong priors keep the delayed-count bias negligible
+D, N, T, W = 2, 5, 3, 6
+ALPHA, BETA, RHO = 0.8, 0.8, 0.5
+ETA = jnp.asarray([1.0, -1.0, 0.5], jnp.float32)
+MASK = jnp.ones((D, N), jnp.float32)
+INV_LEN = jnp.full((D,), 1.0 / N, jnp.float32)
+
+
+def _stats(z, w, y):
+    """Statistics compared between the two samplers.  First moments
+    (topic-0 total, one doc-topic cell, label mean, one topic-word cell)
+    catch asymmetric shifts; the SECOND moments Σndt² / Σntw² catch
+    concentration errors that topic symmetry hides from the means (a
+    wrong α or β moves these several σ while leaving E[nt] untouched);
+    Σ y·(z̄η) pins the supervised coupling (a mis-scaled ρ moves it)."""
+    ndt = jnp.sum(jax.nn.one_hot(z, T), axis=1)            # [D, T]
+    ntw = jnp.zeros((T, W)).at[z.ravel(), w.ravel()].add(1.0)
+    return jnp.stack([
+        jnp.sum((z == 0).astype(jnp.float32)),
+        jnp.sum((z[0] == 0).astype(jnp.float32)),
+        jnp.mean(y),
+        jnp.sum(((z == 0) & (w == 0)).astype(jnp.float32)),
+        jnp.sum(ndt ** 2),
+        jnp.sum(ntw ** 2),
+        jnp.sum(y * ((ndt / N) @ ETA)),
+    ])
+
+
+def _forward_samples(key, n_samples):
+    """Independent draws of (z, w, y) from the generative model —
+    Geweke's marginal-conditional sampler."""
+    kt, kp, kz, kw, ky = jax.random.split(key, 5)
+    theta = jax.random.dirichlet(kt, jnp.full((T,), ALPHA), (n_samples, D))
+    z = jax.random.categorical(kz, jnp.log(theta)[:, :, None, :],
+                               shape=(n_samples, D, N))
+    phi = jax.random.dirichlet(kp, jnp.full((W,), BETA), (n_samples, T))
+    logits = jnp.log(phi)[jnp.arange(n_samples)[:, None, None], z]
+    w = jax.random.categorical(kw, logits)
+    zbar = jnp.mean(jax.nn.one_hot(z, T), axis=2)          # [S, D, T]
+    y = zbar @ ETA + jnp.sqrt(RHO) * jax.random.normal(ky, (n_samples, D))
+    return jax.vmap(_stats)(z, w, y)
+
+
+def _word_gibbs_sweep(key, w, z):
+    """Exact sequential collapsed Gibbs over the words:
+    w_{dn} | w_-dn, z  ∝  N_{z_dn, w}^{-dn} + β  (φ integrated out).
+    Leaves p(w | z) invariant; nt is untouched (the topic is fixed)."""
+    w_flat, z_flat = w.ravel(), z.ravel()
+    ntw = jnp.zeros((T, W), jnp.float32).at[z_flat, w_flat].add(1.0)
+    us = jax.random.uniform(key, (D * N,))
+
+    def step(carry, inp):
+        ntw, w_flat = carry
+        i, u = inp
+        zi, wi = z_flat[i], w_flat[i]
+        ntw = ntw.at[zi, wi].add(-1.0)
+        c = jnp.cumsum(ntw[zi] + BETA)
+        wn = jnp.sum((c < u * c[-1]).astype(jnp.int32))
+        return (ntw.at[zi, wn].add(1.0), w_flat.at[i].set(wn)), None
+
+    (_, w_flat), _ = jax.lax.scan(
+        step, (ntw, w_flat), (jnp.arange(D * N), us))
+    return w_flat.reshape(D, N)
+
+
+def _successive_samples(key, n_iters):
+    """Geweke's successive-conditional sampler: alternate the sLDA Gibbs
+    transition on z (the FUSED multi-sweep train path: 2 sweeps per
+    launch, doc_block=1, so the in-launch block-local delayed-count
+    refresh is exercised), an exact word-Gibbs sweep, and an exact label
+    redraw.  Collect the same statistics once per cycle."""
+    k0, kc = jax.random.split(key)
+    kt, kp, kz, kw, ky = jax.random.split(k0, 5)
+    theta = jax.random.dirichlet(kt, jnp.full((T,), ALPHA), (D,))
+    z = jax.random.categorical(kz, jnp.log(theta)[:, None, :],
+                               shape=(D, N)).astype(jnp.int32)
+    phi = jax.random.dirichlet(kp, jnp.full((W,), BETA), (T,))
+    w = jax.random.categorical(kw, jnp.log(phi)[z]).astype(jnp.int32)
+    zbar0 = jnp.mean(jax.nn.one_hot(z, T), axis=1)
+    y = zbar0 @ ETA + jnp.sqrt(RHO) * jax.random.normal(ky, (D,))
+
+    def cycle(carry, k):
+        z, w, y = carry
+        k1, k2, k3 = jax.random.split(k, 3)
+        ndt, ntw, nt = counts_from_assignments(w, MASK, z, T, W)
+        seeds = jax.random.randint(k1, (D,), 0, jnp.iinfo(jnp.int32).max,
+                                   jnp.int32)
+        z, ndt = ops.slda_train_sweeps(
+            w, MASK, z, ndt, y, INV_LEN, ntw, nt, ETA, seeds,
+            alpha=ALPHA, beta=BETA, rho=RHO, n_sweeps=2, doc_block=1,
+            use_pallas=False)
+        w = _word_gibbs_sweep(k2, w, z)
+        y = (ndt / N) @ ETA + jnp.sqrt(RHO) * jax.random.normal(k3, (D,))
+        return (z, w, y), _stats(z, w, y)
+
+    _, stats = jax.lax.scan(cycle, (z, w, y),
+                            jax.random.split(kc, n_iters))
+    return stats
+
+
+@pytest.mark.slow
+def test_geweke_joint_distribution_agreement():
+    """Successive-conditional vs forward marginals agree within Monte
+    Carlo error (|z-score| < 4 per statistic, two-sample test with the
+    chain thinned for autocorrelation)."""
+    n_forward, n_chain, burn, thin = 6000, 6000, 500, 5
+    fwd = np.asarray(jax.jit(_forward_samples, static_argnums=(1,))(
+        jax.random.PRNGKey(0), n_forward))
+    chain = np.asarray(jax.jit(_successive_samples, static_argnums=(1,))(
+        jax.random.PRNGKey(1), n_chain))[burn::thin]
+
+    se = np.sqrt(fwd.var(0, ddof=1) / fwd.shape[0]
+                 + chain.var(0, ddof=1) / chain.shape[0])
+    zscores = (fwd.mean(0) - chain.mean(0)) / se
+    assert np.all(np.abs(zscores) < 4.0), (
+        f"Geweke z-scores {zscores} (stats: nt0, ndt00, ymean, ntw00, "
+        f"Σndt², Σntw², Σy·z̄η); forward means {fwd.mean(0)}, chain means "
+        f"{chain.mean(0)}")
+
+
+@pytest.mark.slow
+def test_incremental_counts_exact_after_50_sweeps_seed_path():
+    """50 never-rebuilt incremental sweeps (seed per-sweep path) leave
+    ndt/ntw/nt EXACTLY consistent with z."""
+    cfg = SLDAConfig(n_topics=12, vocab_size=128, count_rebuild_every=0)
+    corpus, _ = make_slda_corpus(jax.random.PRNGKey(20), 32, 128, 12, 24)
+    state = init_state(jax.random.PRNGKey(21), corpus, cfg)
+    step = jax.jit(functools.partial(sweep, supervised=True,
+                                     exact_rebuild=False),
+                   static_argnums=(3,))
+    for k in range(50):
+        state = step(jax.random.PRNGKey(100 + k), corpus, state, cfg)
+    ndt, ntw, nt = counts_from_assignments(corpus.tokens, corpus.mask,
+                                           state.z, cfg.n_topics,
+                                           cfg.vocab_size)
+    np.testing.assert_allclose(np.asarray(state.ndt), np.asarray(ndt), atol=0)
+    np.testing.assert_allclose(np.asarray(state.ntw), np.asarray(ntw), atol=0)
+    np.testing.assert_allclose(np.asarray(state.nt), np.asarray(nt), atol=0)
+
+
+@pytest.mark.slow
+def test_incremental_counts_exact_after_50_sweeps_fused_path():
+    """The same 50-sweep horizon through the fused multi-sweep launches
+    (block-local in-launch refresh + compacted global deltas between
+    launches, never rebuilt): tables still exactly consistent with z."""
+    cfg = SLDAConfig(n_topics=12, vocab_size=128, n_iters=50,
+                     sweeps_per_launch=5, count_rebuild_every=0)
+    corpus, _ = make_slda_corpus(jax.random.PRNGKey(22), 32, 128, 12, 24)
+    state, _ = jax.jit(train_chain, static_argnums=(2,))(
+        jax.random.PRNGKey(23), corpus, cfg)
+    ndt, ntw, nt = counts_from_assignments(corpus.tokens, corpus.mask,
+                                           state.z, cfg.n_topics,
+                                           cfg.vocab_size)
+    np.testing.assert_allclose(np.asarray(state.ndt), np.asarray(ndt), atol=0)
+    np.testing.assert_allclose(np.asarray(state.ntw), np.asarray(ntw), atol=0)
+    np.testing.assert_allclose(np.asarray(state.nt), np.asarray(nt), atol=0)

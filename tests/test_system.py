@@ -72,7 +72,10 @@ def test_shard_map_runner_is_communication_free():
     """The multi-device chain runner must contain NO collectives in the
     training phase; the only all-gather is the final prediction combine.
     Verified on 8 forced host devices in a subprocess (device count is
-    locked at first jax use, so it cannot be changed in-process)."""
+    locked at first jax use, so it cannot be changed in-process) — for
+    BOTH chain implementations: the jnp fast paths and the use_pallas
+    fused-kernel paths (interpret mode on the host mesh), the latter with
+    multi-sweep launches so the fused train kernel is in the lowering."""
     prog = textwrap.dedent("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -96,6 +99,16 @@ def test_shard_map_runner_is_communication_free():
         yhat = fn(jax.random.PRNGKey(1))
         assert yhat.shape == (16,)
         assert bool(jnp.all(jnp.isfinite(yhat)))
+
+        # the fused-kernel chain runner must be collective-free too
+        cfg_p = SLDAConfig(n_topics=4, vocab_size=64, n_iters=4,
+                           n_pred_burnin=2, n_pred_samples=2,
+                           use_pallas=True, sweeps_per_launch=2)
+        fn_p = lambda key: parallel_slda_shard_map(key, train, test, cfg_p,
+                                                   mesh, rule="simple")
+        hlo_p = jax.jit(fn_p).lower(jax.random.PRNGKey(1)).compile().as_text()
+        assert "all-reduce(" not in hlo_p, "all-reduce in pallas chains"
+        assert "all-to-all(" not in hlo_p
         print("OK")
     """)
     env = dict(os.environ)

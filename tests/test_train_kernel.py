@@ -1,0 +1,166 @@
+"""Validation of the fused multi-sweep TRAINING kernel and its dispatch
+(DESIGN.md §Train-kernel).
+
+The three implementations — Pallas kernel (interpret mode), blocked-jnp
+fast path, per-document ref oracle — share the counter-hash PRNG, the op
+order, and the block-local delayed-count refresh, so equality is asserted
+EXACTLY, not to a tolerance.  The shared-uniforms contract is
+`kernels.slda_train.train_uniforms` (the train twin of
+`predict_uniforms`)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SLDAConfig, apply_count_deltas,
+                        counts_from_assignments, train_chain)
+from repro.data import make_slda_corpus
+from repro.kernels import ops, ref
+from repro.kernels.slda_train import train_uniforms
+
+
+def _setup(n_docs, n_topics, vocab, doc_len, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 7)
+    tokens = jax.random.randint(ks[0], (n_docs, doc_len), 0, vocab, jnp.int32)
+    lens = jax.random.randint(ks[1], (n_docs,), max(2, doc_len // 3),
+                              doc_len + 1)
+    mask = (jnp.arange(doc_len)[None, :] < lens[:, None]).astype(jnp.float32)
+    z0 = jax.random.randint(ks[2], (n_docs, doc_len), 0, n_topics, jnp.int32)
+    ndt0 = jnp.zeros((n_docs, n_topics), jnp.float32)
+    ndt0 = ndt0.at[jnp.arange(n_docs)[:, None], z0].add(mask)
+    ntw = jnp.zeros((n_topics, vocab), jnp.float32).at[z0, tokens].add(mask)
+    nt = ntw.sum(-1)
+    y = jax.random.normal(ks[3], (n_docs,))
+    inv_len = 1.0 / jnp.maximum(mask.sum(-1), 1.0)
+    eta = jax.random.normal(ks[4], (n_topics,))
+    seeds = jax.random.randint(ks[5], (n_docs,), 0, 2 ** 31 - 1, jnp.int32)
+    return tokens, mask, z0, ndt0, y, inv_len, ntw, nt, eta, seeds
+
+
+_HYPERS = dict(alpha=0.1, beta=0.01, rho=0.5)
+
+
+# ------------------------------------------------------ oracle equivalence
+
+@pytest.mark.parametrize("n_docs,n_topics,vocab,doc_len,doc_block", [
+    (16, 8, 100, 30, 8),
+    (10, 16, 64, 20, 4),         # D not a doc_block multiple (pads)
+    (8, 128, 200, 16, 8),        # full-lane topic dim
+])
+@pytest.mark.parametrize("n_sweeps,supervised", [(3, True), (1, True),
+                                                 (4, False)])
+def test_train_kernel_matches_ref(n_docs, n_topics, vocab, doc_len,
+                                  doc_block, n_sweeps, supervised):
+    """Interpret-mode kernel == ref oracle fed the SAME uniforms, exactly
+    — including the block-local delayed-count refresh between sweeps."""
+    (tokens, mask, z0, ndt0, y, inv_len, ntw, nt, eta,
+     seeds) = _setup(n_docs, n_topics, vocab, doc_len)
+    z_k, ndt_k = ops.slda_train_sweeps(
+        tokens, mask, z0, ndt0, y, inv_len, ntw, nt, eta, seeds,
+        n_sweeps=n_sweeps, supervised=supervised, doc_block=doc_block,
+        **_HYPERS)
+    uniforms = train_uniforms(seeds, n_sweeps, doc_len)
+    z_r, ndt_r = ref.ref_slda_train_sweeps(
+        tokens, mask, uniforms, z0, ndt0, y, inv_len, ntw.T, nt, eta,
+        _HYPERS["alpha"], _HYPERS["beta"], _HYPERS["rho"], supervised,
+        doc_block)
+    assert np.array_equal(np.asarray(z_k), np.asarray(z_r))
+    np.testing.assert_allclose(np.asarray(ndt_k), np.asarray(ndt_r), atol=0)
+
+
+def test_train_jnp_fast_path_matches_kernel():
+    """use_pallas=False (the CPU fast path) is bit-identical to the kernel."""
+    args = _setup(12, 8, 80, 24, seed=1)
+    kw = dict(n_sweeps=4, doc_block=4, **_HYPERS)
+    z_k, ndt_k = ops.slda_train_sweeps(*args, **kw)
+    z_j, ndt_j = ops.slda_train_sweeps(*args, use_pallas=False, **kw)
+    assert np.array_equal(np.asarray(z_k), np.asarray(z_j))
+    np.testing.assert_allclose(np.asarray(ndt_k), np.asarray(ndt_j), atol=0)
+
+
+def test_single_sweep_launch_agrees_with_seed_sweep():
+    """n_sweeps=1 is exactly one seed-semantics sweep: it must reproduce
+    the single-sweep slda_gibbs path bit-for-bit under shared uniforms
+    (the `sweeps_per_launch=1 reproduces seed semantics` contract)."""
+    (tokens, mask, z0, ndt0, y, inv_len, ntw, nt, eta,
+     seeds) = _setup(10, 8, 60, 18, seed=2)
+    z_f, ndt_f = ops.slda_train_sweeps(
+        tokens, mask, z0, ndt0, y, inv_len, ntw, nt, eta, seeds,
+        n_sweeps=1, doc_block=4, **_HYPERS)
+    us = train_uniforms(seeds, 1, 18)[:, 0]
+    z_s, ndt_s = ops.slda_gibbs_sweep(
+        tokens, mask, us, z0, ndt0, y, inv_len, ntw, nt, eta,
+        doc_block=4, **_HYPERS)
+    assert np.array_equal(np.asarray(z_f), np.asarray(z_s))
+    np.testing.assert_allclose(np.asarray(ndt_f), np.asarray(ndt_s), atol=0)
+
+
+# ------------------------------------------------------------- invariants
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_train_sweeps_conserve_counts_and_padding(use_pallas):
+    """ndt stays exact w.r.t. z after a fused launch; z stays in range;
+    padded tokens never move; the caller's global delta refresh lands on
+    exactly the rebuilt tables."""
+    (tokens, mask, z0, ndt0, y, inv_len, ntw, nt, eta,
+     seeds) = _setup(10, 6, 50, 20, seed=3)
+    z, ndt = ops.slda_train_sweeps(
+        tokens, mask, z0, ndt0, y, inv_len, ntw, nt, eta, seeds,
+        n_sweeps=3, doc_block=4, use_pallas=use_pallas, **_HYPERS)
+    assert int(z.min()) >= 0 and int(z.max()) < 6
+    pad = np.asarray(mask) == 0
+    assert np.array_equal(np.asarray(z)[pad], np.asarray(z0)[pad])
+    ndt_r, ntw_r, nt_r = counts_from_assignments(tokens, mask, z, 6, 50)
+    np.testing.assert_allclose(np.asarray(ndt), np.asarray(ndt_r), atol=0)
+    ntw2, nt2 = apply_count_deltas(ntw, nt, tokens, mask, z0, z)
+    np.testing.assert_allclose(np.asarray(ntw2), np.asarray(ntw_r), atol=0)
+    np.testing.assert_allclose(np.asarray(nt2), np.asarray(nt_r), atol=0)
+
+
+@pytest.mark.parametrize("cap", [0, 8, 96, None])
+def test_apply_count_deltas_compaction_matches_dense(cap):
+    """The changed-token compaction form equals the dense 2-scatter for
+    every cap, including tiny caps that force the lax.cond overflow
+    fallback and cap=0 (dense short-circuit)."""
+    (tokens, mask, z0, _, _, _, ntw, nt, _, _) = _setup(8, 6, 40, 16,
+                                                        seed=4)
+    z_new = jnp.where(jax.random.uniform(jax.random.PRNGKey(9),
+                                         z0.shape) > 0.6,
+                      z0, jax.random.randint(jax.random.PRNGKey(10),
+                                             z0.shape, 0, 6, jnp.int32))
+    ntw_d, nt_d = apply_count_deltas(ntw, nt, tokens, mask, z0, z_new,
+                                     cap=0)
+    ntw_c, nt_c = jax.jit(
+        lambda *a: apply_count_deltas(*a, cap=cap))(ntw, nt, tokens, mask,
+                                                    z0, z_new)
+    np.testing.assert_allclose(np.asarray(ntw_c), np.asarray(ntw_d), atol=0)
+    np.testing.assert_allclose(np.asarray(nt_c), np.asarray(nt_d), atol=0)
+
+
+# --------------------------------------------------------- chain routing
+
+def test_fused_train_chain_counts_stay_exact():
+    """train_chain with sweeps_per_launch>1 (incremental global refresh
+    between launches) ends with tables exactly consistent with z."""
+    cfg = SLDAConfig(n_topics=8, vocab_size=64, n_iters=10,
+                     sweeps_per_launch=3, count_rebuild_every=0)
+    corpus, _ = make_slda_corpus(jax.random.PRNGKey(11), 24, 64, 8, 20)
+    state, _ = jax.jit(train_chain, static_argnums=(2,))(
+        jax.random.PRNGKey(12), corpus, cfg)
+    ndt, ntw, nt = counts_from_assignments(corpus.tokens, corpus.mask,
+                                           state.z, cfg.n_topics,
+                                           cfg.vocab_size)
+    np.testing.assert_allclose(np.asarray(state.ndt), np.asarray(ndt), atol=0)
+    np.testing.assert_allclose(np.asarray(state.ntw), np.asarray(ntw), atol=0)
+    np.testing.assert_allclose(np.asarray(state.nt), np.asarray(nt), atol=0)
+
+
+def test_fused_train_chain_learns_signal():
+    """The fused multi-sweep trainer still fits the supervised signal."""
+    cfg = SLDAConfig(n_topics=8, vocab_size=100, n_iters=20, rho=0.25,
+                     sweeps_per_launch=4)
+    corpus, _ = make_slda_corpus(jax.random.PRNGKey(13), 120, 100, 8, 30,
+                                 rho=0.25)
+    _, model = jax.jit(train_chain, static_argnums=(2,))(
+        jax.random.PRNGKey(14), corpus, cfg)
+    assert float(model.train_mse) < 0.6 * float(jnp.var(corpus.y))
