@@ -1,0 +1,249 @@
+"""Before/after wall-clock for the chain-batched parallel algorithms
+(ISSUE 3): end-to-end Simple/Weighted Average at M ∈ {4, 8, 16}.
+
+Baseline — the *vmap path*, reconstructed verbatim below from the
+pre-chain-batching `core/parallel.py`: `jax.vmap(train_chain)` /
+`jax.vmap(predict)` replaying the single-chain functions per chain, two
+separate prediction launches for Weighted Average, at the repo-default
+config (sweeps_per_launch=1 seed semantics).
+
+Chain-batched — `core.parallel.ALGORITHMS` as shipped: the chain_axis
+ops (grid-(M, B) kernels / folded & chain-mapped jnp twins), the fused
+single test+train prediction pass, and the tuned fused-launch defaults
+from BENCH_slda_train.json (sweeps_per_launch=8, product-form
+multi-sweep sampling).  Same TOTAL sweeps on both sides — n_iters
+training sweeps and n_pred_burnin+n_pred_samples prediction sweeps per
+document per chain — and a 3-seed-mean test-MSE guard (within 15% of
+baseline) pins the quality.
+
+Parity rows at M=8 isolate the levers: the chain-batched path at
+sweeps_per_launch=1 (bit-identical sampler to the baseline — pure
+batching + predict-fusion effect) and the vmap baseline at
+sweeps_per_launch=8 (fused launches without chain batching).
+
+All rows run back-to-back in one process, INTERLEAVED round-robin
+min-of-reps (this container shows ~2× cross-run wall-clock swings;
+interleaving exposes every config to the same load profile and the min
+discards interference spikes — the BENCH_slda_train.json methodology).
+Writes BENCH_slda_parallel.json.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_slda_parallel [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import platform
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SLDAConfig, combine, partition, predict, train_chain
+from repro.core.parallel import (run_simple_average, run_weighted_average,
+                                 train_chains)
+from repro.data import make_slda_corpus, train_test_split
+
+
+# --------------------------------------------------------- vmap baseline
+# Verbatim reconstruction of the pre-chain-batching core/parallel.py
+# (PR 2 state), kept here so the "before" column stays measurable after
+# the rewrite: one vmap of the single-chain train/predict per chain and
+# two separate prediction passes for the Weighted Average weights.
+
+def train_chains_vmap(key, shards, cfg):
+    m = shards.tokens.shape[0]
+    keys = jax.random.split(key, m)
+    _, models = jax.vmap(train_chain, in_axes=(0, 0, None))(keys, shards, cfg)
+    return models
+
+
+def predict_chains_vmap(key, models, corpus, cfg):
+    m = models.eta.shape[0]
+    keys = jax.random.split(key, m)
+    return jax.vmap(predict, in_axes=(0, 0, None, None))(keys, models,
+                                                         corpus, cfg)
+
+
+def run_simple_vmap(key, train, test, cfg, m):
+    k1, k2 = jax.random.split(key)
+    models = train_chains_vmap(k1, partition(train, m), cfg)
+    return combine.simple_average(predict_chains_vmap(k2, models, test, cfg))
+
+
+def run_weighted_vmap(key, train, test, cfg, m):
+    k1, k2, k3 = jax.random.split(key, 3)
+    models = train_chains_vmap(k1, partition(train, m), cfg)
+    yhat_te = predict_chains_vmap(k2, models, test, cfg)
+    yhat_tr = predict_chains_vmap(k3, models, train, cfg)
+    mse = ((yhat_tr - train.y[None, :]) ** 2).mean(-1)
+    return combine.weighted_average(yhat_te, train_mse=mse)
+
+
+# ------------------------------------------------------------- harness
+
+def _timed_round_robin(fns, reps):
+    """min-of-`reps`, INTERLEAVED round-robin (see module docstring)."""
+    for fn in fns:                       # warm-up (compile excluded)
+        jax.block_until_ready(fn())      # result dropped — keeps resident
+    best = [float("inf")] * len(fns)     # memory flat across the run
+    for _ in range(reps):
+        for i, fn in enumerate(fns):
+            t0 = time.time()
+            out = fn()
+            jax.block_until_ready(out)
+            best[i] = min(best[i], time.time() - t0)
+    return best
+
+
+def run(quick: bool = False, reps: int = 3):
+    if quick:   # harness smoke for CI — tiny shapes, one rep, one M
+        d_tr, d_te, w, t, n, iters, spl, ms = 64, 32, 128, 8, 16, 6, 3, (2,)
+        reps, probe_seeds = 1, ()
+    else:
+        d_tr, d_te, w, t, n, iters, spl, ms = 320, 192, 1000, 32, 64, 60, \
+            8, (4, 8, 16)
+        probe_seeds = (17, 18)
+    base_cfg = SLDAConfig(n_topics=t, vocab_size=w, rho=0.25, n_iters=iters)
+    tuned_cfg = dataclasses.replace(base_cfg, sweeps_per_launch=spl)
+    corpus, _ = make_slda_corpus(jax.random.PRNGKey(0), d_tr + d_te, w, t,
+                                 n, rho=0.25)
+    train, test = train_test_split(corpus, d_tr)
+    key = jax.random.PRNGKey(7)
+
+    jb_s = jax.jit(run_simple_vmap, static_argnums=(3, 4))
+    jb_w = jax.jit(run_weighted_vmap, static_argnums=(3, 4))
+    jn_s = jax.jit(run_simple_average, static_argnums=(3, 4))
+    jn_w = jax.jit(run_weighted_average, static_argnums=(3, 4))
+    jb_t = jax.jit(train_chains_vmap, static_argnums=(2,))
+    jn_t = jax.jit(train_chains, static_argnums=(2,))
+
+    m8 = ms[1] if len(ms) > 1 else ms[0]
+    rows = []
+    fns = []
+    for m in ms:
+        rows += [("simple", "vmap_spl1", m), ("simple", "batched_tuned", m),
+                 ("weighted", "vmap_spl1", m),
+                 ("weighted", "batched_tuned", m)]
+        fns += [lambda m=m: jb_s(key, train, test, base_cfg, m),
+                lambda m=m: jn_s(key, train, test, tuned_cfg, m),
+                lambda m=m: jb_w(key, train, test, base_cfg, m),
+                lambda m=m: jn_w(key, train, test, tuned_cfg, m)]
+    # parity rows: isolate chain-batching from the fused-launch tuning
+    rows += [("weighted", "batched_spl1", m8), ("weighted", "vmap_spl8", m8),
+             ("train_only", "vmap_spl1", m8),
+             ("train_only", "batched_tuned", m8)]
+    fns += [lambda: jn_w(key, train, test, base_cfg, m8),
+            lambda: jb_w(key, train, test, tuned_cfg, m8),
+            lambda: jb_t(key, partition(train, m8), base_cfg),
+            lambda: jn_t(key, partition(train, m8), tuned_cfg)]
+
+    times = _timed_round_robin(fns, reps=reps)
+    grid = [{"algorithm": a, "impl": i, "chains": m,
+             "seconds": round(s, 4)}
+            for (a, i, m), s in zip(rows, times)]
+
+    # quality probe: 3-seed mean test MSE at the headline point — the
+    # per-seed spread swamps any single-seed comparison
+    def mean_mse(fn, cfg):
+        ys = [fn(jax.random.PRNGKey(s), train, test, cfg, m8)
+              for s in (7,) + probe_seeds]
+        return float(sum(float(jnp.mean((y - test.y) ** 2)) for y in ys)
+                     / len(ys))
+
+    mse_base = mean_mse(jb_w, base_cfg)
+    mse_new = mean_mse(jn_w, tuned_cfg)
+
+    sec = {(a, i, m): s for (a, i, m), s in zip(rows, times)}
+    results = {
+        "weighted_m8_vmap_s": round(sec[("weighted", "vmap_spl1", m8)], 4),
+        "weighted_m8_batched_s": round(
+            sec[("weighted", "batched_tuned", m8)], 4),
+        "weighted_m8_speedup": round(
+            sec[("weighted", "vmap_spl1", m8)]
+            / sec[("weighted", "batched_tuned", m8)], 2),
+        "simple_m8_speedup": round(
+            sec[("simple", "vmap_spl1", m8)]
+            / sec[("simple", "batched_tuned", m8)], 2),
+        "speedup_by_chains": {
+            str(m): round(sec[("weighted", "vmap_spl1", m)]
+                          / sec[("weighted", "batched_tuned", m)], 2)
+            for m in ms},
+        "test_mse_vmap_3seed": round(mse_base, 4),
+        "test_mse_batched_3seed": round(mse_new, 4),
+        "mse_guard_ok": bool(mse_new <= 1.15 * mse_base),
+        "tuned_defaults": {"sweeps_per_launch": spl,
+                           "product_form_sweeps": True,
+                           "fuse_weighted_predict": True},
+    }
+
+    return {
+        "benchmark": "chain-batched parallel sLDA algorithms (ISSUE 3)",
+        "methodology": (
+            f"End-to-end Simple/Weighted Average (train {iters} EM sweeps "
+            f"then predict, {base_cfg.n_pred_burnin}+"
+            f"{base_cfg.n_pred_samples} sweeps/doc/chain) on a synthetic "
+            f"sLDA corpus [D_train={d_tr}, D_test={d_te}, W={w}, T={t}, "
+            f"N={n}] at M in {list(ms)} chains.  Baseline rows "
+            "reconstruct the pre-chain-batching vmap path verbatim "
+            "(jax.vmap(train_chain)/vmap(predict), two prediction "
+            "launches for the Weighted Average weights, repo-default "
+            "sweeps_per_launch=1).  Chain-batched rows run "
+            "core.parallel.ALGORITHMS as shipped: chain_axis ops, ONE "
+            "fused test+train prediction pass, tuned sweeps_per_launch="
+            f"{spl} with product-form multi-sweep sampling "
+            "(BENCH_slda_train.json tuned defaults).  Same total sweeps "
+            "per document on both sides; 3-seed-mean test MSE guard "
+            "within 15% of baseline.  Parity rows at M=8 isolate the "
+            "levers (batched_spl1 = bit-identical sampler to baseline; "
+            "vmap_spl8 = fused launches without chain batching).  All "
+            f"rows jit-compiled, warm-up excluded, MIN of {reps} "
+            "INTERLEAVED round-robin reps in ONE process (~2x container "
+            "interference drift; the min discards spikes); jnp fast "
+            f"paths (use_pallas=False) on {jax.default_backend()}.  "
+            "Expect the ratio to peak at moderate M on small-cache CPU "
+            "hosts: the folded prediction's per-token working set grows "
+            "with M x D rows and falls out of cache around M=16 at these "
+            "shapes (measured: the two-pass unfused batched form is no "
+            "better there — the row fold itself saturates).  The TPU "
+            "chain grid tiles through VMEM and does not have this "
+            "cliff."),
+        "platform": {"backend": jax.default_backend(),
+                     "machine": platform.machine(),
+                     "jax": jax.__version__},
+        "shapes": {"d_train": d_tr, "d_test": d_te, "vocab": w,
+                   "n_topics": t, "doc_len": n, "n_iters": iters,
+                   "pred_sweeps": base_cfg.n_pred_burnin
+                   + base_cfg.n_pred_samples, "chain_grid": list(ms)},
+        "grid": grid,
+        "results": results,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny-shape harness smoke (CI); writes to --out")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default BENCH_slda_parallel.json, "
+                         "or /tmp/BENCH_slda_parallel_quick.json with "
+                         "--quick)")
+    args = ap.parse_args(argv)
+    out = args.out or ("/tmp/BENCH_slda_parallel_quick.json" if args.quick
+                       else "BENCH_slda_parallel.json")
+    payload = run(quick=args.quick, reps=args.reps)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    r = payload["results"]
+    print(f"weighted M=8: vmap {r['weighted_m8_vmap_s']}s -> batched "
+          f"{r['weighted_m8_batched_s']}s ({r['weighted_m8_speedup']}x); "
+          f"by-M {r['speedup_by_chains']}; mse {r['test_mse_vmap_3seed']} "
+          f"-> {r['test_mse_batched_3seed']} (guard_ok="
+          f"{r['mse_guard_ok']}); wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -164,7 +164,8 @@ def _train_chain_fused(k_sweeps: jax.Array, corpus: Corpus,
             inv_len, state.ntw, state.nt, state.eta, seeds,
             alpha=cfg.alpha, beta=cfg.beta, rho=cfg.rho,
             n_sweeps=n_sweeps, supervised=True,
-            doc_block=doc_block, use_pallas=cfg.use_pallas)
+            doc_block=doc_block, use_pallas=cfg.use_pallas,
+            product_form=cfg.product_form_sweeps)
 
         def rebuild(_):
             return counts_from_assignments(corpus.tokens, corpus.mask, z,

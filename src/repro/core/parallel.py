@@ -8,10 +8,20 @@
   weighted-average  M chains; each predicts test AND full train set (for the
                     weights); Eq. (8)-(9) combine
 
-Chains are mapped with `vmap` here (single-host form).  The multi-device
-form — `shard_map` over the mesh's chain axis with zero collectives until
-the final prediction gather — lives in `repro.launch.slda_parallel` and
-reuses these same per-chain functions unchanged.
+Chains are CHAIN-BATCHED here (single-host form): the M independent
+chains run through the `chain_axis` forms of `kernels.ops` — one fused
+launch (or one folded/nested-vmap jnp op) carries all M chains instead
+of replaying the single-chain path under `jax.vmap` per chain
+(DESIGN.md §Chain-batched).  At `sweeps_per_launch=1` the batched EM
+loop reproduces `jax.vmap(train_chain)` BIT-FOR-BIT (same threefry key
+tree, same sweep op order — asserted in tests/test_chain_batched.py);
+at `sweeps_per_launch>1` it is the fused multi-sweep sampler family of
+DESIGN.md §Train-kernel, chain-batched.
+
+The multi-device form — `shard_map` over the mesh's chain axis with
+zero collectives until the final prediction gather, and
+`chains_per_device` local chains per mesh slice riding these same
+chain-batched entry points — lives in `repro.launch.slda_parallel`.
 """
 from __future__ import annotations
 
@@ -19,10 +29,11 @@ import jax
 import jax.numpy as jnp
 
 from . import combine
-from .gibbs import train_chain
+from .gibbs import init_state, phi_hat, train_chain
 from .predict import predict
-from .regression import solve_eta_ols
-from .types import Corpus, SLDAConfig, SLDAModel
+from .regression import solve_eta, solve_eta_ols
+from .types import (Corpus, GibbsState, SLDAConfig, SLDAModel,
+                    apply_count_deltas, counts_from_assignments)
 
 
 def partition(corpus: Corpus, m: int) -> Corpus:
@@ -38,20 +49,183 @@ def partition(corpus: Corpus, m: int) -> Corpus:
                   y=reshape(corpus.y))
 
 
+# ----------------------------------------------- chain-batched training
+
+def _refresh_and_solve(z, ndt, state, shards, cfg, rebuild_now):
+    """Exact global count refresh (rebuild or incremental deltas, both
+    exact) followed by the per-chain η ridge solve — one EM boundary,
+    batched over the chain axis."""
+    def rebuild(_):
+        return jax.vmap(lambda t, m_, zz: counts_from_assignments(
+            t, m_, zz, cfg.n_topics, cfg.vocab_size))(
+            shards.tokens, shards.mask, z)
+
+    def incremental(_):
+        ntw, nt = jax.vmap(apply_count_deltas)(
+            state.ntw, state.nt, shards.tokens, shards.mask, state.z, z)
+        return ndt, ntw, nt
+
+    if isinstance(rebuild_now, bool):
+        ndt, ntw, nt = rebuild(None) if rebuild_now else incremental(None)
+    else:
+        ndt, ntw, nt = jax.lax.cond(rebuild_now, rebuild, incremental, None)
+    lengths = jnp.maximum(shards.mask.sum(-1), 1.0)
+    eta = jax.vmap(lambda nd, l, yy: solve_eta(nd / l[:, None], yy, cfg))(
+        ndt, lengths, shards.y)
+    return GibbsState(z=z, ndt=ndt, ntw=ntw, nt=nt, eta=eta)
+
+
+def _train_chains_seed(k_sweeps, shards, state0, cfg: SLDAConfig):
+    """Chain-batched stochastic EM at sweeps_per_launch=1: per-sweep
+    threefry uniforms, seed-semantics sweep, η solve every sweep —
+    bit-identical to `jax.vmap(train_chain)` (the per-chain key tree and
+    every op are the vmapped ones; only the sweep itself runs through
+    the chain_axis op)."""
+    from repro.kernels import ops  # local import: kernels are optional
+    every = cfg.count_rebuild_every
+    inv_len = 1.0 / jnp.maximum(shards.mask.sum(-1), 1.0)
+
+    def em_step(state, inp):
+        ks, it = inp
+        uniforms = jax.vmap(
+            lambda k: jax.random.uniform(k, shards.tokens.shape[1:]))(ks)
+        z, ndt = ops.slda_gibbs_sweep(
+            shards.tokens, shards.mask, uniforms, state.z, state.ndt,
+            shards.y, inv_len, state.ntw, state.nt, state.eta,
+            alpha=cfg.alpha, beta=cfg.beta, rho=cfg.rho, supervised=True,
+            use_pallas=cfg.use_pallas, chain_axis=True)
+        rebuild_now = (it % every == 0) if every > 0 else False
+        return _refresh_and_solve(z, ndt, state, shards, cfg,
+                                  rebuild_now), None
+
+    keys = jax.vmap(lambda k: jax.random.split(k, cfg.n_iters))(k_sweeps)
+    state, _ = jax.lax.scan(em_step, state0,
+                            (jnp.moveaxis(keys, 0, 1),
+                             jnp.arange(cfg.n_iters)))
+    return state
+
+
+def _train_chains_fused(k_sweeps, shards, state0, cfg: SLDAConfig):
+    """Chain-batched stochastic EM via fused multi-sweep launches: ONE
+    grid-(M, B) kernel launch (or one chain-batched jnp op) runs
+    `sweeps_per_launch` sweeps for ALL chains; the exact global refresh
+    and the η solves happen between launches (chain-batched mirror of
+    `gibbs._train_chain_fused`)."""
+    from repro.kernels import ops  # local import: kernels are optional
+    spl = cfg.sweeps_per_launch
+    every = cfg.count_rebuild_every
+    d_m = shards.tokens.shape[1]
+    doc_block = min(cfg.train_doc_block, -(-d_m // 8) * 8)
+    inv_len = 1.0 / jnp.maximum(shards.mask.sum(-1), 1.0)
+
+    def launch(state, ks, it, n_sweeps: int):
+        seeds = jax.vmap(lambda k: jax.random.randint(
+            k, (d_m,), 0, jnp.iinfo(jnp.int32).max, jnp.int32))(ks)
+        z, ndt = ops.slda_train_sweeps(
+            shards.tokens, shards.mask, state.z, state.ndt, shards.y,
+            inv_len, state.ntw, state.nt, state.eta, seeds,
+            alpha=cfg.alpha, beta=cfg.beta, rho=cfg.rho,
+            n_sweeps=n_sweeps, supervised=True, doc_block=doc_block,
+            use_pallas=cfg.use_pallas,
+            product_form=cfg.product_form_sweeps, chain_axis=True)
+        rebuild_now = (it % every == 0) if every > 0 else False
+        return _refresh_and_solve(z, ndt, state, shards, cfg, rebuild_now)
+
+    n_full, rem = divmod(cfg.n_iters, spl)
+    keys = jax.vmap(lambda k: jax.random.split(
+        k, n_full + (1 if rem else 0)))(k_sweeps)
+    keys = jnp.moveaxis(keys, 0, 1)
+    state = state0
+    if n_full:
+        state, _ = jax.lax.scan(
+            lambda s, inp: (launch(s, inp[0], inp[1], spl), None),
+            state, (keys[:n_full], jnp.arange(n_full)))
+    if rem:  # remainder launch keeps total sweeps == n_iters exactly
+        state = launch(state, keys[-1], jnp.asarray(n_full), rem)
+    return state
+
+
+def _export_models(state: GibbsState, shards: Corpus,
+                   cfg: SLDAConfig) -> SLDAModel:
+    """Per-chain (φ̂, η̂, train MSE/acc) — what crosses the chain boundary."""
+    lengths = jnp.maximum(shards.mask.sum(-1), 1.0)
+    zb = state.ndt / lengths[..., None]
+    yhat = jax.vmap(lambda z, e: z @ e)(zb, state.eta)
+    mse = jax.vmap(lambda yh, yy: jnp.mean((yh - yy) ** 2))(yhat, shards.y)
+    acc = jax.vmap(lambda yh, yy: jnp.mean(
+        ((yh > 0.5) == (yy > 0.5)).astype(jnp.float32)))(yhat, shards.y)
+    phi = jax.vmap(lambda s: phi_hat(s, cfg))(state)
+    return SLDAModel(phi=phi, eta=state.eta, train_mse=mse, train_acc=acc)
+
+
+def train_chains_keyed(keys: jax.Array, shards: Corpus, cfg: SLDAConfig):
+    """Train M independent chains (no communication) from explicit
+    per-chain keys [M] — the entry the multi-device runner uses with
+    fold_in-derived keys.  shards is [M, D/M, ...].  Returns
+    (GibbsState, SLDAModel), each with leading chain dim."""
+    ks = jax.vmap(jax.random.split)(keys)             # [M, 2, key]
+    state0 = jax.vmap(lambda k, c: init_state(k, c, cfg))(ks[:, 0], shards)
+    if cfg.sweeps_per_launch > 1:
+        state = _train_chains_fused(ks[:, 1], shards, state0, cfg)
+    else:
+        state = _train_chains_seed(ks[:, 1], shards, state0, cfg)
+    return state, _export_models(state, shards, cfg)
+
+
 def train_chains(key: jax.Array, shards: Corpus, cfg: SLDAConfig):
     """Train M independent chains (no communication). shards is [M, D/M, ...]."""
     m = shards.tokens.shape[0]
-    keys = jax.random.split(key, m)
-    _, models = jax.vmap(train_chain, in_axes=(0, 0, None))(keys, shards, cfg)
+    _, models = train_chains_keyed(jax.random.split(key, m), shards, cfg)
     return models  # SLDAModel with leading chain dim [M, ...]
+
+
+# --------------------------------------------- chain-batched prediction
+
+def predict_chains_keyed(keys: jax.Array, models: SLDAModel, corpus: Corpus,
+                         cfg: SLDAConfig) -> jnp.ndarray:
+    """Every chain predicts every document of `corpus` → [M, D], from
+    explicit per-chain keys [M].  One chain-batched fused pass: the
+    corpus is SHARED across chains (one token tile per doc block on the
+    kernel path, one folded row-op on the jnp path)."""
+    from repro.kernels import ops  # local import (DESIGN.md §1)
+    D = corpus.n_docs
+    ks = jax.vmap(jax.random.split)(keys)             # [M, 2, key]
+    z0 = jax.vmap(lambda k: jax.random.randint(
+        k, corpus.tokens.shape, 0, cfg.n_topics, jnp.int32))(ks[:, 0])
+    seeds = jax.vmap(lambda k: jax.random.randint(
+        k, (D,), 0, jnp.iinfo(jnp.int32).max, jnp.int32))(ks[:, 1])
+    d_idx = jnp.arange(D)[:, None]
+    ndt0 = jax.vmap(lambda z: jnp.zeros((D, cfg.n_topics), jnp.float32)
+                    .at[d_idx, z].add(corpus.mask))(z0)
+    ndt_avg, _ = ops.slda_predict_sweeps(
+        corpus.tokens, corpus.mask, z0, ndt0, models.phi, seeds,
+        alpha=cfg.alpha, n_burnin=cfg.n_pred_burnin,
+        n_samples=cfg.n_pred_samples, doc_block=cfg.pred_doc_block,
+        use_pallas=cfg.use_pallas, chain_axis=True)
+    zb = jax.vmap(lambda nd: nd / jnp.maximum(corpus.lengths(),
+                                              1.0)[:, None])(ndt_avg)
+    return jax.vmap(lambda z, e: z @ e)(zb, models.eta)   # Eq. (5) per chain
 
 
 def predict_chains(key: jax.Array, models: SLDAModel, corpus: Corpus,
                    cfg: SLDAConfig) -> jnp.ndarray:
     """Every chain predicts every document of `corpus` → [M, D]."""
     m = models.eta.shape[0]
-    keys = jax.random.split(key, m)
-    return jax.vmap(predict, in_axes=(0, 0, None, None))(keys, models, corpus, cfg)
+    return predict_chains_keyed(jax.random.split(key, m), models, corpus,
+                                cfg)
+
+
+def _concat_corpora(a: Corpus, b: Corpus) -> Corpus:
+    """Stack two corpora along the doc axis (padding to a common max_len)
+    so one fused prediction pass covers both."""
+    n = max(a.max_len, b.max_len)
+    padn = lambda x, w: jnp.pad(x, ((0, 0), (0, w))) if w else x
+    return Corpus(
+        tokens=jnp.concatenate([padn(a.tokens, n - a.max_len),
+                                padn(b.tokens, n - b.max_len)]),
+        mask=jnp.concatenate([padn(a.mask, n - a.max_len),
+                              padn(b.mask, n - b.max_len)]),
+        y=jnp.concatenate([a.y, b.y]))
 
 
 # ---------------------------------------------------------------- algorithms
@@ -67,7 +241,7 @@ def run_naive(key, train: Corpus, test: Corpus, cfg: SLDAConfig, m: int):
     k1, k2, k3 = jax.random.split(key, 3)
     shards = partition(train, m)
     keys = jax.random.split(k1, m)
-    states, _ = jax.vmap(train_chain, in_axes=(0, 0, None))(keys, shards, cfg)
+    states, _ = train_chains_keyed(keys, shards, cfg)
 
     # step 3: treat the union of sub-samples as one global sample
     lengths = jnp.maximum(shards.mask.sum(-1), 1.0)          # [M, D/M]
@@ -92,11 +266,19 @@ def run_weighted_average(key, train: Corpus, test: Corpus, cfg: SLDAConfig,
                          m: int, alive=None):
     """The weights use the *full training set* MSE/accuracy of each local
     model (Section III-C(d)) — this extra full-train prediction pass is why
-    the paper reports Weighted Average as the slowest algorithm."""
+    the paper reports Weighted Average as the slowest algorithm.  With
+    `cfg.fuse_weighted_predict` (the default) the test and train passes
+    run as ONE chain-batched fused pass over the concatenated corpus —
+    same sweeps per document, half the sequential token-loop launches."""
     k1, k2, k3 = jax.random.split(key, 3)
     models = train_chains(k1, partition(train, m), cfg)
-    yhat_te = predict_chains(k2, models, test, cfg)          # [M, D_test]
-    yhat_tr = predict_chains(k3, models, train, cfg)         # [M, D_train]
+    if cfg.fuse_weighted_predict:
+        both = _concat_corpora(test, train)
+        yhat = predict_chains(k2, models, both, cfg)         # [M, D_te+D_tr]
+        yhat_te, yhat_tr = yhat[:, :test.n_docs], yhat[:, test.n_docs:]
+    else:
+        yhat_te = predict_chains(k2, models, test, cfg)      # [M, D_test]
+        yhat_tr = predict_chains(k3, models, train, cfg)     # [M, D_train]
     if cfg.label_type == "binary":
         acc = ((yhat_tr > 0.5) == (train.y[None, :] > 0.5)).mean(-1)
         return combine.weighted_average(yhat_te, train_acc=acc, alive=alive)

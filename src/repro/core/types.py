@@ -74,6 +74,31 @@ class SLDAConfig:
                              # faster on CPU (fewer vmap lanes) AND less
                              # delayed (fewer blocks to defer across);
                              # train_chain clamps it to the corpus size.
+    product_form_sweeps: bool = True  # fused multi-sweep launches
+                             # (sweeps_per_launch > 1) sample the
+                             # categorical from the plain product of
+                             # positives times ONE Gaussian exp instead
+                             # of three logs — same distribution, ~3x
+                             # fewer transcendentals per token (the way
+                             # the predict kernel already samples).
+                             # Never applies at sweeps_per_launch=1,
+                             # which keeps the seed log-form bits
+                             # (DESIGN.md §Chain-batched).
+    fuse_weighted_predict: bool = True  # Weighted Average predicts the
+                             # test set and the full training set in ONE
+                             # chain-batched fused pass over the
+                             # concatenated corpus instead of two
+                             # launches — same sweeps per document,
+                             # half the sequential token-loop steps
+                             # (the M x prediction pass is the paper's
+                             # stated dominant cost).
+    chains_per_device: int = 1  # launch-level knob: the shard_map
+                             # runner trains chains_per_device chains
+                             # per mesh slice through the chain-batched
+                             # ops, so M = mesh axis x chains_per_device
+                             # decouples the paper's M from the device
+                             # count (still zero collectives until the
+                             # final prediction gather).
 
 
 @_pytree

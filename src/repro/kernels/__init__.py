@@ -3,10 +3,14 @@
   slda_gibbs      — the paper's hot loop: document-blocked collapsed-Gibbs
                     sweep, topic dim on lanes, doc block on sublanes
   slda_predict    — fused multi-sweep test-time sampler: all prediction
-                    sweeps in one launch, counter-hash in-kernel PRNG
+                    sweeps in one launch, counter-hash in-kernel PRNG;
+                    chain-batched grid (M, blocks) feeding ONE shared
+                    corpus to all M chains (no M-way replication)
   slda_train      — fused multi-sweep TRAINING launch: k sweeps per
                     launch with an in-kernel block-local delayed-count
-                    refresh of the topic-word table (VMEM scratch)
+                    refresh of the topic-word table (VMEM scratch,
+                    segmented one-hot matmul); chain-batched grid
+                    (M, blocks) runs all M chains in one launch
   flash_attention — blocked causal attention with native GQA index maps
   ssd_scan        — Mamba-2 chunked state-space scan (state in VMEM scratch)
   rmsnorm         — fused row-blocked RMSNorm

@@ -16,9 +16,13 @@ from . import ref
 from .flash_attention import flash_attention
 from .rmsnorm import rmsnorm as _rmsnorm_kernel
 from .slda_gibbs import slda_gibbs_sweep_pallas
-from .slda_predict import (slda_predict_sweeps_jnp,
+from .slda_predict import (slda_predict_sweeps_chains_jnp,
+                           slda_predict_sweeps_chains_pallas,
+                           slda_predict_sweeps_jnp,
                            slda_predict_sweeps_pallas)
-from .slda_train import (slda_train_sweeps_jnp,
+from .slda_train import (slda_train_sweeps_chains_jnp,
+                         slda_train_sweeps_chains_pallas,
+                         slda_train_sweeps_jnp,
                          slda_train_sweeps_pallas)
 from .ssd_scan import ssd_scan, ssd_decode_step  # noqa: F401 (re-export)
 
@@ -53,9 +57,23 @@ OPT = {
 
 def slda_gibbs_sweep(tokens, mask, uniforms, z, ndt, y, inv_len, ntw, nt,
                      eta, *, alpha, beta, rho, supervised=True,
-                     doc_block=8, use_pallas=True):
+                     doc_block=8, use_pallas=True, chain_axis=False):
     """Document-parallel sLDA Gibbs sweep. ntw: [T, W] (un-transposed —
-    the row-gather [W, T] layout is an internal kernel detail)."""
+    the row-gather [W, T] layout is an internal kernel detail).
+
+    chain_axis=True runs M independent chains in one call: every array
+    gains a leading chain dim (tokens [M, D, N], ntw [M, T, W], nt/eta
+    [M, T], ...).  Per-chain results are bit-identical to the unbatched
+    call — the jnp route vmaps the per-document oracle over chains and
+    the pallas route batches the kernel's grid (tests assert both
+    against the nested-vmap core sweep exactly)."""
+    if chain_axis:
+        fn = functools.partial(
+            slda_gibbs_sweep, alpha=alpha, beta=beta, rho=rho,
+            supervised=supervised, doc_block=doc_block,
+            use_pallas=use_pallas)
+        return jax.vmap(fn)(tokens, mask, uniforms, z, ndt, y, inv_len,
+                            ntw, nt, eta)
     ntw_t = ntw.T
     if not use_pallas:
         z2, ndt2 = ref.ref_slda_gibbs_sweep(
@@ -82,7 +100,7 @@ def slda_gibbs_sweep(tokens, mask, uniforms, z, ndt, y, inv_len, ntw, nt,
 def slda_train_sweeps(tokens, mask, z0, ndt0, y, inv_len, ntw, nt, eta,
                       seeds, *, alpha, beta, rho, n_sweeps, supervised=True,
                       doc_block=8, use_pallas=True, tpu_prng=False,
-                      unroll=8):
+                      unroll=8, product_form=False, chain_axis=False):
     """`n_sweeps` training Gibbs sweeps in one fused launch per doc block.
 
     ntw: [T, W] (un-transposed — the row-gather [W, T] layout is an
@@ -92,7 +110,22 @@ def slda_train_sweeps(tokens, mask, z0, ndt0, y, inv_len, ntw, nt, eta,
     across blocks, DESIGN.md §Train-kernel) — the caller applies the
     exact global refresh from (z0, z_final) afterwards, e.g. via
     `core.types.apply_count_deltas`.  At n_sweeps=1 the launch is exactly
-    one seed-semantics sweep.
+    one seed-semantics sweep (keep product_form=False there to preserve
+    the seed sampling bits).
+
+    product_form=True samples the categorical from the plain product of
+    positives times one Gaussian `exp` instead of three `log`s — same
+    distribution, cheaper transcendentals; the multi-sweep fused chain
+    path enables it via `SLDAConfig.product_form_sweeps` (see
+    slda_train.py).  Kernel, twin and oracle share either form
+    bit-for-bit.
+
+    chain_axis=True runs M independent chains in ONE launch — the
+    chain-batched form (DESIGN.md §Chain-batched): every array gains a
+    leading chain dim (tokens [M, D, N], ntw [M, T, W], nt/eta [M, T],
+    seeds [M, D], ...), the pallas route becomes one grid-(M, B) kernel
+    launch, and each chain's result is bit-identical to its unbatched
+    call.
 
     use_pallas=False routes to the blocked-jnp fast path, bit-identical
     to the interpret-mode kernel (shared counter-hash PRNG + op order).
@@ -100,25 +133,33 @@ def slda_train_sweeps(tokens, mask, z0, ndt0, y, inv_len, ntw, nt, eta,
     count granularity), so both routes pad D to a doc_block multiple and
     share the same block partition.
     """
-    ntw_t = ntw.T
-    D = tokens.shape[0]
+    d_axis = 1 if chain_axis else 0
+    ntw_t = jnp.swapaxes(ntw, -1, -2)
+    D = tokens.shape[d_axis]
     pad = (-D) % doc_block
     if pad:
-        pad2 = lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+        pad2 = lambda a: jnp.pad(
+            a, ((0, 0),) * d_axis + ((0, pad),)
+            + ((0, 0),) * (a.ndim - 1 - d_axis))
         tokens, mask, z0, ndt0, y, inv_len, seeds = map(
             pad2, (tokens, mask, z0, ndt0, y, inv_len, seeds))
     kw = dict(alpha=alpha, beta=beta, rho=rho, supervised=supervised,
-              n_sweeps=n_sweeps, doc_block=doc_block)
+              n_sweeps=n_sweeps, doc_block=doc_block,
+              product_form=product_form)
     if use_pallas:
-        z2, ndt2 = slda_train_sweeps_pallas(
-            tokens, mask, seeds, z0, ndt0, y, inv_len, ntw_t, nt, eta,
-            interpret=_interpret(), tpu_prng=tpu_prng, **kw)
+        fn = (slda_train_sweeps_chains_pallas if chain_axis
+              else slda_train_sweeps_pallas)
+        z2, ndt2 = fn(tokens, mask, seeds, z0, ndt0, y, inv_len, ntw_t,
+                      nt, eta, interpret=_interpret(), tpu_prng=tpu_prng,
+                      **kw)
     else:
-        z2, ndt2 = slda_train_sweeps_jnp(
-            tokens, mask, seeds, z0, ndt0, y, inv_len, ntw_t, nt, eta,
-            unroll=unroll, **kw)
+        fn = (slda_train_sweeps_chains_jnp if chain_axis
+              else slda_train_sweeps_jnp)
+        z2, ndt2 = fn(tokens, mask, seeds, z0, ndt0, y, inv_len, ntw_t,
+                      nt, eta, unroll=unroll, **kw)
     if pad:
-        z2, ndt2 = z2[:D], ndt2[:D]
+        sl = (slice(None),) * d_axis + (slice(None, D),)
+        z2, ndt2 = z2[sl], ndt2[sl]
     return z2, ndt2
 
 
@@ -126,12 +167,21 @@ def slda_train_sweeps(tokens, mask, z0, ndt0, y, inv_len, ntw, nt, eta,
 
 def slda_predict_sweeps(tokens, mask, z0, ndt0, phi, seeds, *, alpha,
                         n_burnin, n_samples, doc_block=8, use_pallas=True,
-                        tpu_prng=False):
+                        tpu_prng=False, chain_axis=False):
     """All `n_burnin + n_samples` test-time Gibbs sweeps in one fused pass.
 
     phi: [T, W] (un-transposed — the row-gather [W, T] layout is an
     internal kernel detail); seeds: int32 [D] per-document PRNG seeds.
     Returns (ndt_avg [D, T], z_final [D, N]).
+
+    chain_axis=True is the chain-batched form (DESIGN.md §Chain-batched):
+    phi [M, T, W], seeds [M, D], z0 [M, D, N], ndt0 [M, D, T], while
+    tokens/mask may stay [D, N] — the corpus every chain predicts is
+    SHARED, so the pallas route reads one token tile per doc block for
+    all M chains (grid (M, B)) and the jnp route folds the chains into
+    the document-row axis around one stacked [M·W, T] table.  Per-chain
+    results are bit-identical to the unbatched call; returns
+    (ndt_avg [M, D, T], z_final [M, D, N]).
 
     use_pallas=False routes to the batched-jnp fast path, which is
     bit-identical to the interpret-mode kernel (shared counter-hash PRNG
@@ -140,22 +190,38 @@ def slda_predict_sweeps(tokens, mask, z0, ndt0, phi, seeds, *, alpha,
     per-document seeds are honored only by the hash path, and results are
     not reproducible against it).
     """
-    phi_t = phi.T
+    phi_t = jnp.swapaxes(phi, -1, -2)
     kw = dict(alpha=alpha, n_burnin=n_burnin, n_samples=n_samples)
     if not use_pallas:
-        return slda_predict_sweeps_jnp(tokens, mask, seeds, z0, ndt0,
-                                       phi_t, **kw)
-    D = tokens.shape[0]
+        fn = (slda_predict_sweeps_chains_jnp if chain_axis
+              else slda_predict_sweeps_jnp)
+        return fn(tokens, mask, seeds, z0, ndt0, phi_t, **kw)
+    d_axis = 1 if chain_axis else 0
+    D = z0.shape[d_axis]
     pad = (-D) % doc_block
     if pad:
-        pad2 = lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
-        tokens, mask, z0, ndt0, seeds = map(pad2,
-                                            (tokens, mask, z0, ndt0, seeds))
-    ndt_avg, z_final = slda_predict_sweeps_pallas(
-        tokens, mask, seeds, z0, ndt0, phi_t, doc_block=doc_block,
-        interpret=_interpret(), tpu_prng=tpu_prng, **kw)
+        padk = lambda k: lambda a: jnp.pad(
+            a, ((0, 0),) * k + ((0, pad),) + ((0, 0),) * (a.ndim - 1 - k))
+        tokens, mask = map(padk(tokens.ndim - 2), (tokens, mask))
+        z0, ndt0, seeds = map(padk(d_axis), (z0, ndt0, seeds))
+    if chain_axis:
+        if tokens.ndim == 3:   # per-chain corpora: fall back to batching
+            fn = functools.partial(
+                slda_predict_sweeps_pallas, doc_block=doc_block,
+                interpret=_interpret(), tpu_prng=tpu_prng, **kw)
+            ndt_avg, z_final = jax.vmap(fn)(tokens, mask, seeds, z0, ndt0,
+                                            phi_t)
+        else:
+            ndt_avg, z_final = slda_predict_sweeps_chains_pallas(
+                tokens, mask, seeds, z0, ndt0, phi_t, doc_block=doc_block,
+                interpret=_interpret(), tpu_prng=tpu_prng, **kw)
+    else:
+        ndt_avg, z_final = slda_predict_sweeps_pallas(
+            tokens, mask, seeds, z0, ndt0, phi_t, doc_block=doc_block,
+            interpret=_interpret(), tpu_prng=tpu_prng, **kw)
     if pad:
-        ndt_avg, z_final = ndt_avg[:D], z_final[:D]
+        sl = (slice(None),) * d_axis + (slice(None, D),)
+        ndt_avg, z_final = ndt_avg[sl], z_final[sl]
     return ndt_avg, z_final
 
 

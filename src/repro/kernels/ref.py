@@ -16,13 +16,17 @@ from repro.mathutil import upper_tri_ones
 # ------------------------------------------------------------- slda_gibbs
 
 def ref_slda_gibbs_sweep(tokens, mask, uniforms, z, ndt, y, inv_len,
-                         ntw_t, nt, eta, alpha, beta, rho, supervised: bool):
+                         ntw_t, nt, eta, alpha, beta, rho, supervised: bool,
+                         *, product_form: bool = False):
     """Document-parallel sLDA Gibbs sweep with sweep-frozen ntw (AD-LDA).
 
     tokens/mask/uniforms/z : [D, N]; ndt [D, T]; y/inv_len [D];
     ntw_t [W, T] (note: transposed — row-gather layout); nt [T]; eta [T].
     Returns (z_new [D, N], ndt_new [D, T]).
-    Matches repro.core.gibbs._doc_sweep exactly.
+    Matches repro.core.gibbs._doc_sweep exactly at product_form=False;
+    product_form=True samples the same categorical from the plain product
+    of positives times one Gaussian `exp` (the fused multi-sweep form —
+    see slda_train.py module docstring).
     """
     T = ndt.shape[-1]
     W = ntw_t.shape[0]
@@ -38,13 +42,21 @@ def ref_slda_gibbs_sweep(tokens, mask, uniforms, z, ndt, y, inv_len,
             old = (topic_iota == z_old).astype(jnp.float32) * m
             ndt_d = ndt_d - old
             s = s - eta[z_old] * m
-            logp = (jnp.log(ndt_d + alpha)
-                    + jnp.log(ntw_t[w] - old + beta)
-                    - jnp.log(nt - old + W * beta))
-            if supervised:
-                mu_t = (s + eta) * il_d
-                logp = logp - 0.5 * (y_d - mu_t) ** 2 / rho
-            p = jnp.exp(logp - jnp.max(logp))
+            if product_form:
+                p = (ndt_d + alpha) * (ntw_t[w] - old + beta) \
+                    / (nt - old + W * beta)
+                if supervised:
+                    mu_t = (s + eta) * il_d
+                    g = -0.5 * (y_d - mu_t) ** 2 / rho
+                    p = p * jnp.exp(g - jnp.max(g))
+            else:
+                logp = (jnp.log(ndt_d + alpha)
+                        + jnp.log(ntw_t[w] - old + beta)
+                        - jnp.log(nt - old + W * beta))
+                if supervised:
+                    mu_t = (s + eta) * il_d
+                    logp = logp - 0.5 * (y_d - mu_t) ** 2 / rho
+                p = jnp.exp(logp - jnp.max(logp))
             c = jnp.dot(p, tri_u)    # prefix sums, rounding-matched to kernel
             z_new = jnp.sum((c < u * c[-1]).astype(jnp.int32))
             z_new = jnp.where(m > 0, z_new, z_old).astype(jnp.int32)
@@ -62,7 +74,8 @@ def ref_slda_gibbs_sweep(tokens, mask, uniforms, z, ndt, y, inv_len,
 
 def ref_slda_train_sweeps(tokens, mask, uniforms, z0, ndt0, y, inv_len,
                           ntw_t, nt, eta, alpha, beta, rho,
-                          supervised: bool, doc_block: int):
+                          supervised: bool, doc_block: int,
+                          *, product_form: bool = False):
     """Fused multi-sweep TRAINING oracle with EXPLICIT uniforms and the
     per-block delayed-count refresh semantics (DESIGN.md §Train-kernel).
 
@@ -98,7 +111,8 @@ def ref_slda_train_sweeps(tokens, mask, uniforms, z0, ndt0, y, inv_len,
             z_b, ndt_b, ntw_loc, nt_loc = carry
             z_new, ndt_new = ref_slda_gibbs_sweep(
                 tok_b, mask_b, us_s, z_b, ndt_b, y_b, il_b,
-                ntw_loc, nt_loc, eta, alpha, beta, rho, supervised)
+                ntw_loc, nt_loc, eta, alpha, beta, rho, supervised,
+                product_form=product_form)
             zo, zn = z_b.ravel(), z_new.ravel()
             changed = mask_b.ravel() * (zn != zo).astype(jnp.float32)
             ntw_loc = (ntw_loc.at[w_flat, zo].add(-changed)
@@ -116,6 +130,23 @@ def ref_slda_train_sweeps(tokens, mask, uniforms, z0, ndt0, y, inv_len,
         blk(inv_len))
     z_fin = z_fin.reshape(D + pad, N)[:D]
     return z_fin.astype(jnp.int32), ndt_fin.reshape(D + pad, T)[:D]
+
+
+def ref_slda_train_sweeps_chains(tokens, mask, uniforms, z0, ndt0, y,
+                                 inv_len, ntw_t, nt, eta, alpha, beta, rho,
+                                 supervised: bool, doc_block: int,
+                                 *, product_form: bool = False):
+    """Chain-batched training oracle: a plain vmap of the single-chain
+    oracle over the leading chain dim — the clearest statement of the
+    semantics the chain-gridded kernel and twin must reproduce (each
+    chain evolves exactly as if launched alone).  All inputs carry a
+    leading M: tokens [M, D, N], uniforms [M, D, S, N], ntw_t [M, W, T],
+    nt/eta [M, T], ..."""
+    fn = lambda *a: ref_slda_train_sweeps(
+        *a, alpha, beta, rho, supervised, doc_block,
+        product_form=product_form)
+    return jax.vmap(fn)(tokens, mask, uniforms, z0, ndt0, y, inv_len,
+                        ntw_t, nt, eta)
 
 
 # ----------------------------------------------------------- slda_predict
@@ -168,6 +199,17 @@ def ref_slda_predict_sweeps(tokens, mask, uniforms, z0, ndt0, phi_t,
         return acc * np.float32(1.0 / n_samples), z_d
 
     return jax.vmap(doc)(tokens, mask, uniforms, z0, ndt0)
+
+
+def ref_slda_predict_sweeps_chains(tokens, mask, uniforms, z0, ndt0, phi_t,
+                                   alpha, n_burnin: int):
+    """Chain-batched prediction oracle: vmap of the single-chain oracle
+    over the leading chain dim.  tokens/mask [D, N] are SHARED across
+    chains (the corpus every chain predicts); uniforms [M, D, S, N];
+    z0 [M, D, N]; ndt0 [M, D, T]; phi_t [M, W, T]."""
+    fn = lambda us, z, nd, ph: ref_slda_predict_sweeps(
+        tokens, mask, us, z, nd, ph, alpha, n_burnin)
+    return jax.vmap(fn)(uniforms, z0, ndt0, phi_t)
 
 
 # -------------------------------------------------------- flash_attention

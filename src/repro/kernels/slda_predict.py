@@ -94,7 +94,7 @@ def predict_uniforms(seeds, n_sweeps: int, n_tokens: int):
 def _predict_kernel(tokens_ref, mask_ref, seed_ref, z_ref, ndt_ref, phi_t_ref,
                     z_out_ref, avg_ref,
                     *, alpha: float, n_burnin: int, n_samples: int,
-                    n_tokens: int, tpu_prng: bool):
+                    n_tokens: int, tpu_prng: bool, chain_grid: bool = False):
     phi_t = phi_t_ref[...]                    # [W, T] resident in VMEM
     seeds = seed_ref[:, 0]                    # [DB]
     T = phi_t.shape[1]
@@ -105,11 +105,14 @@ def _predict_kernel(tokens_ref, mask_ref, seed_ref, z_ref, ndt_ref, phi_t_ref,
         # one hardware stream per DOC BLOCK (the per-core PRNG is stateful,
         # so per-document seeds cannot be honored here — only the portable
         # hash path keeps that contract).  Mix the block's first seed with
-        # the grid position through the murmur finalizer so that distinct
-        # blocks get structurally uncorrelated streams (a plain
-        # `seed + program_id` collides whenever s_i + i == s_j + j).
+        # the (flattened) grid position through the murmur finalizer so
+        # that distinct blocks get structurally uncorrelated streams (a
+        # plain `seed + program_id` collides whenever s_i + i == s_j + j).
+        pid = pl.program_id(0)
+        if chain_grid:
+            pid = pid * pl.num_programs(1) + pl.program_id(1)
         mixed = seed_ref[0, 0].astype(jnp.uint32) ^ (
-            pl.program_id(0).astype(jnp.uint32) * _GOLDEN)
+            pid.astype(jnp.uint32) * _GOLDEN)
         mixed = (mixed ^ (mixed >> 16)) * _MIX1
         mixed = (mixed ^ (mixed >> 13)) * _MIX2
         pltpu.prng_seed((mixed ^ (mixed >> 16)).astype(jnp.int32))
@@ -188,6 +191,96 @@ def slda_predict_sweeps_pallas(tokens, mask, seeds, z0, ndt0, phi_t, *,
         interpret=interpret,
     )(tokens, mask, seeds[:, None], z0, ndt0, phi_t)
     return ndt_avg, z_final
+
+
+def slda_predict_sweeps_chains_pallas(tokens, mask, seeds, z0, ndt0, phi_t,
+                                      *, alpha, n_burnin, n_samples,
+                                      doc_block=8, interpret=True,
+                                      tpu_prng=False):
+    """Chain-batched fused prediction: grid (M, D/doc_block), ONE launch
+    for all M chains of the paper's parallel algorithms.
+
+    tokens/mask: [D, N] — SHARED across chains: the token/mask BlockSpecs
+    ignore the chain grid index, so ONE [D, N] corpus feeds all M chains
+    instead of an M-way replicated [M, D, N] copy (the Weighted Average
+    work-set is the test set plus the full training set, re-swept once
+    per chain — the paper's stated dominant cost).  The chain axis is
+    the OUTER grid dim, so each chain's φ̂ block stays resident across
+    that chain's doc blocks (the [W, T] table is the large operand; the
+    [doc_block, N] token tile is re-fetched per grid step either way).
+    Per-chain state rides `None`-squeezed specs: seeds [M, D]; z0
+    [M, D, N]; ndt0 [M, D, T]; phi_t [M, W, T].  The kernel body is
+    EXACTLY `_predict_kernel`, so each chain's output is bit-identical
+    to its single-chain launch.
+    Returns (ndt_avg [M, D, T], z_final [M, D, N]).
+    """
+    D, N = tokens.shape
+    M = phi_t.shape[0]
+    T = ndt0.shape[-1]
+    W = phi_t.shape[1]
+    assert D % doc_block == 0, (D, doc_block)
+    grid = (M, D // doc_block)
+
+    shared = lambda cols: pl.BlockSpec((doc_block, cols),
+                                       lambda c, i: (i, 0))
+    cdoc = lambda cols: pl.BlockSpec((None, doc_block, cols),
+                                     lambda c, i: (c, i, 0))
+    cfull = lambda shape: pl.BlockSpec(
+        (None,) + shape, lambda c, i: (c,) + tuple(0 for _ in shape))
+
+    kernel = functools.partial(
+        _predict_kernel, alpha=float(alpha), n_burnin=int(n_burnin),
+        n_samples=int(n_samples), n_tokens=N, tpu_prng=tpu_prng,
+        chain_grid=True)
+
+    z_final, ndt_avg = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[shared(N), shared(N), cdoc(1),
+                  cdoc(N), cdoc(T), cfull((W, T))],
+        out_specs=[cdoc(N), cdoc(T)],
+        out_shape=[jax.ShapeDtypeStruct((M, D, N), jnp.int32),
+                   jax.ShapeDtypeStruct((M, D, T), jnp.float32)],
+        interpret=interpret,
+    )(tokens, mask, seeds[..., None], z0, ndt0, phi_t)
+    return ndt_avg, z_final
+
+
+def slda_predict_sweeps_chains_jnp(tokens, mask, seeds, z0, ndt0, phi_t, *,
+                                   alpha, n_burnin, n_samples, unroll=8):
+    """Chain-batched jnp twin: FOLD the chain axis into the document-row
+    axis around one stacked table.
+
+    Prediction's tables are frozen, so M chains over D documents are the
+    same computation as one chain over M·D documents against a stacked
+    `[M·W, T]` φ̂ with per-chain token-id offsets `w + c·W` — every
+    per-token op becomes one flat [M·D, T] row op (flat row gather, one
+    gemm) instead of M vmapped lanes with batched-operand gathers.
+    Per-document ops are row-independent (the same property the
+    kernel-vs-twin block tests already rely on), so the fold is
+    bit-identical to vmapping the single-chain twin over chains
+    (asserted in tests/test_chain_batched.py).
+
+    tokens/mask: [D, N] (shared) or [M, D, N]; seeds [M, D]; z0
+    [M, D, N]; ndt0 [M, D, T]; phi_t [M, W, T].
+    Returns (ndt_avg [M, D, T], z_final [M, D, N]).
+    """
+    M, W, T = phi_t.shape
+    if tokens.ndim == 2:
+        D, N = tokens.shape
+        off = (jnp.arange(M, dtype=jnp.int32) * W)[:, None, None]
+        tok_f = (tokens[None] + off).reshape(M * D, N)
+        mask_f = jnp.broadcast_to(mask, (M, D, N)).reshape(M * D, N)
+    else:
+        _, D, N = tokens.shape
+        off = (jnp.arange(M, dtype=jnp.int32) * W)[:, None, None]
+        tok_f = (tokens + off).reshape(M * D, N)
+        mask_f = mask.reshape(M * D, N)
+    ndt_avg, z_final = slda_predict_sweeps_jnp(
+        tok_f, mask_f, seeds.reshape(M * D), z0.reshape(M * D, N),
+        ndt0.reshape(M * D, T), phi_t.reshape(M * W, T),
+        alpha=alpha, n_burnin=n_burnin, n_samples=n_samples, unroll=unroll)
+    return ndt_avg.reshape(M, D, T), z_final.reshape(M, D, N)
 
 
 def slda_predict_sweeps_jnp(tokens, mask, seeds, z0, ndt0, phi_t, *,

@@ -29,24 +29,43 @@ and applying the block's own ±1 deltas between the sweeps of one launch:
     its local copy — exact per block, delayed across blocks until the
     launch ends and the host applies the exact global
     `apply_count_deltas(z_launch_start, z_final)` refresh;
-  * only changed tokens pay: the per-token refresh row-update is skipped
-    with `pl.when` when no document in the block moved that token
-    (Magnusson et al.: the count-update cost is dominated by unchanged
-    tokens, which late in sampling is nearly all of them).
+  * the refresh is a **segmented one-hot matmul**: per token position the
+    block's ±1 topic deltas land on the local table through one
+    `[W, DB]·[DB, T]` contraction (an MXU op on TPU) instead of a
+    sequential per-document row-update loop; a `pl.when` skips the
+    contraction whenever no document in the block moved that token
+    (Magnusson et al.: late in sampling nearly all tokens are unchanged).
+    All products and partial sums are 0/±1 integers far below 2^24, so
+    the matmul totals are EXACT and bit-identical to the twin's and
+    oracle's scatter-adds regardless of accumulation order.
 
-At ``n_sweeps=1`` no in-launch refresh happens and the launch is exactly
-one seed-semantics sweep (bitwise: tests/test_train_kernel.py asserts
-agreement with the single-sweep `slda_gibbs` kernel under shared
-uniforms).
+**Sampling form** — two, selected by ``product_form``:
 
-All count arithmetic is ±1.0 in float32 — exact below 2^24 — so the
-kernel's sequential row updates, the jnp twin's scatter-adds, and the
-oracle's scatter-adds produce bit-identical tables regardless of
-accumulation order.
+  * log form (``product_form=False``, the seed semantics): p ∝
+    exp(log(N_dt+α) + log(N_tw+β) − log(N_t+Wβ) − (y−μ)²/2ρ − max).
+    `n_sweeps=1` launches keep this form so a single-sweep launch is
+    exactly one seed-semantics sweep (bitwise: tests/test_train_kernel.py
+    asserts agreement with the single-sweep `slda_gibbs` kernel under
+    shared uniforms).
+  * product form (``product_form=True``, the multi-sweep default):
+    p ∝ (N_dt+α)·(N_tw+β)/(N_t+Wβ) · exp(g − max g) with
+    g = −(y−μ_t)²/2ρ — the same categorical distribution (the inverse
+    CDF normalizes away the scale) sampled from one `exp` per token
+    instead of three `log`s, exactly how the predict kernel already
+    samples its (unsupervised) product of positives.  Multi-sweep
+    launches are already their own sampler family (counter-hash PRNG,
+    block-delayed counts — statistically equivalent, not bit-equal to
+    seed), so the cheaper form changes no contract; kernel, twin and
+    oracle share it bit-for-bit.
 
-Grid: (D / doc_block,).  `ref.ref_slda_train_sweeps` is the oracle;
+Grids: ``(D/doc_block,)`` single-chain, ``(M, D/doc_block)`` in the
+chain-batched form (`slda_train_sweeps_chains_pallas`): the leading grid
+dimension walks the M independent chains of the paper's parallel
+algorithms, each grid cell reading ITS chain's `ntw/nt/eta/seed` blocks
+(`None`-squeezed BlockSpecs).  `ref.ref_slda_train_sweeps` is the oracle;
 `slda_train_sweeps_jnp` below is the bit-identical blocked-jnp CPU fast
-path (what the benchmarks measure on this container).
+path (what the benchmarks measure on this container) and
+`slda_train_sweeps_chains_jnp` its chain-batched form.
 """
 from __future__ import annotations
 
@@ -79,7 +98,7 @@ def _train_kernel(tokens_ref, mask_ref, seed_ref, z_ref, ndt_ref, y_ref,
                   z_out_ref, ndt_out_ref, ntw_scratch,
                   *, alpha: float, beta: float, rho: float, supervised: bool,
                   n_sweeps: int, n_tokens: int, vocab_size: int,
-                  tpu_prng: bool):
+                  tpu_prng: bool, product_form: bool, chain_grid: bool):
     eta = eta_ref[0, :]                       # [T]
     seeds = seed_ref[:, 0]                    # [DB]
     y = y_ref[:, 0]                           # [DB]
@@ -90,11 +109,14 @@ def _train_kernel(tokens_ref, mask_ref, seed_ref, z_ref, ndt_ref, y_ref,
     tri_u = upper_tri_ones(T)
 
     if tpu_prng:
-        # one hardware stream per doc block, murmur-mixed with the grid
-        # index (same caveats as the predict kernel: the per-DOCUMENT seed
-        # contract holds only on the portable hash path)
+        # one hardware stream per doc block, murmur-mixed with the
+        # (flattened) grid index (same caveats as the predict kernel: the
+        # per-DOCUMENT seed contract holds only on the portable hash path)
+        pid = pl.program_id(0)
+        if chain_grid:
+            pid = pid * pl.num_programs(1) + pl.program_id(1)
         mixed = seed_ref[0, 0].astype(jnp.uint32) ^ (
-            pl.program_id(0).astype(jnp.uint32) * _GOLDEN)
+            pid.astype(jnp.uint32) * _GOLDEN)
         mixed = (mixed ^ (mixed >> 16)) * _MIX1
         mixed = (mixed ^ (mixed >> 13)) * _MIX2
         pltpu.prng_seed((mixed ^ (mixed >> 16)).astype(jnp.int32))
@@ -126,14 +148,22 @@ def _train_kernel(tokens_ref, mask_ref, seed_ref, z_ref, ndt_ref, y_ref,
             st = st - jnp.take(eta, z_old) * m
 
             ntw_w = jnp.take(ntw_t, w, axis=0) - old    # [DB, T], -dn exact
-            logp = (jnp.log(ndt + alpha)
-                    + jnp.log(ntw_w + beta)
-                    - jnp.log(nt[None, :] - old + vocab_size * beta))
-            if supervised:
-                mu_t = (st[:, None] + eta[None, :]) * inv_len[:, None]
-                logp = logp - 0.5 * (y[:, None] - mu_t) ** 2 / rho
+            if product_form:
+                p = (ndt + alpha) * (ntw_w + beta) \
+                    / (nt[None, :] - old + vocab_size * beta)
+                if supervised:
+                    mu_t = (st[:, None] + eta[None, :]) * inv_len[:, None]
+                    g = -0.5 * (y[:, None] - mu_t) ** 2 / rho
+                    p = p * jnp.exp(g - jnp.max(g, axis=1, keepdims=True))
+            else:
+                logp = (jnp.log(ndt + alpha)
+                        + jnp.log(ntw_w + beta)
+                        - jnp.log(nt[None, :] - old + vocab_size * beta))
+                if supervised:
+                    mu_t = (st[:, None] + eta[None, :]) * inv_len[:, None]
+                    logp = logp - 0.5 * (y[:, None] - mu_t) ** 2 / rho
+                p = jnp.exp(logp - jnp.max(logp, axis=1, keepdims=True))
 
-            p = jnp.exp(logp - jnp.max(logp, axis=1, keepdims=True))
             c = jnp.dot(p, tri_u)                       # prefix sums
             z_new = jnp.sum((c < (u * c[:, -1])[:, None]).astype(jnp.int32),
                             axis=1)
@@ -147,12 +177,19 @@ def _train_kernel(tokens_ref, mask_ref, seed_ref, z_ref, ndt_ref, y_ref,
 
         ndt, _ = jax.lax.fori_loop(0, n_tokens, token_step, (ndt_start, s0))
 
-        # block-local delayed-count refresh: ±1 row updates for the tokens
-        # THIS block reassigned this sweep.  Skipped after the final sweep
-        # (the local table is not an output) and — per token — whenever no
+        # block-local delayed-count refresh as a segmented one-hot matmul:
+        # for each token position the block's ±1 topic deltas reach the
+        # local table through one [W, DB]·[DB, T] contraction — 0/±1
+        # integer products with integer partial sums ≪ 2^24, so the totals
+        # are EXACT and order-independent (bit-identical to the twin's and
+        # oracle's scatter-adds).  Skipped after the final sweep (the
+        # local table is not an output) and — per token — whenever no
         # document in the block moved (the common case late in sampling).
         @pl.when(s < n_sweeps - 1)
         def _refresh():
+            vocab_iota = jax.lax.broadcasted_iota(
+                jnp.int32, (vocab_size, DB), 0)
+
             def refresh_token(n, _):
                 w = tokens_ref[:, n]
                 m = mask_ref[:, n]
@@ -161,20 +198,14 @@ def _train_kernel(tokens_ref, mask_ref, seed_ref, z_ref, ndt_ref, y_ref,
                 moved = (zo != zn) & (m > 0)
 
                 @pl.when(jnp.any(moved))
-                def _rows():
-                    def refresh_doc(d, __):
-                        @pl.when(moved[d])
-                        def _upd():
-                            row = pl.load(ntw_scratch,
-                                          (pl.dslice(w[d], 1), slice(None)))
-                            dvec = ((topic_iota == zn[d]).astype(jnp.float32)
-                                    - (topic_iota == zo[d])
-                                    .astype(jnp.float32))
-                            pl.store(ntw_scratch,
-                                     (pl.dslice(w[d], 1), slice(None)),
-                                     row + dvec)
-                        return 0
-                    jax.lax.fori_loop(0, DB, refresh_doc, 0)
+                def _mm():
+                    mv = moved.astype(jnp.float32)            # [DB]
+                    sel = (vocab_iota == w[None, :]) \
+                        .astype(jnp.float32)                  # [W, DB]
+                    dvec = ((topic_iota == zn[:, None]).astype(jnp.float32)
+                            - (topic_iota == zo[:, None])
+                            .astype(jnp.float32)) * mv[:, None]  # [DB, T]
+                    ntw_scratch[...] = ntw_scratch[...] + jnp.dot(sel, dvec)
                 return 0
             jax.lax.fori_loop(0, n_tokens, refresh_token, 0)
 
@@ -190,7 +221,8 @@ def _train_kernel(tokens_ref, mask_ref, seed_ref, z_ref, ndt_ref, y_ref,
 def slda_train_sweeps_pallas(tokens, mask, seeds, z0, ndt0, y, inv_len,
                              ntw_t, nt, eta, *, alpha, beta, rho,
                              supervised=True, n_sweeps=1, doc_block=8,
-                             interpret=True, tpu_prng=False):
+                             interpret=True, tpu_prng=False,
+                             product_form=False):
     """All `n_sweeps` training sweeps for a doc block in ONE launch.
 
     tokens/mask/z0: [D, N]; seeds: int32 [D]; ndt0: [D, T]; y/inv_len: [D];
@@ -210,7 +242,8 @@ def slda_train_sweeps_pallas(tokens, mask, seeds, z0, ndt0, y, inv_len,
     kernel = functools.partial(
         _train_kernel, alpha=float(alpha), beta=float(beta), rho=float(rho),
         supervised=supervised, n_sweeps=int(n_sweeps), n_tokens=N,
-        vocab_size=W, tpu_prng=tpu_prng)
+        vocab_size=W, tpu_prng=tpu_prng, product_form=product_form,
+        chain_grid=False)
 
     return pl.pallas_call(
         kernel,
@@ -227,10 +260,57 @@ def slda_train_sweeps_pallas(tokens, mask, seeds, z0, ndt0, y, inv_len,
       ntw_t, nt[None, :], eta[None, :])
 
 
+def slda_train_sweeps_chains_pallas(tokens, mask, seeds, z0, ndt0, y,
+                                    inv_len, ntw_t, nt, eta, *, alpha, beta,
+                                    rho, supervised=True, n_sweeps=1,
+                                    doc_block=8, interpret=True,
+                                    tpu_prng=False, product_form=False):
+    """Chain-batched fused train launch: grid (M, D/doc_block).
+
+    One pallas_call runs all M independent chains: tokens/mask/z0
+    [M, D, N]; seeds [M, D]; ndt0 [M, D, T]; y/inv_len [M, D]; ntw_t
+    [M, W, T]; nt/eta [M, T].  The leading grid dimension selects the
+    chain; every per-chain input is carved with a `None`-squeezed
+    BlockSpec so the kernel body is EXACTLY `_train_kernel` — same ops,
+    same order, bit-identical per chain to the single-chain launch.
+    Returns (z_final [M, D, N], ndt_final [M, D, T]).
+    """
+    M, D, N = tokens.shape
+    T = ndt0.shape[-1]
+    W = ntw_t.shape[1]
+    assert D % doc_block == 0, (D, doc_block)
+    grid = (M, D // doc_block)
+
+    cdoc = lambda cols: pl.BlockSpec((None, doc_block, cols),
+                                     lambda c, i: (c, i, 0))
+    cfull = lambda shape: pl.BlockSpec(
+        (None,) + shape, lambda c, i: (c,) + tuple(0 for _ in shape))
+
+    kernel = functools.partial(
+        _train_kernel, alpha=float(alpha), beta=float(beta), rho=float(rho),
+        supervised=supervised, n_sweeps=int(n_sweeps), n_tokens=N,
+        vocab_size=W, tpu_prng=tpu_prng, product_form=product_form,
+        chain_grid=True)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[cdoc(N), cdoc(N), cdoc(1), cdoc(N),
+                  cdoc(T), cdoc(1), cdoc(1),
+                  cfull((W, T)), cfull((1, T)), cfull((1, T))],
+        out_specs=[cdoc(N), cdoc(T)],
+        out_shape=[jax.ShapeDtypeStruct((M, D, N), jnp.int32),
+                   jax.ShapeDtypeStruct((M, D, T), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((W, T), jnp.float32)],
+        interpret=interpret,
+    )(tokens, mask, seeds[..., None], z0, ndt0, y[..., None],
+      inv_len[..., None], ntw_t, nt[:, None, :], eta[:, None, :])
+
+
 def slda_train_sweeps_jnp(tokens, mask, seeds, z0, ndt0, y, inv_len,
                           ntw_t, nt, eta, *, alpha, beta, rho,
                           supervised=True, n_sweeps=1, doc_block=8,
-                          unroll=8):
+                          unroll=8, product_form=False):
     """Blocked-jnp twin of the fused train kernel — the CPU fast path.
 
     Same restructuring expressed as XLA-friendly jnp: a vmap over doc
@@ -238,10 +318,13 @@ def slda_train_sweeps_jnp(tokens, mask, seeds, z0, ndt0, y, inv_len,
     vector op per token, identical op order to the kernel so the bits
     match), the token scan unrolled ×8, and the block-local between-sweep
     refresh as a scalar 2-scatter over the block's tokens (same exact
-    integer arithmetic as the kernel's sequential row updates, so the
+    integer arithmetic as the kernel's segmented one-hot matmul, so the
     tables agree bit-for-bit regardless of accumulation order).
 
-    Two twin-only rewrites keep the bits while cutting the CPU cost:
+    In product form (the multi-sweep default) the per-token work is one
+    row gather + one `exp`, mirroring the kernel verbatim.  The log form
+    (seed semantics, `n_sweeps=1` launches) keeps two twin-only rewrites
+    that cut the CPU transcendental count while preserving the bits:
 
       * hoisted log tables — `log(ntw+β)` / `log(nt+Wβ)` are sweep-frozen,
         so they are computed ONCE per sweep ([W, T] + [T] logs) and row-
@@ -249,16 +332,13 @@ def slda_train_sweeps_jnp(tokens, mask, seeds, z0, ndt0, y, inv_len,
         the document's own (w, z_old) cell, which gets a scalar fixup
         `log((v-1)+β)`.  Bitwise-safe because `(v - 0.0) + β ≡ v + β` in
         IEEE f32, so every element equals the kernel's
-        `log((v - old) + β)` exactly — the per-token transcendental count
-        drops from ~3·DB·T to ~2·DB·T + 2·DB (carrying `log(ndt+α)`
-        incrementally as well measured SLOWER on XLA:CPU: the extra
-        selects/gathers cost more than the saved log);
+        `log((v - old) + β)` exactly;
       * the token loop is a `lax.scan` unrolled ×8 (dispatch-bound).
 
-    Memory: each block carries its own [W, T] count + log-table copy, so
-    the live footprint is 2·(D/doc_block)·W·T floats — larger doc_block
-    is both faster (fewer vmap lanes) and *less* delayed (fewer blocks);
-    core.gibbs clamps it to the corpus size.
+    Memory: each block carries its own [W, T] count copy (plus a log-table
+    copy in log form), so the live footprint is ~2·(D/doc_block)·W·T
+    floats — larger doc_block is both faster (fewer vmap lanes) and *less*
+    delayed (fewer blocks); core.gibbs clamps it to the corpus size.
     """
     D, N = tokens.shape
     T = ndt0.shape[-1]
@@ -279,10 +359,11 @@ def slda_train_sweeps_jnp(tokens, mask, seeds, z0, ndt0, y, inv_len,
         def one_sweep(carry, s, refresh=True):
             z_t, ndt_start, ntw_loc, nt_loc = carry
             s0 = ndt_start @ eta
-            # sweep-frozen hoisted log tables (see docstring: bit-equal to
-            # the kernel's per-token logs because (v - 0.0) + β ≡ v + β)
-            log_ntw = jnp.log(ntw_loc + beta)          # [W, T]
-            log_nt = jnp.log(nt_loc + W * beta)        # [T]
+            if not product_form:
+                # sweep-frozen hoisted log tables (see docstring: bit-equal
+                # to the kernel's per-token logs as (v - 0.0) + β ≡ v + β)
+                log_ntw = jnp.log(ntw_loc + beta)      # [W, T]
+                log_nt = jnp.log(nt_loc + W * beta)    # [T]
 
             def token_step(carry2, inp):
                 ndt, st = carry2
@@ -292,18 +373,28 @@ def slda_train_sweeps_jnp(tokens, mask, seeds, z0, ndt0, y, inv_len,
                 old = own.astype(jnp.float32)
                 ndt = ndt - old
                 st = st - jnp.take(eta, z_old) * m
-                # own-token -dn fixups: one scalar log per document
-                v_own = ntw_loc[w, z_old]              # [DB]
-                fix_ntw = jnp.log((v_own - 1.0) + beta)
-                fix_nt = jnp.log((jnp.take(nt_loc, z_old) - 1.0) + W * beta)
-                lw = jnp.where(own, fix_ntw[:, None],
-                               jnp.take(log_ntw, w, axis=0))
-                ln = jnp.where(own, fix_nt[:, None], log_nt[None, :])
-                logp = jnp.log(ndt + alpha) + lw - ln
-                if supervised:
-                    mu_t = (st[:, None] + eta[None, :]) * il_b[:, None]
-                    logp = logp - 0.5 * (y_b[:, None] - mu_t) ** 2 / rho
-                p = jnp.exp(logp - jnp.max(logp, axis=1, keepdims=True))
+                if product_form:
+                    ntw_w = jnp.take(ntw_loc, w, axis=0) - old
+                    p = (ndt + alpha) * (ntw_w + beta) \
+                        / (nt_loc[None, :] - old + W * beta)
+                    if supervised:
+                        mu_t = (st[:, None] + eta[None, :]) * il_b[:, None]
+                        g = -0.5 * (y_b[:, None] - mu_t) ** 2 / rho
+                        p = p * jnp.exp(g - jnp.max(g, axis=1, keepdims=True))
+                else:
+                    # own-token -dn fixups: one scalar log per document
+                    v_own = ntw_loc[w, z_old]          # [DB]
+                    fix_ntw = jnp.log((v_own - 1.0) + beta)
+                    fix_nt = jnp.log((jnp.take(nt_loc, z_old) - 1.0)
+                                     + W * beta)
+                    lw = jnp.where(own, fix_ntw[:, None],
+                                   jnp.take(log_ntw, w, axis=0))
+                    ln = jnp.where(own, fix_nt[:, None], log_nt[None, :])
+                    logp = jnp.log(ndt + alpha) + lw - ln
+                    if supervised:
+                        mu_t = (st[:, None] + eta[None, :]) * il_b[:, None]
+                        logp = logp - 0.5 * (y_b[:, None] - mu_t) ** 2 / rho
+                    p = jnp.exp(logp - jnp.max(logp, axis=1, keepdims=True))
                 c = jnp.dot(p, tri_u)
                 z_new = jnp.sum(
                     (c < (u * c[:, -1])[:, None]).astype(jnp.int32), axis=1)
@@ -343,3 +434,28 @@ def slda_train_sweeps_jnp(tokens, mask, seeds, z0, ndt0, y, inv_len,
         blk(inv_len))
     return (z_fin.reshape(D, N).astype(jnp.int32),
             ndt_fin.reshape(D, T))
+
+
+def slda_train_sweeps_chains_jnp(tokens, mask, seeds, z0, ndt0, y, inv_len,
+                                 ntw_t, nt, eta, *, alpha, beta, rho,
+                                 supervised=True, n_sweeps=1, doc_block=8,
+                                 unroll=8, product_form=False):
+    """Chain-batched jnp twin: all inputs carry a leading chain dim M
+    (tokens [M, D, N], ntw_t [M, W, T], nt/eta [M, T], ...).
+
+    Unlike prediction — where the chains fold into the document-row axis
+    around ONE stacked table (slda_predict.slda_predict_sweeps_chains_jnp)
+    — each training chain's table EVOLVES separately between sweeps, so
+    the chain axis folds into the block-vmap axis instead: the twin maps
+    `block_fn` over chains × blocks in one jitted op.  Expressed as the
+    vmap of the single-chain twin, which makes bit-identity to the
+    vmapped path hold BY CONSTRUCTION (same jaxpr) while XLA still sees
+    one fused [M·B]-lane program — the restructuring the chain grid buys
+    on TPU comes from `slda_train_sweeps_chains_pallas`.
+    """
+    fn = functools.partial(
+        slda_train_sweeps_jnp, alpha=alpha, beta=beta, rho=rho,
+        supervised=supervised, n_sweeps=n_sweeps, doc_block=doc_block,
+        unroll=unroll, product_form=product_form)
+    return jax.vmap(fn)(tokens, mask, seeds, z0, ndt0, y, inv_len,
+                        ntw_t, nt, eta)

@@ -1,25 +1,34 @@
 """Multi-device sLDA chain runner: the paper's algorithm under shard_map.
 
-Each device (or device group) owns one chain and its training shard.  The
-training phase contains ZERO collectives — `shard_map` makes that
-structural, not accidental: the per-chain function has no `psum`/`all_*`
-in it, so the lowered HLO cannot contain a collective.  The only
-communication in the whole algorithm is the final `all_gather` of the
-per-chain test predictions (a [D_test] float vector each — KBs), which
-implements the paper's combination stage (Eq. 6).
+Each mesh slice owns `chains_per_device` chains and their training
+shards, so the paper's M is decoupled from the device count:
+M = mesh.shape[axis] × chains_per_device.  The local chain batch runs
+through the CHAIN-BATCHED core entry points
+(`core.parallel.train_chains_keyed` / `predict_chains_keyed`), which on
+TPU lower to the grid-(chains, doc_blocks) fused Pallas launches of
+DESIGN.md §Chain-batched — one launch per EM boundary for all local
+chains, the shared test-token tiles read once per doc block rather than
+once per chain.
+
+The training phase contains ZERO collectives — `shard_map` makes that
+structural, not accidental: the per-slice function has no `psum`/`all_*`
+in it (the chain batch is slice-local), so the lowered HLO cannot
+contain a collective.  The only communication in the whole algorithm is
+the final `all_gather` of the per-chain test predictions (a [D_test]
+float vector each — KBs), which implements the paper's combination
+stage (Eq. 6).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import (Corpus, SLDAConfig, combine, partition,
-                        predict, train_chain)
+from repro.core import Corpus, SLDAConfig, combine, partition
+from repro.core.parallel import predict_chains_keyed, train_chains_keyed
 
 
 def mesh_supports_pallas(mesh: Mesh) -> bool:
@@ -33,37 +42,46 @@ def mesh_supports_pallas(mesh: Mesh) -> bool:
 def parallel_slda_shard_map(key, train: Corpus, test: Corpus,
                             cfg: SLDAConfig, mesh: Mesh,
                             axis: str = "data", rule: str = "simple",
-                            auto_pallas: bool = True):
-    """Run M = mesh.shape[axis] chains, one per mesh slice, then combine
-    predictions.  Returns ŷ [D_test].
+                            auto_pallas: bool = True,
+                            chains_per_device: int | None = None):
+    """Run M = mesh.shape[axis] × chains_per_device chains, a chain batch
+    per mesh slice, then combine predictions.  Returns ŷ [D_test].
 
-    auto_pallas=True flips `cfg.use_pallas` on when the mesh backend
-    compiles the kernels natively (TPU), so chains take the fused
-    train/predict kernel paths without the caller having to re-tune the
-    config per backend; an explicit `use_pallas=True` in cfg is always
-    honored (including interpret mode on CPU meshes, which the
-    communication-freedom test exercises)."""
+    chains_per_device=None reads `cfg.chains_per_device` (default 1 —
+    the one-chain-per-device special case).  auto_pallas=True flips
+    `cfg.use_pallas` on when the mesh backend compiles the kernels
+    natively (TPU), so chains take the fused chain-batched kernel paths
+    without the caller having to re-tune the config per backend; an
+    explicit `use_pallas=True` in cfg is always honored (including
+    interpret mode on CPU meshes, which the communication-freedom test
+    exercises)."""
     if auto_pallas and not cfg.use_pallas and mesh_supports_pallas(mesh):
         cfg = dataclasses.replace(cfg, use_pallas=True)
-    m = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    cpd = cfg.chains_per_device if chains_per_device is None \
+        else chains_per_device
+    mesh_m = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    m = mesh_m * cpd
     shards = partition(train, m)                      # [M, D/M, ...]
 
     def chain_fn(key_rep, shard_blk, test_blk):
-        # one chain per mesh slice: leading dim 1 inside the block.  The
-        # chain key is folded from the replicated base key INSIDE the shard
-        # — a pre-split [M, 2] keys array sharded over `axis` makes GSPMD
+        # cpd chains per mesh slice: the in_spec hands this slice cpd
+        # consecutive shards.  Chain keys are folded from the replicated
+        # base key INSIDE the shard, one per GLOBAL chain id — a
+        # pre-split [M, 2] keys array sharded over `axis` makes GSPMD
         # lower the threefry split as a cross-device combine (an
         # all-reduce), which would break the zero-collective guarantee.
-        k = jax.random.fold_in(key_rep, jax.lax.axis_index(axis))
-        shard = jax.tree.map(lambda x: x[0], shard_blk)
-        k1, k2 = jax.random.split(k)
-        _, model = train_chain(k1, shard, cfg)        # NO collectives
-        yhat = predict(k2, model, test_blk, cfg)      # local prediction
-        stats = jnp.stack([model.train_mse, model.train_acc])
+        base = jax.lax.axis_index(axis) * cpd
+        keys = jax.vmap(lambda i: jax.random.fold_in(key_rep, base + i))(
+            jnp.arange(cpd))
+        ks = jax.vmap(jax.random.split)(keys)         # [cpd, 2, key]
+        _, models = train_chains_keyed(ks[:, 0], shard_blk, cfg)  # NO collectives
+        yhat = predict_chains_keyed(ks[:, 1], models, test_blk, cfg)
+        stats = jnp.stack([models.train_mse, models.train_acc], axis=-1)
         # the ONLY communication in the algorithm:
-        yhat_all = jax.lax.all_gather(yhat, axis)     # [M, D_test]
-        stats_all = jax.lax.all_gather(stats, axis)   # [M, 2]
-        return yhat_all, stats_all
+        yhat_all = jax.lax.all_gather(yhat, axis)     # [mesh_m, cpd, D_test]
+        stats_all = jax.lax.all_gather(stats, axis)   # [mesh_m, cpd, 2]
+        return (yhat_all.reshape(m, yhat.shape[-1]),
+                stats_all.reshape(m, 2))
 
     fn = shard_map(
         chain_fn, mesh=mesh,

@@ -60,23 +60,33 @@ class ServingEngine:
         self._decode = jax.jit(self._decode_impl)
 
     # ------------------------------------------------------------- internals
-    def _combine(self, logits):
-        """[c, b, 1, V] → [b, V] per the configured rule."""
+    def _combine(self, logits, chain_weights):
+        """[c, b, 1, V] → [b, V] per the configured rule.
+
+        Both rules honor the alive mask implied by `chain_weights`
+        (`drop_chain` zeroes a chain's weight): Simple Average is the
+        masked mean over SURVIVING chains, renormalized like
+        `core.combine.simple_average` — a plain `probs.mean(0)` would
+        silently keep dead chains in the mix."""
         if self.gen.combine == "none" or self.n_chains == 1:
             return logits[0, :, 0].astype(jnp.float32)
         probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
-        w = self.chain_weights / jnp.maximum(self.chain_weights.sum(), 1e-9)
         if self.gen.combine == "simple":
-            mix = probs.mean(0)
+            alive = (chain_weights > 0).astype(jnp.float32)
+            mix = jnp.einsum("c,cbsv->bsv", alive, probs) \
+                / jnp.maximum(alive.sum(), 1.0)
         else:
+            w = chain_weights / jnp.maximum(chain_weights.sum(), 1e-9)
             mix = jnp.einsum("c,cbsv->bsv", w, probs)
         return jnp.log(jnp.maximum(mix[:, 0], 1e-30))
 
-    def _decode_impl(self, params, cache, tokens, key):
+    def _decode_impl(self, params, cache, tokens, key, chain_weights):
+        # chain_weights rides as a jit ARGUMENT, not a closed-over
+        # constant, so a drop_chain between steps reaches the compiled fn
         logits, cache = decode_step(params, cache, {"tokens": tokens},
                                     self.cfg, compute_dtype=self.compute_dtype,
                                     use_pallas=self.use_pallas)
-        mixed = self._combine(logits)                      # [b, V]
+        mixed = self._combine(logits, chain_weights)       # [b, V]
         nxt = sample_token(key, mixed, self.gen.temperature, self.gen.top_k)
         toks = jnp.broadcast_to(nxt[None, :, None],
                                 (self.n_chains, self.batch, 1)).astype(jnp.int32)
@@ -92,7 +102,8 @@ class ServingEngine:
         for t in range(prompts.shape[1]):
             step = toks[:, :, t:t + 1]
             _, self.cache, _ = self._decode(self.params, self.cache, step,
-                                            jax.random.PRNGKey(0))
+                                            jax.random.PRNGKey(0),
+                                            self.chain_weights)
         return toks[:, :, -1:]
 
     def generate(self, prompts, key=None):
@@ -104,7 +115,7 @@ class ServingEngine:
         for i in range(self.gen.max_new_tokens):
             key, sub = jax.random.split(key)
             tok, self.cache, nxt = self._decode(self.params, self.cache,
-                                                tok, sub)
+                                                tok, sub, self.chain_weights)
             out.append(nxt)
         return jnp.stack(out, axis=1)                      # [b, T_new]
 

@@ -1,0 +1,324 @@
+"""Chain-batched vs vmapped-single-chain equivalence (DESIGN.md
+§Chain-batched).
+
+The chain_axis forms of `ops.slda_train_sweeps` / `ops.slda_predict_sweeps`
+/ `ops.slda_gibbs_sweep` and the chain-batched core runners
+(`train_chains`, `predict_chains`) must reproduce the vmapped
+single-chain paths EXACTLY:
+
+  * jnp twins — asserted bitwise (the predict twin folds chains into the
+    document-row axis around a stacked table; the train twin maps over
+    chains × blocks — both must leave every chain's bits untouched);
+  * interpret-mode Pallas chain grids — asserted allclose at atol=0
+    against the jnp twins (shared counter-hash PRNG and op order);
+  * `train_chains` at sweeps_per_launch=1 — bit-identical to
+    `jax.vmap(train_chain)` (the seed-semantics contract);
+  * a hypothesis property over ragged masks and M ∈ {1, 2, 5}.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SLDAConfig, predict, train_chain
+from repro.core.parallel import (partition, predict_chains, train_chains,
+                                 run_weighted_average)
+from repro.data import make_slda_corpus, train_test_split
+from repro.kernels import ops, ref
+from repro.kernels.slda_predict import predict_uniforms
+from repro.kernels.slda_train import train_uniforms
+
+_HY = dict(alpha=0.1, beta=0.01, rho=0.5)
+
+
+def _chain_setup(m, n_docs, n_topics, vocab, doc_len, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+    tokens = jax.random.randint(ks[0], (m, n_docs, doc_len), 0, vocab,
+                                jnp.int32)
+    lens = jax.random.randint(ks[1], (m, n_docs), max(2, doc_len // 3),
+                              doc_len + 1)
+    mask = (jnp.arange(doc_len)[None, None] < lens[..., None]) \
+        .astype(jnp.float32)
+    z0 = jax.random.randint(ks[2], (m, n_docs, doc_len), 0, n_topics,
+                            jnp.int32)
+    d_idx = jnp.arange(n_docs)[:, None]
+    ndt0 = jax.vmap(lambda z, mm: jnp.zeros((n_docs, n_topics))
+                    .at[d_idx, z].add(mm))(z0, mask)
+    ntw = jax.vmap(lambda z, t, mm: jnp.zeros((n_topics, vocab))
+                   .at[z, t].add(mm))(z0, tokens, mask)
+    nt = ntw.sum(-1)
+    y = jax.random.normal(ks[3], (m, n_docs))
+    inv_len = 1.0 / jnp.maximum(mask.sum(-1), 1.0)
+    eta = jax.random.normal(ks[4], (m, n_topics))
+    seeds = jax.random.randint(ks[5], (m, n_docs), 0, 2 ** 31 - 1,
+                               jnp.int32)
+    phi = jax.vmap(lambda k: jax.random.dirichlet(
+        k, jnp.full((vocab,), 0.1), (n_topics,)))(
+        jax.random.split(ks[6], m))
+    return tokens, mask, z0, ndt0, ntw, nt, y, inv_len, eta, seeds, phi
+
+
+# ------------------------------------------------------- train chain ops
+
+@pytest.mark.parametrize("product_form", [False, True])
+@pytest.mark.parametrize("m", [1, 3])
+def test_train_chains_twin_bitwise_vs_vmapped(m, product_form):
+    """chain_axis jnp twin == vmap of the single-chain jnp twin, exactly
+    — both sampling forms, ragged masks, D not a doc_block multiple."""
+    (tokens, mask, z0, ndt0, ntw, nt, y, inv_len, eta, seeds,
+     _) = _chain_setup(m, 10, 8, 60, 18)
+    kw = dict(n_sweeps=3, doc_block=4, use_pallas=False,
+              product_form=product_form, **_HY)
+    z_v, ndt_v = jax.vmap(functools.partial(ops.slda_train_sweeps, **kw))(
+        tokens, mask, z0, ndt0, y, inv_len, ntw, nt, eta, seeds)
+    z_c, ndt_c = ops.slda_train_sweeps(
+        tokens, mask, z0, ndt0, y, inv_len, ntw, nt, eta, seeds,
+        chain_axis=True, **kw)
+    assert np.array_equal(np.asarray(z_v), np.asarray(z_c))
+    np.testing.assert_allclose(np.asarray(ndt_v), np.asarray(ndt_c), atol=0)
+
+
+@pytest.mark.parametrize("product_form", [False, True])
+def test_train_chains_pallas_grid_matches_twin(product_form):
+    """The grid-(M, B) interpret-mode kernel == the chain-batched twin."""
+    (tokens, mask, z0, ndt0, ntw, nt, y, inv_len, eta, seeds,
+     _) = _chain_setup(3, 12, 8, 60, 16, seed=1)
+    kw = dict(n_sweeps=3, doc_block=4, chain_axis=True,
+              product_form=product_form, **_HY)
+    z_p, ndt_p = ops.slda_train_sweeps(
+        tokens, mask, z0, ndt0, y, inv_len, ntw, nt, eta, seeds,
+        use_pallas=True, **kw)
+    z_j, ndt_j = ops.slda_train_sweeps(
+        tokens, mask, z0, ndt0, y, inv_len, ntw, nt, eta, seeds,
+        use_pallas=False, **kw)
+    np.testing.assert_allclose(np.asarray(z_p), np.asarray(z_j), atol=0)
+    np.testing.assert_allclose(np.asarray(ndt_p), np.asarray(ndt_j), atol=0)
+
+
+def test_train_chains_oracle_coverage():
+    """Chain-batched op == the vmap-of-single-chain oracle fed the SAME
+    uniforms (ref_slda_train_sweeps_chains defines the semantics)."""
+    (tokens, mask, z0, ndt0, ntw, nt, y, inv_len, eta, seeds,
+     _) = _chain_setup(2, 10, 8, 50, 14, seed=2)
+    kw = dict(n_sweeps=2, doc_block=4, chain_axis=True, **_HY)
+    z_c, ndt_c = ops.slda_train_sweeps(
+        tokens, mask, z0, ndt0, y, inv_len, ntw, nt, eta, seeds,
+        use_pallas=False, **kw)
+    us = jax.vmap(lambda s: train_uniforms(s, 2, 14))(seeds)
+    z_r, ndt_r = ref.ref_slda_train_sweeps_chains(
+        tokens, mask, us, z0, ndt0, y, inv_len,
+        jnp.swapaxes(ntw, -1, -2), nt, eta,
+        _HY["alpha"], _HY["beta"], _HY["rho"], True, 4)
+    assert np.array_equal(np.asarray(z_c), np.asarray(z_r))
+    np.testing.assert_allclose(np.asarray(ndt_c), np.asarray(ndt_r), atol=0)
+
+
+def test_product_form_is_a_valid_sampler():
+    """Product-form and log-form launches draw from the same conditionals:
+    with frozen tables and ONE token position free, both must pick the
+    same topic for almost every uniform (they differ only by rounding of
+    the unnormalized categorical)."""
+    (tokens, mask, z0, ndt0, ntw, nt, y, inv_len, eta, seeds,
+     _) = _chain_setup(1, 64, 8, 40, 1, seed=3)
+    kw = dict(n_sweeps=1, doc_block=8, chain_axis=True, use_pallas=False,
+              **_HY)
+    z_log, _ = ops.slda_train_sweeps(
+        tokens, mask, z0, ndt0, y, inv_len, ntw, nt, eta, seeds,
+        product_form=False, **kw)
+    z_prod, _ = ops.slda_train_sweeps(
+        tokens, mask, z0, ndt0, y, inv_len, ntw, nt, eta, seeds,
+        product_form=True, **kw)
+    agree = np.mean(np.asarray(z_log) == np.asarray(z_prod))
+    assert agree > 0.95, agree
+
+
+# ----------------------------------------------------- predict chain ops
+
+def test_predict_chains_twin_bitwise_vs_vmapped_shared_corpus():
+    """Folded-row chain twin (stacked φ̂, offset token ids) == vmap of the
+    single-chain twin over a SHARED corpus, exactly."""
+    (tokens, mask, z0, ndt0, _, _, _, _, _, seeds,
+     phi) = _chain_setup(3, 11, 8, 60, 15, seed=4)
+    tok_s, mask_s = tokens[0], mask[0]
+    kw = dict(alpha=0.1, n_burnin=2, n_samples=3, use_pallas=False)
+    a_v, z_v = jax.vmap(lambda s, z, nd, p: ops.slda_predict_sweeps(
+        tok_s, mask_s, z, nd, p, s, **kw))(seeds, z0, ndt0, phi)
+    a_c, z_c = ops.slda_predict_sweeps(tok_s, mask_s, z0, ndt0, phi, seeds,
+                                       chain_axis=True, **kw)
+    assert np.array_equal(np.asarray(z_v), np.asarray(z_c))
+    np.testing.assert_allclose(np.asarray(a_v), np.asarray(a_c), atol=0)
+
+
+def test_predict_chains_pallas_shared_token_tiles():
+    """Grid-(M, B) interpret-mode kernel with SHARED token tiles == the
+    folded twin == the chains oracle."""
+    (tokens, mask, z0, ndt0, _, _, _, _, _, seeds,
+     phi) = _chain_setup(3, 10, 8, 60, 15, seed=5)
+    tok_s, mask_s = tokens[0], mask[0]
+    kw = dict(alpha=0.1, n_burnin=2, n_samples=3, chain_axis=True)
+    a_p, z_p = ops.slda_predict_sweeps(tok_s, mask_s, z0, ndt0, phi, seeds,
+                                       use_pallas=True, doc_block=4, **kw)
+    a_j, z_j = ops.slda_predict_sweeps(tok_s, mask_s, z0, ndt0, phi, seeds,
+                                       use_pallas=False, **kw)
+    np.testing.assert_allclose(np.asarray(a_p), np.asarray(a_j), atol=0)
+    np.testing.assert_allclose(np.asarray(z_p), np.asarray(z_j), atol=0)
+    us = jax.vmap(lambda s: predict_uniforms(s, 5, 15))(seeds)
+    a_r, z_r = ref.ref_slda_predict_sweeps_chains(
+        tok_s, mask_s, us, z0, ndt0, jnp.swapaxes(phi, -1, -2), 0.1, 2)
+    np.testing.assert_allclose(np.asarray(a_r), np.asarray(a_j), atol=0)
+    assert np.array_equal(np.asarray(z_r), np.asarray(z_j))
+
+
+def test_predict_chains_per_chain_corpora():
+    """chain_axis also accepts per-chain corpora [M, D, N] (the training
+    shards of the Weighted Average weights at chains_per_device>1)."""
+    (tokens, mask, z0, ndt0, _, _, _, _, _, seeds,
+     phi) = _chain_setup(2, 9, 8, 50, 13, seed=6)
+    kw = dict(alpha=0.1, n_burnin=1, n_samples=2, chain_axis=True)
+    a_p, z_p = ops.slda_predict_sweeps(tokens, mask, z0, ndt0, phi, seeds,
+                                       use_pallas=True, doc_block=4, **kw)
+    a_j, z_j = ops.slda_predict_sweeps(tokens, mask, z0, ndt0, phi, seeds,
+                                       use_pallas=False, **kw)
+    np.testing.assert_allclose(np.asarray(a_p), np.asarray(a_j), atol=0)
+    np.testing.assert_allclose(np.asarray(z_p), np.asarray(z_j), atol=0)
+
+
+# -------------------------------------------------- gibbs sweep chain op
+
+def test_gibbs_sweep_chain_axis_bitwise():
+    (tokens, mask, z0, ndt0, ntw, nt, y, inv_len, eta, _,
+     _) = _chain_setup(2, 10, 8, 50, 12, seed=7)
+    u = jax.random.uniform(jax.random.PRNGKey(70), z0.shape)
+    kw = dict(supervised=True, use_pallas=False, **_HY)
+    z_v, ndt_v = jax.vmap(functools.partial(ops.slda_gibbs_sweep, **kw))(
+        tokens, mask, u, z0, ndt0, y, inv_len, ntw, nt, eta)
+    z_c, ndt_c = ops.slda_gibbs_sweep(
+        tokens, mask, u, z0, ndt0, y, inv_len, ntw, nt, eta,
+        chain_axis=True, **kw)
+    assert np.array_equal(np.asarray(z_v), np.asarray(z_c))
+    np.testing.assert_allclose(np.asarray(ndt_v), np.asarray(ndt_c), atol=0)
+
+
+# ------------------------------------------------- core chain-batched EM
+
+def test_train_chains_spl1_bit_identical_to_vmapped_train_chain():
+    """THE seed-semantics contract: the chain-batched EM loop at
+    sweeps_per_launch=1 reproduces jax.vmap(train_chain) bit-for-bit
+    (same threefry key tree, same sweep op order, same η solves)."""
+    cfg = SLDAConfig(n_topics=8, vocab_size=80, n_iters=5, rho=0.25)
+    corpus, _ = make_slda_corpus(jax.random.PRNGKey(10), 48, 80, 8, 16,
+                                 rho=0.25)
+    shards = partition(corpus, 4)
+    key = jax.random.PRNGKey(11)
+    keys = jax.random.split(key, 4)
+    _, mv = jax.jit(jax.vmap(train_chain, in_axes=(0, 0, None)),
+                    static_argnums=(2,))(keys, shards, cfg)
+    mc = jax.jit(train_chains, static_argnums=(2,))(key, shards, cfg)
+    for f in ("phi", "eta", "train_mse", "train_acc"):
+        a, b = np.asarray(getattr(mv, f)), np.asarray(getattr(mc, f))
+        np.testing.assert_allclose(a, b, atol=0, err_msg=f)
+
+
+def test_predict_chains_bit_identical_to_vmapped_predict():
+    cfg = SLDAConfig(n_topics=8, vocab_size=80, n_iters=4, rho=0.25,
+                     n_pred_burnin=2, n_pred_samples=2)
+    corpus, _ = make_slda_corpus(jax.random.PRNGKey(12), 48, 80, 8, 16,
+                                 rho=0.25)
+    train, test = train_test_split(corpus, 32)
+    models = jax.jit(train_chains, static_argnums=(2,))(
+        jax.random.PRNGKey(13), partition(train, 4), cfg)
+    kp = jax.random.PRNGKey(14)
+    y_v = jax.jit(jax.vmap(predict, in_axes=(0, 0, None, None)),
+                  static_argnums=(3,))(jax.random.split(kp, 4), models,
+                                       test, cfg)
+    y_c = jax.jit(predict_chains, static_argnums=(3,))(kp, models, test,
+                                                       cfg)
+    np.testing.assert_allclose(np.asarray(y_v), np.asarray(y_c), atol=0)
+
+
+def test_weighted_average_fused_predict_matches_two_pass_statistically():
+    """Fusing the test+train prediction passes changes the seed
+    assignment, not the estimator: both forms must land in the same MSE
+    ballpark on a learnable corpus."""
+    cfg = SLDAConfig(n_topics=8, vocab_size=100, n_iters=15, rho=0.25,
+                     sweeps_per_launch=5)
+    corpus, _ = make_slda_corpus(jax.random.PRNGKey(15), 240, 100, 8, 24,
+                                 rho=0.25)
+    train, test = train_test_split(corpus, 192)
+    var = float(jnp.var(test.y))
+    for fuse in (True, False):
+        c = dataclasses.replace(cfg, fuse_weighted_predict=fuse)
+        yhat = jax.jit(run_weighted_average, static_argnums=(3, 4))(
+            jax.random.PRNGKey(16), train, test, c, 4)
+        mse = float(jnp.mean((yhat - test.y) ** 2))
+        assert mse < 0.6 * var, (fuse, mse, var)
+
+
+# -------------------------------------------------- hypothesis property
+
+try:  # the rest of this module must still run without hypothesis
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+    given = settings = lambda *a, **k: (lambda f: f)
+
+    class st:  # noqa: N801 — placeholder so the decorators below parse
+        sampled_from = integers = lists = data = staticmethod(
+            lambda *a, **k: None)
+
+
+@pytest.mark.skipif(not _HAVE_HYPOTHESIS, reason=(
+    "property tests need hypothesis (pip install -r requirements-dev.txt)"))
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.sampled_from([1, 2, 5]),
+    n_docs=st.integers(2, 9),
+    doc_len=st.integers(2, 12),
+    data=st.data(),
+)
+def test_chain_batched_property_ragged_masks(m, n_docs, doc_len, data):
+    """For every M ∈ {1, 2, 5} and every ragged mask pattern (including
+    all-padded documents), the chain-batched train twin equals the
+    vmapped single-chain twin bitwise and conserves ndt against z."""
+    seed = data.draw(st.integers(0, 2 ** 16))
+    n_topics, vocab = 4, 24
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    tokens = jax.random.randint(ks[0], (m, n_docs, doc_len), 0, vocab,
+                                jnp.int32)
+    lens = data.draw(st.lists(st.integers(0, doc_len), min_size=m * n_docs,
+                              max_size=m * n_docs))
+    lens = jnp.asarray(lens, jnp.int32).reshape(m, n_docs)
+    mask = (jnp.arange(doc_len)[None, None] < lens[..., None]) \
+        .astype(jnp.float32)
+    z0 = jax.random.randint(ks[1], (m, n_docs, doc_len), 0, n_topics,
+                            jnp.int32)
+    d_idx = jnp.arange(n_docs)[:, None]
+    ndt0 = jax.vmap(lambda z, mm: jnp.zeros((n_docs, n_topics))
+                    .at[d_idx, z].add(mm))(z0, mask)
+    ntw = jax.vmap(lambda z, t, mm: jnp.zeros((n_topics, vocab))
+                   .at[z, t].add(mm))(z0, tokens, mask)
+    nt = ntw.sum(-1)
+    y = jax.random.normal(ks[2], (m, n_docs))
+    inv_len = 1.0 / jnp.maximum(mask.sum(-1), 1.0)
+    eta = jax.random.normal(ks[3], (m, n_topics))
+    seeds = jax.random.randint(ks[4], (m, n_docs), 0, 2 ** 31 - 1,
+                               jnp.int32)
+    kw = dict(n_sweeps=2, doc_block=4, use_pallas=False,
+              product_form=True, **_HY)
+    z_v, ndt_v = jax.vmap(functools.partial(ops.slda_train_sweeps, **kw))(
+        tokens, mask, z0, ndt0, y, inv_len, ntw, nt, eta, seeds)
+    z_c, ndt_c = ops.slda_train_sweeps(
+        tokens, mask, z0, ndt0, y, inv_len, ntw, nt, eta, seeds,
+        chain_axis=True, **kw)
+    assert np.array_equal(np.asarray(z_v), np.asarray(z_c))
+    np.testing.assert_allclose(np.asarray(ndt_v), np.asarray(ndt_c), atol=0)
+    # padded tokens never move; ndt stays consistent with z
+    pad = np.asarray(mask) == 0
+    assert np.array_equal(np.asarray(z_c)[pad], np.asarray(z0)[pad])
+    ndt_r = jax.vmap(lambda z, mm: jnp.zeros((n_docs, n_topics))
+                     .at[d_idx, z].add(mm))(z_c, mask)
+    np.testing.assert_allclose(np.asarray(ndt_c), np.asarray(ndt_r), atol=0)

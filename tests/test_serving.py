@@ -61,6 +61,43 @@ def test_straggler_cut_matches_smaller_ensemble():
     assert np.array_equal(out_cut, out_solo)
 
 
+def test_straggler_cut_simple_rule_masks_dead_chains():
+    """The 'simple' rule must renormalize over SURVIVING chains (the
+    paper's alive-mask semantics) — dropping chain 1 reproduces the
+    chain-0-only output instead of silently averaging the dead chain in."""
+    params = init_params(jax.random.PRNGKey(0), CFG, 2)
+    eng = ServingEngine(CFG, params, n_chains=2, batch_slots=2, max_len=32,
+                        gen=GenerationConfig(max_new_tokens=5,
+                                             combine="simple"))
+    eng.drop_chain(1)
+    out_cut = np.asarray(eng.generate(jnp.ones((2, 3), jnp.int32)))
+
+    solo_params = jax.tree.map(lambda x: x[:1], params)
+    solo = ServingEngine(CFG, solo_params, n_chains=1, batch_slots=2,
+                         max_len=32,
+                         gen=GenerationConfig(max_new_tokens=5,
+                                              combine="none"))
+    out_solo = np.asarray(solo.generate(jnp.ones((2, 3), jnp.int32)))
+    assert np.array_equal(out_cut, out_solo)
+
+
+def test_drop_chain_reaches_compiled_decode_mid_stream():
+    """chain_weights is a jit argument, not a trace-time constant: a
+    drop_chain AFTER the first compiled decode still changes the mix."""
+    from repro.models import init_cache
+    eng = make_engine(combine="simple")
+    prompts = jnp.ones((3, 4), jnp.int32)
+    eng.generate(prompts)                    # compiles with both chains
+    eng.drop_chain(1)
+    eng.cache = init_cache(CFG, 2, 3, 32, jnp.float32)   # fresh stream
+    out_cut = np.asarray(eng.generate(prompts))
+
+    fresh = make_engine(combine="simple")
+    fresh.drop_chain(1)
+    out_fresh = np.asarray(fresh.generate(prompts))
+    assert np.array_equal(out_cut, out_fresh)
+
+
 def test_sample_token_topk_respects_support():
     key = jax.random.PRNGKey(0)
     logits = jnp.asarray([[10.0, 9.0, -5.0, -5.0, -5.0]])

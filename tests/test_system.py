@@ -109,6 +109,20 @@ def test_shard_map_runner_is_communication_free():
         hlo_p = jax.jit(fn_p).lower(jax.random.PRNGKey(1)).compile().as_text()
         assert "all-reduce(" not in hlo_p, "all-reduce in pallas chains"
         assert "all-to-all(" not in hlo_p
+
+        # chains_per_device>1: M = mesh x local chain batch decouples the
+        # paper's M from the device count — still zero collectives
+        cfg_c = SLDAConfig(n_topics=4, vocab_size=64, n_iters=4,
+                           n_pred_burnin=2, n_pred_samples=2,
+                           sweeps_per_launch=2, chains_per_device=2)
+        fn_c = lambda key: parallel_slda_shard_map(key, train, test, cfg_c,
+                                                   mesh, rule="weighted")
+        hlo_c = jax.jit(fn_c).lower(jax.random.PRNGKey(1)).compile().as_text()
+        assert "all-reduce(" not in hlo_c, "all-reduce in chain batch"
+        assert "all-to-all(" not in hlo_c
+        yhat_c = fn_c(jax.random.PRNGKey(1))
+        assert yhat_c.shape == (16,)
+        assert bool(jnp.all(jnp.isfinite(yhat_c)))
         print("OK")
     """)
     env = dict(os.environ)
