@@ -26,6 +26,15 @@ def _time(fn, *args, reps=3):
     return (time.time() - t0) / reps * 1e6          # µs
 
 
+def _tok_rates(us, slot_tokens, real_tokens):
+    """Padded-slot vs mask-weighted (effective) token throughput: the gap
+    between the two IS the padding waste — visible in every sLDA perf row
+    so the ragged execution layer's target stays measurable."""
+    return (f"slot={slot_tokens / us:.2f}Mtok/s "
+            f"eff={real_tokens / us:.2f}Mtok/s "
+            f"(pad={1 - real_tokens / slot_tokens:.0%})")
+
+
 def run():
     rows = []
     key = jax.random.PRNGKey(0)
@@ -35,6 +44,8 @@ def run():
     cfg = SLDAConfig(n_topics=32, vocab_size=1000)
     corpus, _ = make_slda_corpus(ks[0], 64, 1000, 32, 64)
     state = init_state(ks[1], corpus, cfg)
+    real_tok = float(corpus.mask.sum())
+    slot_tok = float(corpus.tokens.size)
     uniforms = jax.random.uniform(ks[2], corpus.tokens.shape)
     inv_len = 1.0 / jnp.maximum(corpus.mask.sum(-1), 1.0)
     args = (corpus.tokens, corpus.mask, uniforms, state.z, state.ndt,
@@ -42,12 +53,15 @@ def run():
 
     sweep_jnp = jax.jit(lambda *a: ops.slda_gibbs_sweep(
         *a, alpha=cfg.alpha, beta=cfg.beta, rho=cfg.rho, use_pallas=False))
-    rows.append(("slda_gibbs_sweep_jnp_64x64", _time(sweep_jnp, *args), ""))
+    us = _time(sweep_jnp, *args)
+    rows.append(("slda_gibbs_sweep_jnp_64x64", us,
+                 _tok_rates(us, slot_tok, real_tok)))
 
     # slda prediction sweeps — fused jnp fast path vs the seed-style
     # per-document vmap (all 25 test-time sweeps, the Weighted Average
     # hot path; see bench_slda_predict.py for the end-to-end numbers)
     n_burnin, n_samples = cfg.n_pred_burnin, cfg.n_pred_samples
+    n_sweeps = n_burnin + n_samples
     phi = phi_hat(state, cfg)                       # smoothed φ̂, Eq. (3)
     seeds = jax.random.randint(ks[3], (corpus.n_docs,), 0, 2 ** 31 - 1,
                                jnp.int32)
@@ -56,8 +70,57 @@ def run():
         use_pallas=False))
     pargs = (corpus.tokens, corpus.mask, state.z, state.ndt, phi, seeds)
     us_fused = _time(pred_fused, *pargs)
-    rows.append((f"slda_predict_{n_burnin + n_samples}sweeps_fused_jnp_64x64",
-                 us_fused, ""))
+    rows.append((f"slda_predict_{n_sweeps}sweeps_fused_jnp_64x64",
+                 us_fused,
+                 _tok_rates(us_fused, slot_tok * n_sweeps,
+                            real_tok * n_sweeps)))
+
+    # the same fused sweeps over a HEAVY-TAILED (log-normal) corpus,
+    # padded path vs PER-BUCKET launches on the length-bucketed schedule
+    # (§Ragged-execution): each launch padded to its bucket's own width,
+    # so eff tok/s approaches the padded path's SLOT tok/s.  NB this is
+    # the pallas-route execution shape; it only pays off when the token
+    # loop is compute-bound AND padding is heavy — at the 64×64 uniform
+    # shape above it is a ~0.65× LOSS (more scan dispatches, less work
+    # each).  The core jnp route uses the STAIRCASE executor instead
+    # (step count stays N_max — see bench_slda_ragged.py for end-to-end
+    # numbers); this row documents the per-bucket form.
+    from repro.core import bucket_corpus
+    rag, _ = make_slda_corpus(ks[5], 256, 1000, 32, 128,
+                              doc_len_dist="lognormal")
+    rstate = init_state(ks[6], rag, cfg)
+    rphi = phi_hat(rstate, cfg)
+    rseeds = jax.random.randint(ks[7], (rag.n_docs,), 0, 2 ** 31 - 1,
+                                jnp.int32)
+    rreal = float(rag.mask.sum())
+    rargs = (rag.tokens, rag.mask, rstate.z, rstate.ndt, rphi, rseeds)
+    us_rpad = _time(pred_fused, *rargs)
+    rows.append((f"slda_predict_{n_sweeps}sweeps_fused_jnp_lognormal"
+                 f"_256x128", us_rpad,
+                 _tok_rates(us_rpad, float(rag.tokens.size) * n_sweeps,
+                            rreal * n_sweeps)))
+
+    bc = bucket_corpus(rag, 4)
+    z0_b = bc.split_padded(rstate.z)
+    nd_b = bc.split_docs(rstate.ndt)
+    seeds_b = bc.split_docs(rseeds)
+    stride = bc.ctr_stride
+
+    def pred_bucketed(phi, *flat):
+        zs, nds, ss = (flat[0::3], flat[1::3], flat[2::3])
+        return [ops.slda_predict_sweeps(
+            b.tokens, b.mask, z, nd, phi, s, alpha=cfg.alpha,
+            n_burnin=n_burnin, n_samples=n_samples, use_pallas=False,
+            ctr_stride=stride)[0]
+            for b, z, nd, s in zip(bc.buckets, zs, nds, ss)]
+
+    flat = [x for t in zip(z0_b, nd_b, seeds_b) for x in t]
+    us_bkt = _time(jax.jit(pred_bucketed), rphi, *flat)
+    rows.append((f"slda_predict_{n_sweeps}sweeps_bucketed_jnp_lognormal"
+                 f"_256x128", us_bkt,
+                 _tok_rates(us_bkt, float(bc.padded_tokens()) * n_sweeps,
+                            rreal * n_sweeps)
+                 + f" vs_padded={us_rpad / us_bkt:.2f}x"))
 
     # the one canonical reconstruction of the seed sampler lives in
     # bench_slda_predict — one baseline, two reports

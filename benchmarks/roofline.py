@@ -36,6 +36,15 @@ def load(art_dir="artifacts/dryrun"):
         bound_lb = max(d["t_compute_s"], d["t_memory_lb_s"],
                        d["t_collective_s"])
         d["roofline_frac_fused"] = ideal_s / bound_lb if bound_lb else 0.0
+        # padded-slot vs mask-weighted (effective) token throughput at the
+        # dominant roofline bound — the gap between them is padding waste
+        # (dense LM batches report real_token_frac=1.0; masked workloads
+        # report their true fraction, making the waste a first-class
+        # perf-row column)
+        toks = d.get("tokens_per_step") or 0
+        frac = d.get("real_token_frac", 1.0)
+        d["slot_tok_s"] = toks / bound_s if bound_s else 0.0
+        d["eff_tok_s"] = d["slot_tok_s"] * frac
         rows.append(d)
     return rows
 
@@ -43,6 +52,7 @@ def load(art_dir="artifacts/dryrun"):
 def table(rows, keys=("arch", "shape", "multi_pod", "n_chains", "dominant",
                       "t_compute_s", "t_memory_s", "t_memory_lb_s",
                       "t_collective_s", "useful_flop_ratio",
+                      "slot_tok_s", "eff_tok_s",
                       "roofline_frac", "roofline_frac_fused",
                       "collective_bytes_cross_pod")):
     fmt = lambda v: (f"{v:.3g}" if isinstance(v, float) else str(v))

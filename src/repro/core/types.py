@@ -11,6 +11,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = Any
 
@@ -92,6 +93,38 @@ class SLDAConfig:
                              # half the sequential token-loop steps
                              # (the M x prediction pass is the paper's
                              # stated dominant cost).
+    length_buckets: int = 0  # ragged-corpus execution (DESIGN.md
+                             # §Ragged-execution): number of length
+                             # buckets the bucketed entry points
+                             # (`bucket_corpus`, the *_bucketed runners,
+                             # launch/slda_parallel) split a corpus
+                             # into, each padded to its own token-block-
+                             # rounded max instead of the global max, so
+                             # sweep compute scales with Σ true tokens.
+                             # 0 keeps the padded path.  Schedules are
+                             # built from concrete lengths (outside
+                             # jit); the padded core paths ignore this
+                             # knob.  Bit-identical per document to the
+                             # padded path at sweeps_per_launch=1.
+    bucket_token_block: int = 8  # bucket widths round up to this many
+                             # tokens (sublane-friendly; smaller = less
+                             # intra-bucket padding, more distinct
+                             # widths to compile)
+    bucket_overhead_docs: float = 0.0  # per-bucket fixed cost, in
+                             # document rows, fed to the schedule DP
+                             # (`bucket_corpus`).  The jnp-route STAIR
+                             # executors walk the bucket widths as
+                             # token-range segments inside each sweep
+                             # (step count stays N_max), so extra
+                             # buckets are nearly free there — measured
+                             # best at 0 (BENCH_slda_ragged.json;
+                             # `length_buckets` still caps the count).
+                             # The per-bucket launch route (pallas)
+                             # re-runs its token loop per bucket, where
+                             # a step costs ~a hundred folded doc rows
+                             # on CPU — raise this knob if that route
+                             # is the hot one.  0 minimizes padded
+                             # slots alone.
     chains_per_device: int = 1  # launch-level knob: the shard_map
                              # runner trains chains_per_device chains
                              # per mesh slice through the chain-batched
@@ -152,6 +185,289 @@ class SLDAModel:
     eta: Array     # float32[T]    regression weights        η̂
     train_mse: Array   # float32[] training-set MSE (Weighted Average weight)
     train_acc: Array   # float32[] training-set accuracy (binary labels)
+
+
+# ------------------------------------------------- ragged execution layer
+
+def _take_docs(arr, idx, d_axis):
+    """Gather document rows: idx [D'] (any d_axis) or [M, D'] (then the
+    doc axis is 1 and arr carries the matching leading chain dim)."""
+    if idx.ndim == 1:
+        return jnp.take(arr, idx, axis=d_axis)
+    assert d_axis == 1, d_axis
+    return jax.vmap(lambda a, i: jnp.take(a, i, axis=0))(arr, idx)
+
+
+@dataclasses.dataclass
+class BucketedCorpus:
+    """A corpus reorganized for length-bucketed (ragged) execution.
+
+    Documents are sorted by true length and grouped into buckets; bucket
+    `b` holds a contiguous run of the sorted order, padded to its OWN
+    token width `widths[b]` (a token_block multiple of the longest doc in
+    the bucket) instead of the global max.  The fused train/predict
+    launches then run once per bucket, so sweep compute and padded
+    memory scale with Σ_b D_b·N_b ≈ Σ true tokens rather than D·N_max
+    (DESIGN.md §Ragged-execution).
+
+    buckets   : per-bucket `Corpus` (tokens [.., D_b, N_b]), rows in
+                sorted order; a leading chain dim M rides along when the
+                source was a chain-sharded corpus [M, D, N].
+    perm      : int32 [D] (or [M, D]) — sorted position i holds original
+                document perm[i].
+    inv_perm  : int32 [D] (or [M, D]) — original document d sits at
+                sorted position inv_perm[d].
+    ctr_stride: static int — the SOURCE corpus max_len.  Pinned as the
+                PRNG counter stride of every bucketed launch so each
+                (doc, sweep, token) triple draws the uniform it would in
+                the unbucketed launch; with per-document hash seeds this
+                is what makes bucketed execution bit-identical per
+                document (the inverse-permutation contract: outputs are
+                restored to original order via `merge_docs`).
+
+    Registered as a pytree whose static aux is `ctr_stride` plus the
+    bucket structure, so it can be passed through jit/shard_map; the
+    schedule itself must be BUILT from concrete arrays (`bucket_corpus`).
+    """
+
+    buckets: tuple
+    perm: Array
+    inv_perm: Array
+    ctr_stride: int
+
+    # ---- static schedule facts (shapes only — safe under tracing)
+
+    @property
+    def widths(self) -> tuple:
+        return tuple(b.tokens.shape[-1] for b in self.buckets)
+
+    @property
+    def counts(self) -> tuple:
+        return tuple(b.tokens.shape[-2] for b in self.buckets)
+
+    @property
+    def n_docs(self) -> int:
+        return sum(self.counts)
+
+    @property
+    def n_chains(self):
+        """Leading chain dim of a chain-sharded schedule (None if flat)."""
+        t = self.buckets[0].tokens
+        return t.shape[0] if t.ndim == 3 else None
+
+    @property
+    def max_len(self) -> int:
+        return self.ctr_stride
+
+    def padded_tokens(self) -> int:
+        """Token-loop slots the bucketed schedule executes (per chain)."""
+        return sum(d * w for d, w in zip(self.counts, self.widths))
+
+    def real_tokens(self) -> Array:
+        return sum(b.mask.sum() for b in self.buckets)
+
+    def lengths(self) -> Array:
+        """True doc lengths in ORIGINAL order, [D] (or [M, D])."""
+        d_axis = self.perm.ndim - 1
+        return self.merge_docs([b.mask.sum(-1) for b in self.buckets],
+                               d_axis=d_axis)
+
+    @property
+    def y(self) -> Array:
+        """Labels in ORIGINAL order (buckets store them sorted)."""
+        return self.merge_docs([b.y for b in self.buckets],
+                               d_axis=self.perm.ndim - 1)
+
+    # ---- row plumbing between original order and the bucketed layout
+
+    def split_docs(self, arr, d_axis=None):
+        """Original-order doc rows [.., D, ...] → per-bucket pieces."""
+        if d_axis is None:
+            d_axis = self.perm.ndim - 1
+        srt = _take_docs(arr, self.perm, d_axis)
+        out, o = [], 0
+        for c in self.counts:
+            sl = (slice(None),) * d_axis + (slice(o, o + c),)
+            out.append(srt[sl])
+            o += c
+        return out
+
+    def merge_docs(self, pieces, d_axis=None):
+        """Per-bucket doc rows → one array in ORIGINAL order."""
+        if d_axis is None:
+            d_axis = self.perm.ndim - 1
+        return _take_docs(jnp.concatenate(list(pieces), axis=d_axis),
+                          self.inv_perm, d_axis)
+
+    def split_padded(self, arr, d_axis=None):
+        """[.., D, ctr_stride] original order → per-bucket [.., D_b, N_b]
+        (rows gathered, token tail truncated to the bucket width)."""
+        if d_axis is None:
+            d_axis = self.perm.ndim - 1
+        return [p[..., :w] for p, w in zip(self.split_docs(arr, d_axis),
+                                           self.widths)]
+
+    def merge_padded(self, pieces, fill, d_axis=None):
+        """Per-bucket [.., D_b, N_b] → [.., D, ctr_stride] original order;
+        token columns beyond each bucket's width come from `fill`
+        (original order) — they are all-padding slots, which the
+        unbucketed launch leaves at their input values."""
+        if d_axis is None:
+            d_axis = self.perm.ndim - 1
+        fills = self.split_docs(fill, d_axis)
+        full = [jnp.concatenate([p, f[..., p.shape[-1]:]], axis=-1)
+                for p, f in zip(pieces, fills)]
+        return self.merge_docs(full, d_axis)
+
+
+jax.tree_util.register_pytree_node(
+    BucketedCorpus,
+    lambda bc: ((bc.buckets, bc.perm, bc.inv_perm), bc.ctr_stride),
+    lambda aux, ch: BucketedCorpus(buckets=tuple(ch[0]), perm=ch[1],
+                                   inv_perm=ch[2], ctr_stride=aux),
+)
+
+
+def _dp_bucket_cuts(segs, max_buckets: int, overhead: float):
+    """Optimal contiguous grouping of width segments into ≤ max_buckets
+    buckets, minimizing the modeled sweep cost Σ_b (D_b + overhead)·N_b.
+
+    segs: [(count, width), ...] with strictly increasing widths (docs
+    sorted by length, compressed to runs of equal rounded width — a cut
+    inside a run can never pay, so these are the only candidate cuts).
+    `overhead` is the per-bucket fixed cost in document-row units: each
+    extra bucket re-runs the sequential token loop for its width, and on
+    CPU a scan step has a fixed cost worth ~a hundred folded doc rows
+    (measured in BENCH_slda_ragged.json — equal-count quantile buckets
+    lose exactly because they ignore this term).  overhead=0 minimizes
+    padded slots alone (maximal fragmentation up to max_buckets).
+    """
+    S = len(segs)
+    max_b = max(1, min(max_buckets, S))
+    pref = [0]
+    for c, _ in segs:
+        pref.append(pref[-1] + c)
+    INF = float("inf")
+    # dp[b][j]: best cost of covering the first j segments with b buckets
+    dp = [[INF] * (S + 1) for _ in range(max_b + 1)]
+    cut = [[0] * (S + 1) for _ in range(max_b + 1)]
+    dp[0][0] = 0.0
+    for b in range(1, max_b + 1):
+        for j in range(1, S + 1):
+            w = segs[j - 1][1]
+            for i in range(j):
+                if dp[b - 1][i] == INF:
+                    continue
+                c = dp[b - 1][i] + (pref[j] - pref[i] + overhead) * w
+                if c < dp[b][j]:
+                    dp[b][j] = c
+                    cut[b][j] = i
+    b_best = min(range(1, max_b + 1), key=lambda b: dp[b][S])
+    bounds, j = [], S
+    for b in range(b_best, 0, -1):
+        bounds.append(j)
+        j = cut[b][j]
+    return list(reversed(bounds))                   # segment end indices
+
+
+def bucket_corpus(corpus: Corpus, n_buckets: int = 8, *,
+                  token_block: int = 8,
+                  overhead_docs: float = 96.0) -> BucketedCorpus:
+    """Build the length-bucketed schedule for `corpus` (host-side).
+
+    Documents are stably argsorted by true length (per chain for a
+    chain-sharded [M, D, N] corpus — every chain shares the same bucket
+    SIZES so the chain-batched grids stay rectangular, while each chain
+    gets its own permutation) and partitioned into AT MOST `n_buckets`
+    contiguous groups by a cost-model DP (`_dp_bucket_cuts`): each
+    group is padded to its token_block-rounded max length (max across
+    chains), and the partition minimizes Σ_b (D_b + overhead_docs)·N_b
+    — padded slots plus the per-bucket token-loop overhead, so heavy
+    tails get cut off into their own (small) wide bucket instead of
+    fragmenting the bulk into equal-count quantiles.  The degenerate
+    all-same-length corpus collapses to ONE bucket (the padded path
+    plus a no-op permutation).
+
+    Shapes are data-dependent, so this runs on CONCRETE arrays only —
+    call it outside jit (the result is a pytree you can pass in).
+    """
+    try:
+        mask = np.asarray(corpus.mask)
+    except jax.errors.TracerArrayConversionError as e:  # pragma: no cover
+        raise ValueError(
+            "bucket_corpus needs concrete lengths — build the schedule "
+            "outside jit and pass the BucketedCorpus in") from e
+    lens = mask.sum(-1).astype(np.int64)             # [D] or [M, D]
+    chain = lens.ndim == 2
+    D = lens.shape[-1]
+    src_n = corpus.tokens.shape[-1]
+    nb = max(1, min(int(n_buckets), D))
+
+    perm = np.argsort(lens, axis=-1, kind="stable").astype(np.int32)
+    lens_sorted = np.take_along_axis(lens, perm, axis=-1)
+
+    # per sorted position: the rounded width it needs (max across chains
+    # — each chain's sorted lengths ascend, so the column max ascends)
+    colmax = lens_sorted.max(axis=0) if chain else lens_sorted
+    round_w = np.minimum(
+        src_n, np.maximum(token_block,
+                          -(-colmax // token_block) * token_block))
+    # compress to runs of equal width — the only candidate cut points
+    segs = []
+    for w in round_w:
+        if segs and segs[-1][1] == int(w):
+            segs[-1][0] += 1
+        else:
+            segs.append([1, int(w)])
+    segs = [(c, w) for c, w in segs]
+    ends = _dp_bucket_cuts(segs, nb, float(overhead_docs))
+    widths, counts, o = [], [], 0
+    for e in ends:
+        cnt = sum(c for c, _ in segs[o:e])
+        widths.append(segs[e - 1][1])
+        counts.append(cnt)
+        o = e
+
+    inv_perm = np.argsort(perm, axis=-1, kind="stable").astype(np.int32)
+    perm_j = jnp.asarray(perm)
+    d_axis = 1 if chain else 0
+    srt = lambda x: _take_docs(x, perm_j, d_axis)
+    tok_s, mask_s, y_s = srt(corpus.tokens), srt(corpus.mask), srt(corpus.y)
+    buckets, o = [], 0
+    for c, w in zip(counts, widths):
+        sl = (slice(None),) * d_axis + (slice(o, o + c), slice(None, w))
+        buckets.append(Corpus(tokens=tok_s[sl], mask=mask_s[sl],
+                              y=y_s[sl[:-1]]))
+        o += c
+    return BucketedCorpus(buckets=tuple(buckets), perm=perm_j,
+                          inv_perm=jnp.asarray(inv_perm),
+                          ctr_stride=src_n)
+
+
+def _stair_segments(bc, pieces):
+    """Per-bucket token-padded pieces [.., D_b, N_b] → stair segments:
+    segment k holds token columns [w_{k-1}, w_k) of buckets k..K (the
+    docs still alive there — a suffix of the sorted order)."""
+    out, w_prev = [], 0
+    for k, w in enumerate(bc.widths):
+        out.append(jnp.concatenate([p[..., w_prev:w] for p in pieces[k:]],
+                                   axis=-2))
+        w_prev = w
+    return out
+
+
+def _unstair_segments(bc, segs):
+    """Inverse of _stair_segments: stair segments [.., D_k, L_k] back to
+    per-bucket token-padded pieces [.., D_b, N_b]."""
+    starts = np.cumsum([0] + list(bc.counts))
+    out = []
+    for j, c in enumerate(bc.counts):
+        cols = []
+        for k in range(j + 1):
+            a = int(starts[j] - starts[k])
+            cols.append(segs[k][..., a:a + c, :])
+        out.append(jnp.concatenate(cols, axis=-1))
+    return out
 
 
 def counts_from_assignments(tokens: Array, mask: Array, z: Array,

@@ -21,12 +21,26 @@ def make_slda_corpus(key: jax.Array, n_docs: int, vocab_size: int,
                      alpha: float = 0.1, beta: float = 0.01,
                      rho: float = 0.25, eta_scale: float = 2.0,
                      label_type: str = "continuous",
-                     var_len: bool = True) -> tuple[Corpus, jnp.ndarray]:
+                     var_len: bool = True,
+                     doc_len_dist: str = "uniform",
+                     len_sigma: float = 0.75,
+                     len_skew: float = 4.0) -> tuple[Corpus, jnp.ndarray]:
     """Sample a corpus from the sLDA generative process (Section III-B).
 
     Returns (corpus, true_eta).  Binary labels follow the paper's note: the
     latent continuous response is thresholded at its median (the paper
     models the logit of the label as Gaussian).
+
+    doc_len_dist picks the length distribution over [.., doc_len]:
+      * "uniform"   — uniform in [doc_len//2, doc_len] when var_len
+                      (the historical default; mild ~25% padding);
+      * "lognormal" — LogNormal(log(doc_len/len_skew), len_sigma) clipped
+                      to [4, doc_len]: the heavy-tailed shape of real
+                      text (the paper's MD&A filings and IMDB reviews),
+                      median ≈ doc_len/len_skew so most of the [D, N]
+                      token grid is padding (≈70% at the defaults) —
+                      what the ragged execution layer reclaims
+                      (DESIGN.md §Ragged-execution).
     """
     ks = jax.random.split(key, 6)
     phi = jax.random.dirichlet(ks[0], jnp.full((vocab_size,), beta), (n_topics,))
@@ -48,7 +62,13 @@ def make_slda_corpus(key: jax.Array, n_docs: int, vocab_size: int,
     ).reshape(n_docs, doc_len)
     tokens = jnp.clip(tokens, 0, vocab_size - 1)
 
-    if var_len:  # ragged lengths in [doc_len//2, doc_len], like real text
+    if doc_len_dist == "lognormal":
+        g = jax.random.normal(ks[5], (n_docs,))
+        lens = jnp.exp(jnp.log(doc_len / len_skew) + len_sigma * g)
+        lens = jnp.clip(jnp.round(lens), min(4, doc_len), doc_len)
+        lens = lens.astype(jnp.int32)
+        mask = (jnp.arange(doc_len)[None, :] < lens[:, None]).astype(jnp.float32)
+    elif var_len:  # ragged lengths in [doc_len//2, doc_len], like real text
         lens = jax.random.randint(ks[5], (n_docs,), doc_len // 2, doc_len + 1)
         mask = (jnp.arange(doc_len)[None, :] < lens[:, None]).astype(jnp.float32)
     else:

@@ -100,7 +100,8 @@ def slda_gibbs_sweep(tokens, mask, uniforms, z, ndt, y, inv_len, ntw, nt,
 def slda_train_sweeps(tokens, mask, z0, ndt0, y, inv_len, ntw, nt, eta,
                       seeds, *, alpha, beta, rho, n_sweeps, supervised=True,
                       doc_block=8, use_pallas=True, tpu_prng=False,
-                      unroll=8, product_form=False, chain_axis=False):
+                      unroll=8, product_form=False, chain_axis=False,
+                      ctr_stride=None):
     """`n_sweeps` training Gibbs sweeps in one fused launch per doc block.
 
     ntw: [T, W] (un-transposed — the row-gather [W, T] layout is an
@@ -132,6 +133,12 @@ def slda_train_sweeps(tokens, mask, z0, ndt0, y, inv_len, ntw, nt, eta,
     The doc_block is part of the *semantics* here (it sets the delayed-
     count granularity), so both routes pad D to a doc_block multiple and
     share the same block partition.
+
+    ctr_stride pins the per-sweep PRNG counter stride (default: the
+    padded token width N).  The length-bucketed execution layer
+    (DESIGN.md §Ragged-execution) passes the SOURCE corpus max_len here
+    while looping only each bucket's smaller width, so every (doc,
+    sweep, token) triple draws the same uniform as the unbucketed launch.
     """
     d_axis = 1 if chain_axis else 0
     ntw_t = jnp.swapaxes(ntw, -1, -2)
@@ -145,7 +152,7 @@ def slda_train_sweeps(tokens, mask, z0, ndt0, y, inv_len, ntw, nt, eta,
             pad2, (tokens, mask, z0, ndt0, y, inv_len, seeds))
     kw = dict(alpha=alpha, beta=beta, rho=rho, supervised=supervised,
               n_sweeps=n_sweeps, doc_block=doc_block,
-              product_form=product_form)
+              product_form=product_form, ctr_stride=ctr_stride)
     if use_pallas:
         fn = (slda_train_sweeps_chains_pallas if chain_axis
               else slda_train_sweeps_pallas)
@@ -167,7 +174,7 @@ def slda_train_sweeps(tokens, mask, z0, ndt0, y, inv_len, ntw, nt, eta,
 
 def slda_predict_sweeps(tokens, mask, z0, ndt0, phi, seeds, *, alpha,
                         n_burnin, n_samples, doc_block=8, use_pallas=True,
-                        tpu_prng=False, chain_axis=False):
+                        tpu_prng=False, chain_axis=False, ctr_stride=None):
     """All `n_burnin + n_samples` test-time Gibbs sweeps in one fused pass.
 
     phi: [T, W] (un-transposed — the row-gather [W, T] layout is an
@@ -189,9 +196,14 @@ def slda_predict_sweeps(tokens, mask, z0, ndt0, phi, seeds, *, alpha,
     compiled kernel (faster on hardware; one stream per doc block, so the
     per-document seeds are honored only by the hash path, and results are
     not reproducible against it).
+
+    ctr_stride pins the per-sweep PRNG counter stride (default: the
+    padded token width N); the length-bucketed execution layer passes
+    the source corpus max_len (DESIGN.md §Ragged-execution).
     """
     phi_t = jnp.swapaxes(phi, -1, -2)
-    kw = dict(alpha=alpha, n_burnin=n_burnin, n_samples=n_samples)
+    kw = dict(alpha=alpha, n_burnin=n_burnin, n_samples=n_samples,
+              ctr_stride=ctr_stride)
     if not use_pallas:
         fn = (slda_predict_sweeps_chains_jnp if chain_axis
               else slda_predict_sweeps_jnp)

@@ -63,6 +63,21 @@ _MIX2 = np.uint32(0xC2B2AE35)
 _GOLDEN = np.uint32(0x9E3779B9)
 _INV24 = np.float32(2.0 ** -24)
 
+# φ̂-gather hoist gate of the jnp twin (bitwise-neutral, perf only).
+# Chain folding multiplied the twin's document-row counts by M (PR 3), so
+# the [N, D_rows, T] hoisted tensor now crosses the CPU cache budget long
+# before the old 64 MB cap.  Interleaved A/B on this container (T=8,
+# W=1000, 25 sweeps; hoist-on vs hoist-off as distinct jitted callables):
+#   rows=64..256, N=64 (0.12-0.5 MB): hoist 1.23-1.27x FASTER
+#   rows=512, N=64 (1 MB):            0.96x — break-even/loss
+#   rows=1024..4096, N=128..256 (4-32 MB): 0.82-0.92x — clear loss
+# so the win collapses right around ~1 MB: re-gathering φ̂ rows per sweep
+# beats streaming a cache-busting tensor 25 times.  512 KB keeps the
+# small single-chain shapes that motivated the hoist (PR 1) inside the
+# gate and pushes every M-folded paper-scale shape out.
+_HOIST_T_MAX = 16
+_HOIST_BYTES_MAX = 512 * 2 ** 10
+
 
 def counter_uniform(seed, ctr):
     """Counter-based uniform in [0, 1): murmur3-finalizer mix of (seed, ctr).
@@ -81,12 +96,21 @@ def counter_uniform(seed, ctr):
     return (x >> 8).astype(jnp.float32) * _INV24
 
 
-def predict_uniforms(seeds, n_sweeps: int, n_tokens: int):
+def predict_uniforms(seeds, n_sweeps: int, n_tokens: int,
+                     ctr_stride: int | None = None):
     """Materialize the full [D, n_sweeps, N] uniform tensor the kernel
     derives on the fly — for feeding the ref oracle in equivalence tests.
     (Never used in production: this allocation is exactly what the fused
-    kernel exists to avoid.)"""
-    ctr = (jnp.arange(n_sweeps, dtype=jnp.int32)[:, None] * n_tokens
+    kernel exists to avoid.)
+
+    ctr_stride is the per-sweep counter stride (default: n_tokens).  The
+    length-bucketed execution layer keeps it pinned to the SOURCE corpus
+    max_len while looping only a bucket's (smaller) padded width, so every
+    (doc, sweep, token) triple draws the same uniform it would in the
+    unbucketed launch (DESIGN.md §Ragged-execution)."""
+    if ctr_stride is None:
+        ctr_stride = n_tokens
+    ctr = (jnp.arange(n_sweeps, dtype=jnp.int32)[:, None] * ctr_stride
            + jnp.arange(n_tokens, dtype=jnp.int32)[None, :])
     return counter_uniform(seeds[:, None, None], ctr[None])
 
@@ -94,7 +118,8 @@ def predict_uniforms(seeds, n_sweeps: int, n_tokens: int):
 def _predict_kernel(tokens_ref, mask_ref, seed_ref, z_ref, ndt_ref, phi_t_ref,
                     z_out_ref, avg_ref,
                     *, alpha: float, n_burnin: int, n_samples: int,
-                    n_tokens: int, tpu_prng: bool, chain_grid: bool = False):
+                    n_tokens: int, ctr_stride: int, tpu_prng: bool,
+                    chain_grid: bool = False):
     phi_t = phi_t_ref[...]                    # [W, T] resident in VMEM
     seeds = seed_ref[:, 0]                    # [DB]
     T = phi_t.shape[1]
@@ -132,7 +157,7 @@ def _predict_kernel(tokens_ref, mask_ref, seed_ref, z_ref, ndt_ref, phi_t_ref,
                     pltpu.prng_random_bits(w.shape), jnp.uint32)
                 u = (bits >> 8).astype(jnp.float32) * _INV24
             else:
-                u = counter_uniform(seeds, s * n_tokens + n)
+                u = counter_uniform(seeds, s * ctr_stride + n)
 
             old = (topic_iota == z_old[:, None]).astype(jnp.float32) * m[:, None]
             ndt = ndt - old
@@ -160,12 +185,14 @@ def _predict_kernel(tokens_ref, mask_ref, seed_ref, z_ref, ndt_ref, phi_t_ref,
 
 def slda_predict_sweeps_pallas(tokens, mask, seeds, z0, ndt0, phi_t, *,
                                alpha, n_burnin, n_samples, doc_block=8,
-                               interpret=True, tpu_prng=False):
+                               interpret=True, tpu_prng=False,
+                               ctr_stride=None):
     """All prediction sweeps for every document in ONE launch per doc block.
 
     tokens/mask/z0: [D, N]; seeds: int32 [D]; ndt0: [D, T]; phi_t: [W, T].
     Returns (ndt_avg [D, T], z_final [D, N]).  D must be a multiple of
-    doc_block (ops.py pads).
+    doc_block (ops.py pads).  ctr_stride pins the PRNG counter stride
+    (default N — see predict_uniforms).
     """
     D, N = tokens.shape
     T = ndt0.shape[-1]
@@ -178,7 +205,9 @@ def slda_predict_sweeps_pallas(tokens, mask, seeds, z0, ndt0, phi_t, *,
 
     kernel = functools.partial(
         _predict_kernel, alpha=float(alpha), n_burnin=int(n_burnin),
-        n_samples=int(n_samples), n_tokens=N, tpu_prng=tpu_prng)
+        n_samples=int(n_samples), n_tokens=N,
+        ctr_stride=int(N if ctr_stride is None else ctr_stride),
+        tpu_prng=tpu_prng)
 
     z_final, ndt_avg = pl.pallas_call(
         kernel,
@@ -196,7 +225,7 @@ def slda_predict_sweeps_pallas(tokens, mask, seeds, z0, ndt0, phi_t, *,
 def slda_predict_sweeps_chains_pallas(tokens, mask, seeds, z0, ndt0, phi_t,
                                       *, alpha, n_burnin, n_samples,
                                       doc_block=8, interpret=True,
-                                      tpu_prng=False):
+                                      tpu_prng=False, ctr_stride=None):
     """Chain-batched fused prediction: grid (M, D/doc_block), ONE launch
     for all M chains of the paper's parallel algorithms.
 
@@ -230,8 +259,9 @@ def slda_predict_sweeps_chains_pallas(tokens, mask, seeds, z0, ndt0, phi_t,
 
     kernel = functools.partial(
         _predict_kernel, alpha=float(alpha), n_burnin=int(n_burnin),
-        n_samples=int(n_samples), n_tokens=N, tpu_prng=tpu_prng,
-        chain_grid=True)
+        n_samples=int(n_samples), n_tokens=N,
+        ctr_stride=int(N if ctr_stride is None else ctr_stride),
+        tpu_prng=tpu_prng, chain_grid=True)
 
     z_final, ndt_avg = pl.pallas_call(
         kernel,
@@ -247,7 +277,8 @@ def slda_predict_sweeps_chains_pallas(tokens, mask, seeds, z0, ndt0, phi_t,
 
 
 def slda_predict_sweeps_chains_jnp(tokens, mask, seeds, z0, ndt0, phi_t, *,
-                                   alpha, n_burnin, n_samples, unroll=8):
+                                   alpha, n_burnin, n_samples, unroll=8,
+                                   ctr_stride=None):
     """Chain-batched jnp twin: FOLD the chain axis into the document-row
     axis around one stacked table.
 
@@ -279,12 +310,94 @@ def slda_predict_sweeps_chains_jnp(tokens, mask, seeds, z0, ndt0, phi_t, *,
     ndt_avg, z_final = slda_predict_sweeps_jnp(
         tok_f, mask_f, seeds.reshape(M * D), z0.reshape(M * D, N),
         ndt0.reshape(M * D, T), phi_t.reshape(M * W, T),
-        alpha=alpha, n_burnin=n_burnin, n_samples=n_samples, unroll=unroll)
+        alpha=alpha, n_burnin=n_burnin, n_samples=n_samples, unroll=unroll,
+        ctr_stride=ctr_stride)
     return ndt_avg.reshape(M, D, T), z_final.reshape(M, D, N)
 
 
+def slda_predict_stair_jnp(seg_tokens, seg_mask, seg_z0, seg_row_start,
+                           seg_tok_start, seeds, ndt0, phi_t, *, alpha,
+                           n_burnin, n_samples, ctr_stride, unroll=8):
+    """STAIRCASE prediction twin — the ragged execution layer's CPU
+    executor (DESIGN.md §Ragged-execution).
+
+    Documents are sorted ASCENDING by length, so a length-bucket
+    schedule's widths w_1 < … < w_K split the token axis into segments
+    [w_{k-1}, w_k) in which the docs still alive are exactly the SUFFIX
+    of rows starting at `seg_row_start[k]`.  One sweep walks the
+    segments in order, each a lax.scan over that segment's positions on
+    only the live rows — the total step count stays w_K = N_max (unlike
+    per-bucket launches, which re-run the early positions per bucket and
+    inflate Σ_b N_b sequential steps; that inflation is what makes
+    per-bucket prediction LOSE on dispatch-bound CPU token loops), while
+    the executed row-slots collapse to the staircase ≈ Σ true tokens.
+
+    Per-token ops are row-independent and the counter uniforms use the
+    GLOBAL token position (`seg_tok_start[k] + n` at stride ctr_stride),
+    so per-document results are bit-identical to the padded twin for any
+    schedule — same contract as the per-bucket launches
+    (tests/test_ragged.py).
+
+    seg_tokens/seg_mask/seg_z0: per-segment arrays [R_k, L_k] with
+    R_k = R - seg_row_start[k] (rows are the flat doc axis — the caller
+    folds chains doc-major so doc suffixes stay row suffixes);
+    seeds: [R]; ndt0: [R, T]; phi_t: [W, T] (stacked [M·W, T] when
+    chains are folded, with token ids pre-offset).
+    Returns ndt_avg [R, T] (z is consumed internally; prediction's only
+    product is the post-burn-in average).
+    """
+    R, T = ndt0.shape
+    n_sweeps = n_burnin + n_samples
+    topic_iota = jnp.arange(T, dtype=jnp.int32)[None, :]
+    tri_u = upper_tri_ones(T)
+    segs = []
+    for tok, mk, z, r0, n0 in zip(seg_tokens, seg_mask, seg_z0,
+                                  seg_row_start, seg_tok_start):
+        L = tok.shape[-1]
+        n_iota = jnp.arange(n0, n0 + L, dtype=jnp.int32)
+        segs.append((tok.T, mk.T, int(r0), n_iota))  # token-major
+    z_init = tuple(z.T for z in seg_z0)
+
+    def one_sweep(carry, s):
+        z_segs, ndt, acc = carry
+        new_z = []
+        for (tok_t, mask_t, r0, n_iota), z_t in zip(segs, z_segs):
+            sub_seeds = seeds[r0:]
+
+            def token_step(nd, inp):
+                w, m, z_old, n = inp
+                pw = jnp.take(phi_t, w, axis=0)
+                u = counter_uniform(sub_seeds, s * ctr_stride + n)
+                old = (topic_iota == z_old[:, None]).astype(jnp.float32) \
+                    * m[:, None]
+                nd = nd - old
+                p = (nd + alpha) * pw
+                c = jnp.dot(p, tri_u)
+                z_new = jnp.sum(
+                    (c < (u * c[:, -1])[:, None]).astype(jnp.int32), axis=1)
+                z_new = jnp.where(m > 0, z_new, z_old).astype(jnp.int32)
+                nd = nd + (topic_iota == z_new[:, None]) \
+                    .astype(jnp.float32) * m[:, None]
+                return nd, z_new
+
+            nd, z_t = jax.lax.scan(token_step, ndt[r0:],
+                                   (tok_t, mask_t, z_t, n_iota),
+                                   unroll=unroll)
+            ndt = ndt.at[r0:].set(nd) if r0 else nd
+            new_z.append(z_t)
+        keep = (s >= n_burnin).astype(jnp.float32)
+        return (tuple(new_z), ndt, acc + keep * ndt), None
+
+    (_, _, acc), _ = jax.lax.scan(
+        one_sweep, (z_init, ndt0, jnp.zeros_like(ndt0)),
+        jnp.arange(n_sweeps, dtype=jnp.int32))
+    # f32 reciprocal multiply, matching the fused kernel bit-for-bit
+    return acc * np.float32(1.0 / n_samples)
+
+
 def slda_predict_sweeps_jnp(tokens, mask, seeds, z0, ndt0, phi_t, *,
-                            alpha, n_burnin, n_samples, unroll=8):
+                            alpha, n_burnin, n_samples, unroll=8,
+                            ctr_stride=None):
     """Batched-jnp twin of the fused kernel — the CPU fast path.
 
     Same restructuring as the kernel, expressed as XLA-friendly jnp: all D
@@ -297,11 +410,14 @@ def slda_predict_sweeps_jnp(tokens, mask, seeds, z0, ndt0, phi_t, *,
     Bit-identical to the interpret-mode kernel (shared op order + PRNG).
 
     For small topic counts (T ≤ 16, where the gemm no longer dominates,
-    and only while the gathered [N, D, T] tensor stays under 64 MB) the
-    φ̂ row gather is additionally hoisted out of the sweep loop so the
-    sweeps share it instead of re-gathering every sweep.
+    and only while the gathered [N, D, T] tensor stays cache-resident —
+    see the _HOIST_* gate constants above, re-tuned for M-folded row
+    counts) the φ̂ row gather is additionally hoisted out of the sweep
+    loop so the sweeps share it instead of re-gathering every sweep.
     """
     D, N = tokens.shape
+    if ctr_stride is None:
+        ctr_stride = N
     n_sweeps = n_burnin + n_samples
     T = ndt0.shape[-1]
     topic_iota = jnp.arange(T, dtype=jnp.int32)[None, :]
@@ -313,7 +429,7 @@ def slda_predict_sweeps_jnp(tokens, mask, seeds, z0, ndt0, phi_t, *,
     # — small in T (where the gemm no longer dominates) AND in absolute
     # bytes, so paper-scale corpora never re-materialize the kind of
     # multi-GB tensor this module exists to avoid
-    hoist = T <= 16 and N * D * T * 4 <= 64 * 2 ** 20
+    hoist = T <= _HOIST_T_MAX and N * D * T * 4 <= _HOIST_BYTES_MAX
     phi_w = jnp.take(phi_t, tok_t, axis=0) if hoist else None
 
     def one_sweep(carry, s):
@@ -322,7 +438,7 @@ def slda_predict_sweeps_jnp(tokens, mask, seeds, z0, ndt0, phi_t, *,
         def token_step(ndt, inp):
             pw_or_w, m, z_old, n = inp         # [D(,T)], [D], [D], scalar
             pw = pw_or_w if hoist else jnp.take(phi_t, pw_or_w, axis=0)
-            u = counter_uniform(seeds, s * N + n)
+            u = counter_uniform(seeds, s * ctr_stride + n)
             old = (topic_iota == z_old[:, None]).astype(jnp.float32) * m[:, None]
             ndt = ndt - old
             p = (ndt + alpha) * pw

@@ -85,20 +85,23 @@ except ImportError:  # pragma: no cover
     pltpu = None
 
 
-def train_uniforms(seeds, n_sweeps: int, n_tokens: int):
+def train_uniforms(seeds, n_sweeps: int, n_tokens: int,
+                   ctr_stride: int | None = None):
     """Materialize the [D, n_sweeps, N] uniforms the fused train paths
     derive on the fly — the shared-uniforms contract for driving the ref
     oracle (and the seed single-sweep path) in equivalence tests.  Same
-    counter layout as `predict_uniforms`; never used in production."""
-    return _uniforms_tensor(seeds, n_sweeps, n_tokens)
+    counter layout (and ctr_stride semantics) as `predict_uniforms`;
+    never used in production."""
+    return _uniforms_tensor(seeds, n_sweeps, n_tokens, ctr_stride)
 
 
 def _train_kernel(tokens_ref, mask_ref, seed_ref, z_ref, ndt_ref, y_ref,
                   invlen_ref, ntw_t_ref, nt_ref, eta_ref,
                   z_out_ref, ndt_out_ref, ntw_scratch,
                   *, alpha: float, beta: float, rho: float, supervised: bool,
-                  n_sweeps: int, n_tokens: int, vocab_size: int,
-                  tpu_prng: bool, product_form: bool, chain_grid: bool):
+                  n_sweeps: int, n_tokens: int, ctr_stride: int,
+                  vocab_size: int, tpu_prng: bool, product_form: bool,
+                  chain_grid: bool):
     eta = eta_ref[0, :]                       # [T]
     seeds = seed_ref[:, 0]                    # [DB]
     y = y_ref[:, 0]                           # [DB]
@@ -140,7 +143,7 @@ def _train_kernel(tokens_ref, mask_ref, seed_ref, z_ref, ndt_ref, y_ref,
                     pltpu.prng_random_bits(w.shape), jnp.uint32)
                 u = (bits >> 8).astype(jnp.float32) * _INV24
             else:
-                u = counter_uniform(seeds, s * n_tokens + n)
+                u = counter_uniform(seeds, s * ctr_stride + n)
 
             old = (topic_iota == z_old[:, None]).astype(jnp.float32) \
                 * m[:, None]
@@ -222,13 +225,15 @@ def slda_train_sweeps_pallas(tokens, mask, seeds, z0, ndt0, y, inv_len,
                              ntw_t, nt, eta, *, alpha, beta, rho,
                              supervised=True, n_sweeps=1, doc_block=8,
                              interpret=True, tpu_prng=False,
-                             product_form=False):
+                             product_form=False, ctr_stride=None):
     """All `n_sweeps` training sweeps for a doc block in ONE launch.
 
     tokens/mask/z0: [D, N]; seeds: int32 [D]; ndt0: [D, T]; y/inv_len: [D];
     ntw_t: [W, T] (row-gather layout); nt/eta: [T].  D must be a multiple
     of doc_block (ops.py pads).  Returns (z_final [D, N], ndt_final [D, T]);
     the caller refreshes the global tables from (z0, z_final).
+    ctr_stride pins the PRNG counter stride (default N — see
+    slda_predict.predict_uniforms).
     """
     D, N = tokens.shape
     T = ndt0.shape[-1]
@@ -242,6 +247,7 @@ def slda_train_sweeps_pallas(tokens, mask, seeds, z0, ndt0, y, inv_len,
     kernel = functools.partial(
         _train_kernel, alpha=float(alpha), beta=float(beta), rho=float(rho),
         supervised=supervised, n_sweeps=int(n_sweeps), n_tokens=N,
+        ctr_stride=int(N if ctr_stride is None else ctr_stride),
         vocab_size=W, tpu_prng=tpu_prng, product_form=product_form,
         chain_grid=False)
 
@@ -264,7 +270,8 @@ def slda_train_sweeps_chains_pallas(tokens, mask, seeds, z0, ndt0, y,
                                     inv_len, ntw_t, nt, eta, *, alpha, beta,
                                     rho, supervised=True, n_sweeps=1,
                                     doc_block=8, interpret=True,
-                                    tpu_prng=False, product_form=False):
+                                    tpu_prng=False, product_form=False,
+                                    ctr_stride=None):
     """Chain-batched fused train launch: grid (M, D/doc_block).
 
     One pallas_call runs all M independent chains: tokens/mask/z0
@@ -289,6 +296,7 @@ def slda_train_sweeps_chains_pallas(tokens, mask, seeds, z0, ndt0, y,
     kernel = functools.partial(
         _train_kernel, alpha=float(alpha), beta=float(beta), rho=float(rho),
         supervised=supervised, n_sweeps=int(n_sweeps), n_tokens=N,
+        ctr_stride=int(N if ctr_stride is None else ctr_stride),
         vocab_size=W, tpu_prng=tpu_prng, product_form=product_form,
         chain_grid=True)
 
@@ -310,7 +318,7 @@ def slda_train_sweeps_chains_pallas(tokens, mask, seeds, z0, ndt0, y,
 def slda_train_sweeps_jnp(tokens, mask, seeds, z0, ndt0, y, inv_len,
                           ntw_t, nt, eta, *, alpha, beta, rho,
                           supervised=True, n_sweeps=1, doc_block=8,
-                          unroll=8, product_form=False):
+                          unroll=8, product_form=False, ctr_stride=None):
     """Blocked-jnp twin of the fused train kernel — the CPU fast path.
 
     Same restructuring expressed as XLA-friendly jnp: a vmap over doc
@@ -341,6 +349,8 @@ def slda_train_sweeps_jnp(tokens, mask, seeds, z0, ndt0, y, inv_len,
     delayed (fewer blocks); core.gibbs clamps it to the corpus size.
     """
     D, N = tokens.shape
+    if ctr_stride is None:
+        ctr_stride = N
     T = ndt0.shape[-1]
     W = ntw_t.shape[0]
     assert D % doc_block == 0, (D, doc_block)
@@ -368,7 +378,7 @@ def slda_train_sweeps_jnp(tokens, mask, seeds, z0, ndt0, y, inv_len,
             def token_step(carry2, inp):
                 ndt, st = carry2
                 w, m, z_old, n = inp
-                u = counter_uniform(seed_b, s * N + n)
+                u = counter_uniform(seed_b, s * ctr_stride + n)
                 own = (topic_iota == z_old[:, None]) & (m[:, None] > 0)
                 old = own.astype(jnp.float32)
                 ndt = ndt - old
@@ -436,10 +446,149 @@ def slda_train_sweeps_jnp(tokens, mask, seeds, z0, ndt0, y, inv_len,
             ndt_fin.reshape(D, T))
 
 
+def slda_train_stair_jnp(seg_tokens, seg_mask, seg_z0, seg_row_start,
+                         seg_tok_start, seeds, ndt0, y, inv_len,
+                         ntw_t_stack, nt, eta, chain_of_row, *, alpha,
+                         beta, rho, vocab_size, ctr_stride,
+                         supervised=True, n_sweeps=1, product_form=False,
+                         unroll=8):
+    """STAIRCASE fused-training twin — the ragged layer's CPU executor
+    for multi-sweep launches (DESIGN.md §Ragged-execution).
+
+    Same stair walk as `slda_predict_stair_jnp`: docs sorted ASCENDING
+    by length, chains folded DOC-MAJOR (row r = d·M + c) so each token
+    segment [w_{k-1}, w_k) runs on the still-alive row SUFFIX — the
+    sequential step count per sweep stays N_max while executed slots
+    collapse to the staircase.  Chains fold around ONE stacked
+    `[M·W, T]` topic-word table (token ids pre-offset by `c·W`) exactly
+    like the prediction fold; the per-chain `nt`/η are row-gathered once
+    per sweep (both sweep-frozen).
+
+    Between in-launch sweeps the table refreshes from ALL rows' changed
+    tokens — the block partition here is the WHOLE corpus, i.e. the
+    doc_block→D limit of the §Train-kernel delayed-count family (least
+    delayed; the per-sweep refresh is exact globally, like the seed
+    path's between-sweep refresh, while the counter-hash PRNG and the
+    in-launch frozen η keep it a fused-family member).  As everywhere,
+    at n_sweeps=1 no refresh runs and per-document results are
+    bit-identical to the padded op under any schedule.
+
+    seg_tokens/seg_mask/seg_z0: per-segment [R_k, L_k] (tokens
+    pre-offset into the stacked vocab); seeds/y/inv_len: [R] folded;
+    ndt0: [R, T]; ntw_t_stack: [M·W, T]; nt/eta: [M, T];
+    chain_of_row: int32 [R].  Returns (z_segs_final, ndt_final [R, T]);
+    the caller refreshes the global tables from (z0, z_final).
+    """
+    R, T = ndt0.shape
+    W = vocab_size
+    topic_iota = jnp.arange(T, dtype=jnp.int32)[None, :]
+    tri_u = upper_tri_ones(T)
+    eta_rows = jnp.take(eta, chain_of_row, axis=0)        # [R, T] frozen
+    segs = []
+    for tok, mk, r0, n0 in zip(seg_tokens, seg_mask, seg_row_start,
+                               seg_tok_start):
+        L = tok.shape[-1]
+        n_iota = jnp.arange(n0, n0 + L, dtype=jnp.int32)
+        segs.append((tok.T, mk.T, int(r0), n_iota))       # token-major
+    z_init = tuple(z.T for z in seg_z0)
+
+    def one_sweep(carry, s, refresh=True):
+        z_segs, ndt_start, ntw_loc, nt_loc = carry
+        nt_rows = jnp.take(nt_loc, chain_of_row, axis=0)  # [R, T] frozen
+        st0 = jnp.sum(ndt_start * eta_rows, axis=-1)      # [R]
+        if not product_form:
+            # sweep-frozen hoisted log tables + own-token scalar fixups
+            # (bit-equal to per-token logs — see slda_train_sweeps_jnp)
+            log_ntw = jnp.log(ntw_loc + beta)             # [M·W, T]
+            log_nt_rows = jnp.log(nt_rows + W * beta)     # [R, T]
+        ndt, st = ndt_start, st0
+        new_z = []
+        for (tok_t, mask_t, r0, n_iota), z_t in zip(segs, z_segs):
+            sub = lambda a: a[r0:] if r0 else a
+            seeds_s, y_s, il_s = sub(seeds), sub(y), sub(inv_len)
+            eta_s, nt_rows_s = sub(eta_rows), sub(nt_rows)
+            if not product_form:
+                log_nt_s = sub(log_nt_rows)
+            take_eta = lambda zz: jnp.take_along_axis(
+                eta_s, zz[:, None], axis=1)[:, 0]
+
+            def token_step(carry2, inp):
+                nd, stt = carry2
+                w, m, z_old, n = inp
+                u = counter_uniform(seeds_s, s * ctr_stride + n)
+                own = (topic_iota == z_old[:, None]) & (m[:, None] > 0)
+                old = own.astype(jnp.float32)
+                nd = nd - old
+                stt = stt - take_eta(z_old) * m
+                if product_form:
+                    ntw_w = jnp.take(ntw_loc, w, axis=0) - old
+                    p = (nd + alpha) * (ntw_w + beta) \
+                        / (nt_rows_s - old + W * beta)
+                    if supervised:
+                        mu_t = (stt[:, None] + eta_s) * il_s[:, None]
+                        g = -0.5 * (y_s[:, None] - mu_t) ** 2 / rho
+                        p = p * jnp.exp(g - jnp.max(g, axis=1,
+                                                    keepdims=True))
+                else:
+                    v_own = ntw_loc[w, z_old]             # [Rk]
+                    fix_ntw = jnp.log((v_own - 1.0) + beta)
+                    nt_own = jnp.take_along_axis(
+                        nt_rows_s, z_old[:, None], axis=1)[:, 0]
+                    fix_nt = jnp.log((nt_own - 1.0) + W * beta)
+                    lw = jnp.where(own, fix_ntw[:, None],
+                                   jnp.take(log_ntw, w, axis=0))
+                    ln = jnp.where(own, fix_nt[:, None], log_nt_s)
+                    logp = jnp.log(nd + alpha) + lw - ln
+                    if supervised:
+                        mu_t = (stt[:, None] + eta_s) * il_s[:, None]
+                        logp = logp - 0.5 * (y_s[:, None] - mu_t) ** 2 \
+                            / rho
+                    p = jnp.exp(logp - jnp.max(logp, axis=1,
+                                               keepdims=True))
+                c = jnp.dot(p, tri_u)
+                z_new = jnp.sum(
+                    (c < (u * c[:, -1])[:, None]).astype(jnp.int32),
+                    axis=1)
+                z_new = jnp.where(m > 0, z_new, z_old).astype(jnp.int32)
+                nd = nd + (topic_iota == z_new[:, None]) \
+                    .astype(jnp.float32) * m[:, None]
+                stt = stt + take_eta(z_new) * m
+                return (nd, stt), z_new
+
+            (nd, stt), z_t = jax.lax.scan(
+                token_step, (sub(ndt), sub(st)),
+                (tok_t, mask_t, z_t, n_iota), unroll=unroll)
+            ndt = ndt.at[r0:].set(nd) if r0 else nd
+            st = st.at[r0:].set(stt) if r0 else stt
+            new_z.append(z_t)
+
+        if refresh:  # whole-corpus delayed-count refresh (exact scatter)
+            for (tok_t, mask_t, r0, _), zo_t, zn_t in zip(segs, z_segs,
+                                                          new_z):
+                w_f = tok_t.ravel()
+                zo_f, zn_f = zo_t.ravel(), zn_t.ravel()
+                changed = mask_t.ravel() * (zn_f != zo_f) \
+                    .astype(jnp.float32)
+                ntw_loc = (ntw_loc.at[w_f, zo_f].add(-changed)
+                           .at[w_f, zn_f].add(changed))
+            nt_loc = nt_loc + jnp.zeros_like(nt_loc) \
+                .at[chain_of_row].add(ndt - ndt_start)
+        return (tuple(new_z), ndt, ntw_loc, nt_loc), None
+
+    carry = (z_init, ndt0, ntw_t_stack, nt)
+    if n_sweeps > 1:
+        carry, _ = jax.lax.scan(
+            one_sweep, carry, jnp.arange(n_sweeps - 1, dtype=jnp.int32))
+    (z_segs, ndt, _, _), _ = one_sweep(
+        carry, jnp.int32(n_sweeps - 1), refresh=False)
+    return tuple(z.T for z in z_segs), ndt
+
+
 def slda_train_sweeps_chains_jnp(tokens, mask, seeds, z0, ndt0, y, inv_len,
                                  ntw_t, nt, eta, *, alpha, beta, rho,
                                  supervised=True, n_sweeps=1, doc_block=8,
-                                 unroll=8, product_form=False):
+                                 unroll=8, product_form=False,
+                                 ctr_stride=None):
     """Chain-batched jnp twin: all inputs carry a leading chain dim M
     (tokens [M, D, N], ntw_t [M, W, T], nt/eta [M, T], ...).
 
@@ -456,6 +605,6 @@ def slda_train_sweeps_chains_jnp(tokens, mask, seeds, z0, ndt0, y, inv_len,
     fn = functools.partial(
         slda_train_sweeps_jnp, alpha=alpha, beta=beta, rho=rho,
         supervised=supervised, n_sweeps=n_sweeps, doc_block=doc_block,
-        unroll=unroll, product_form=product_form)
+        unroll=unroll, product_form=product_form, ctr_stride=ctr_stride)
     return jax.vmap(fn)(tokens, mask, seeds, z0, ndt0, y, inv_len,
                         ntw_t, nt, eta)

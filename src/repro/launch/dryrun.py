@@ -167,6 +167,12 @@ def analyze(lowered, meta, *, verbose=True):
             "decode": SHAPES[meta["shape"]].global_batch}[meta["kind"]]
     mult = 6 if meta["kind"] == "train" else 2
     meta["model_flops"] = mult * meta["active_params"] * toks
+    # padded-slot token count per step + the mask-weighted fraction of it
+    # that is real (LM batches here are dense → 1.0; masked workloads
+    # must report honestly so roofline.py can show effective tok/s next
+    # to padded-slot tok/s — the padding-waste column)
+    meta["tokens_per_step"] = toks
+    meta["real_token_frac"] = 1.0
     whole_flops = cost.flops * meta["n_chips"]
     meta["useful_flop_ratio"] = (meta["model_flops"] / whole_flops
                                  if whole_flops else 0.0)

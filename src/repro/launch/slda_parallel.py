@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import Corpus, SLDAConfig, combine, partition
+from repro.core import Corpus, SLDAConfig, bucket_corpus, combine, partition
 from repro.core.parallel import predict_chains_keyed, train_chains_keyed
 
 
@@ -54,7 +54,14 @@ def parallel_slda_shard_map(key, train: Corpus, test: Corpus,
     without the caller having to re-tune the config per backend; an
     explicit `use_pallas=True` in cfg is always honored (including
     interpret mode on CPU meshes, which the communication-freedom test
-    exercises)."""
+    exercises).
+
+    cfg.length_buckets > 0 routes the chain phases through the ragged
+    execution layer (DESIGN.md §Ragged-execution): shards and test are
+    length-bucketed HERE — outside shard_map, where lengths are concrete
+    — and the bucketed pytrees flow through the same per-slice chain
+    functions (every bucket's arrays carry the chain dim, so the specs
+    below still shard only that axis; zero collectives is untouched)."""
     if auto_pallas and not cfg.use_pallas and mesh_supports_pallas(mesh):
         cfg = dataclasses.replace(cfg, use_pallas=True)
     cpd = cfg.chains_per_device if chains_per_device is None \
@@ -62,6 +69,14 @@ def parallel_slda_shard_map(key, train: Corpus, test: Corpus,
     mesh_m = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
     m = mesh_m * cpd
     shards = partition(train, m)                      # [M, D/M, ...]
+    shard_spec, test_spec = P(axis), P()
+    if cfg.length_buckets > 0:
+        kw = dict(token_block=cfg.bucket_token_block,
+                  overhead_docs=cfg.bucket_overhead_docs)
+        shards = bucket_corpus(shards, cfg.length_buckets, **kw)
+        test = bucket_corpus(test, cfg.length_buckets, **kw)
+        shard_spec = jax.tree.map(lambda _: P(axis), shards)
+        test_spec = jax.tree.map(lambda _: P(), test)
 
     def chain_fn(key_rep, shard_blk, test_blk):
         # cpd chains per mesh slice: the in_spec hands this slice cpd
@@ -85,7 +100,7 @@ def parallel_slda_shard_map(key, train: Corpus, test: Corpus,
 
     fn = shard_map(
         chain_fn, mesh=mesh,
-        in_specs=(P(), P(axis), P()),
+        in_specs=(P(), shard_spec, test_spec),
         out_specs=(P(), P()),
         check_rep=False,   # chain-local scans carry unvarying state
     )
