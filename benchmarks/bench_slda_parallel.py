@@ -40,9 +40,12 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import SLDAConfig, combine, partition, predict, train_chain
+from repro.core import (GibbsState, SLDAConfig, SLDAModel, combine,
+                        init_state, partition, phi_hat, solve_eta, sweep,
+                        zbar)
 from repro.core.parallel import (run_simple_average, run_weighted_average,
                                  train_chains)
+from repro.core.types import apply_count_deltas, counts_from_assignments
 from repro.data import make_slda_corpus, train_test_split
 
 
@@ -51,19 +54,123 @@ from repro.data import make_slda_corpus, train_test_split
 # (PR 2 state), kept here so the "before" column stays measurable after
 # the rewrite: one vmap of the single-chain train/predict per chain and
 # two separate prediction passes for the Weighted Average weights.
+# Since PR 5 the LIBRARY's train_chain/predict are themselves thin M=1
+# wrappers over the chain-batched plan loop, so vmapping them would
+# measure the "after" code twice — the old single-chain loops are
+# rebuilt here from the still-public primitives (init_state/sweep/
+# solve_eta and the non-chain ops), preserving the old key trees.
+
+def _train_chain_pre(key, corpus, cfg):
+    """The pre-plan single-chain EM loop (seed path at spl=1, fused
+    non-chain launches at spl>1) — what jax.vmap(train_chain) ran
+    before PR 5."""
+    from repro.kernels import ops
+    k_init, k_sweeps = jax.random.split(key)
+    state0 = init_state(k_init, corpus, cfg)
+    every = cfg.count_rebuild_every
+
+    if cfg.sweeps_per_launch > 1:
+        spl = cfg.sweeps_per_launch
+        D = corpus.n_docs
+        doc_block = min(cfg.train_doc_block, -(-D // 8) * 8)
+        inv_len = 1.0 / jnp.maximum(corpus.lengths(), 1.0)
+
+        def launch(state, k, it, n_sweeps):
+            seeds = jax.random.randint(k, (D,), 0,
+                                       jnp.iinfo(jnp.int32).max, jnp.int32)
+            z, ndt = ops.slda_train_sweeps(
+                corpus.tokens, corpus.mask, state.z, state.ndt, corpus.y,
+                inv_len, state.ntw, state.nt, state.eta, seeds,
+                alpha=cfg.alpha, beta=cfg.beta, rho=cfg.rho,
+                n_sweeps=n_sweeps, supervised=True, doc_block=doc_block,
+                use_pallas=cfg.use_pallas,
+                product_form=cfg.product_form_sweeps)
+
+            def rebuild(_):
+                return counts_from_assignments(
+                    corpus.tokens, corpus.mask, z, cfg.n_topics,
+                    cfg.vocab_size)
+
+            def incremental(_):
+                ntw, nt = apply_count_deltas(
+                    state.ntw, state.nt, corpus.tokens, corpus.mask,
+                    state.z, z)
+                return ndt, ntw, nt
+
+            if every > 0:
+                ndt, ntw, nt = jax.lax.cond(it % every == 0, rebuild,
+                                            incremental, None)
+            else:
+                ndt, ntw, nt = incremental(None)
+            state = GibbsState(z=z, ndt=ndt, ntw=ntw, nt=nt,
+                               eta=state.eta)
+            eta = solve_eta(zbar(state, corpus), corpus.y, cfg)
+            return GibbsState(z, ndt, ntw, nt, eta)
+
+        n_full, rem = divmod(cfg.n_iters, spl)
+        keys = jax.random.split(k_sweeps, n_full + (1 if rem else 0))
+        state = state0
+        if n_full:
+            state, _ = jax.lax.scan(
+                lambda s, inp: (launch(s, inp[0], inp[1], spl), None),
+                state, (keys[:n_full], jnp.arange(n_full)))
+        if rem:
+            state = launch(state, keys[-1], jnp.asarray(n_full), rem)
+    else:
+        def em_step(state, inp):
+            k, it = inp
+            rebuild = (it % every == 0) if every > 0 else False
+            state = sweep(k, corpus, state, cfg, supervised=True,
+                          exact_rebuild=rebuild)
+            eta = solve_eta(zbar(state, corpus), corpus.y, cfg)
+            return GibbsState(state.z, state.ndt, state.ntw, state.nt,
+                              eta), None
+
+        state, _ = jax.lax.scan(
+            em_step, state0, (jax.random.split(k_sweeps, cfg.n_iters),
+                              jnp.arange(cfg.n_iters)))
+
+    yhat_tr = zbar(state, corpus) @ state.eta
+    mse = jnp.mean((yhat_tr - corpus.y) ** 2)
+    acc = jnp.mean(((yhat_tr > 0.5) == (corpus.y > 0.5))
+                   .astype(jnp.float32))
+    return state, SLDAModel(phi=phi_hat(state, cfg), eta=state.eta,
+                            train_mse=mse, train_acc=acc)
+
+
+def _predict_pre(key, model, corpus, cfg):
+    """The pre-plan single-model fused prediction pass (non-chain op)."""
+    from repro.kernels import ops
+    k_init, k_seeds = jax.random.split(key)
+    z0 = jax.random.randint(k_init, corpus.tokens.shape, 0, cfg.n_topics,
+                            jnp.int32)
+    d_idx = jnp.arange(corpus.n_docs)[:, None]
+    ndt0 = jnp.zeros((corpus.n_docs, cfg.n_topics), jnp.float32) \
+        .at[d_idx, z0].add(corpus.mask)
+    seeds = jax.random.randint(k_seeds, (corpus.n_docs,), 0,
+                               jnp.iinfo(jnp.int32).max, jnp.int32)
+    ndt_avg, _ = ops.slda_predict_sweeps(
+        corpus.tokens, corpus.mask, z0, ndt0, model.phi, seeds,
+        alpha=cfg.alpha, n_burnin=cfg.n_pred_burnin,
+        n_samples=cfg.n_pred_samples, doc_block=cfg.pred_doc_block,
+        use_pallas=cfg.use_pallas)
+    zb = ndt_avg / jnp.maximum(corpus.lengths(), 1.0)[:, None]
+    return zb @ model.eta
+
 
 def train_chains_vmap(key, shards, cfg):
     m = shards.tokens.shape[0]
     keys = jax.random.split(key, m)
-    _, models = jax.vmap(train_chain, in_axes=(0, 0, None))(keys, shards, cfg)
+    _, models = jax.vmap(_train_chain_pre, in_axes=(0, 0, None))(
+        keys, shards, cfg)
     return models
 
 
 def predict_chains_vmap(key, models, corpus, cfg):
     m = models.eta.shape[0]
     keys = jax.random.split(key, m)
-    return jax.vmap(predict, in_axes=(0, 0, None, None))(keys, models,
-                                                         corpus, cfg)
+    return jax.vmap(_predict_pre, in_axes=(0, 0, None, None))(
+        keys, models, corpus, cfg)
 
 
 def run_simple_vmap(key, train, test, cfg, m):

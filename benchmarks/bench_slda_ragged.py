@@ -43,12 +43,9 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import SLDAConfig, partition, train_chains
-from repro.core.parallel import (_schedule, _train_chains_jit,
-                                 run_simple_average,
-                                 run_simple_average_bucketed,
-                                 run_weighted_average,
-                                 run_weighted_average_bucketed)
+from repro.core import SLDAConfig, build_schedule, partition, train_chains
+from repro.core.parallel import (_train_chains_jit, run_simple_average,
+                                 run_weighted_average)
 from repro.data import make_slda_corpus, train_test_split
 
 
@@ -89,7 +86,7 @@ def run(quick: bool = False, reps: int = 3):
 
     # schedule stats at the headline bucket count (the whole-corpus view;
     # the runners build their own shard/test schedules per phase)
-    sched = _schedule(corpus, bkt_cfg)
+    sched = build_schedule(corpus, bkt_cfg)
     slot_tok = corpus.tokens.size
     bkt_tok = sched.padded_tokens()
     real_tok = float(sched.real_tokens())
@@ -99,9 +96,13 @@ def run(quick: bool = False, reps: int = 3):
     jp_t = jax.jit(train_chains, static_argnums=(2,))
 
     def train_bucketed(cfg):
-        return _train_chains_jit(key, _schedule(partition(train, m), cfg),
+        return _train_chains_jit(key,
+                                 build_schedule(partition(train, m), cfg),
                                  cfg)
 
+    # bucketed rows call the SAME unified entry points, un-jitted at the
+    # top level (schedule construction needs concrete lengths): the
+    # length_buckets>0 config routes them through the ragged plan cells
     spl1_pad = dataclasses.replace(base_cfg, sweeps_per_launch=1)
     spl1_bkt = dataclasses.replace(bkt_cfg, sweeps_per_launch=1)
     rows = [("weighted", "padded_tuned", nb),
@@ -113,22 +114,19 @@ def run(quick: bool = False, reps: int = 3):
             ("weighted", "padded_spl1", 0),
             ("weighted", "bucketed_spl1", nb)]
     fns = [lambda: jp_w(key, train, test, base_cfg, m),
-           lambda: run_weighted_average_bucketed(key, train, test,
-                                                 bkt_cfg, m),
+           lambda: run_weighted_average(key, train, test, bkt_cfg, m),
            lambda: jp_s(key, train, test, base_cfg, m),
-           lambda: run_simple_average_bucketed(key, train, test, bkt_cfg,
-                                               m),
+           lambda: run_simple_average(key, train, test, bkt_cfg, m),
            lambda: jp_t(key, partition(train, m), base_cfg),
            lambda: train_bucketed(bkt_cfg),
            lambda: jp_w(key, train, test, spl1_pad, m),
-           lambda: run_weighted_average_bucketed(key, train, test,
-                                                 spl1_bkt, m)]
+           lambda: run_weighted_average(key, train, test, spl1_bkt, m)]
     for k_nb in nb_sweep:
         if k_nb == nb:
             continue
         c = dataclasses.replace(bkt_cfg, length_buckets=k_nb)
         rows.append(("weighted", "bucketed_tuned", k_nb))
-        fns.append(lambda c=c: run_weighted_average_bucketed(
+        fns.append(lambda c=c: run_weighted_average(
             key, train, test, c, m))
 
     times = _timed_round_robin(fns, reps=reps)
@@ -145,7 +143,7 @@ def run(quick: bool = False, reps: int = 3):
                      / len(ys))
 
     mse_pad = mean_mse(jp_w, base_cfg)
-    mse_bkt = mean_mse(run_weighted_average_bucketed, bkt_cfg)
+    mse_bkt = mean_mse(run_weighted_average, bkt_cfg)
 
     results = {
         "padding_frac": round(padding_frac, 4),

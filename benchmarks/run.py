@@ -1,10 +1,21 @@
-"""Benchmark harness entry point — one function per paper figure/table.
+"""Benchmark harness entry point — one registry entry per paper
+figure/table or perf artifact.
 
   fig6  MD&A (continuous y): 4 algorithms × (time, test MSE)     [Fig. 6]
   fig7  IMDB (binary y): 4 algorithms × (time, test accuracy)    [Fig. 7]
   kernels  per-kernel µs/call
-  slda_predict  fused-prediction before/after → BENCH_slda_predict.json
   roofline  aggregated dry-run roofline table (if artifacts exist)
+  opt-in extras (--only): ablation, slda_predict, slda_train,
+  slda_parallel, slda_ragged — the sLDA perf suites (quick shapes
+  unless --full; headline A/B rows printed; run each bench module's
+  own __main__ to write the JSON artifacts).
+
+Every sLDA bench routes through the unified execution-plan entry
+points (`core.plan.build_schedule` + the plan-driven `run_*`
+orchestrators — DESIGN.md §Execution-plan), so a benched configuration
+is exactly a dispatch-matrix cell; `python -m repro.launch.dryrun
+--slda-plan` prints the plan a given config resolves to before paying
+for a run.
 
 Prints ``name,us_per_call,derived`` CSV rows plus per-figure detail.
 Use --full for the paper-scale corpora (minutes on CPU).
@@ -15,61 +26,119 @@ import argparse
 import sys
 
 
+def _bench_fig6(args):
+    from . import fig6_mdna
+    scale = 1.0 if args.full else 0.1
+    for r in fig6_mdna.run(scale=scale):
+        print(f"fig6_{r['algorithm']},{r['wall_s'] * 1e6:.0f},"
+              f"mse={r['test_mse']};modeled_s={r['modeled_s']}")
+
+
+def _bench_fig7(args):
+    from . import fig7_imdb
+    scale = 1.0 if args.full else 0.02
+    for r in fig7_imdb.run(scale=scale):
+        print(f"fig7_{r['algorithm']},{r['wall_s'] * 1e6:.0f},"
+              f"acc={r['test_acc']};modeled_s={r['modeled_s']}")
+
+
+def _bench_ablation(args):
+    # beyond-paper: quality vs chain count (slow — opt-in)
+    from . import ablation_chains
+    for r in ablation_chains.run():
+        print(f"ablation_m{r['m']}_{r['rule']},0,mse={r['mse']}")
+
+
+def _bench_kernels(args):
+    from . import kernels_bench
+    for r in kernels_bench.run():
+        print(f"kernel_{r['name']},{r['us_per_call']},{r['derived']}")
+
+
+def _bench_slda_predict(args):
+    # end-to-end before/after for the fused prediction path (slow —
+    # trains 8 chains twice; opt-in).  `python -m
+    # benchmarks.bench_slda_predict` writes the JSON artifact.
+    from . import bench_slda_predict
+    payload = bench_slda_predict.run(scale=1.0 if args.full else 0.25)
+    r = payload["results"]
+    for k in ("weighted_average_seed_s", "weighted_average_fused_s"):
+        print(f"slda_predict_{k},{r[k] * 1e6:.0f},"
+              f"speedup={r['weighted_average_speedup']}x")
+
+
+def _bench_slda_train(args):
+    from . import bench_slda_train
+    r = bench_slda_train.run(scale=1.0 if args.full else 0.25,
+                             reps=5 if args.full else 1)["results"]
+    print(f"slda_train_chain,{r['train_chain_fused_s'] * 1e6:.0f},"
+          f"speedup={r['train_chain_speedup']}x")
+
+
+def _bench_slda_parallel(args):
+    from . import bench_slda_parallel
+    r = bench_slda_parallel.run(quick=not args.full)["results"]
+    print(f"slda_parallel_weighted,"
+          f"{r['weighted_m8_batched_s'] * 1e6:.0f},"
+          f"speedup={r['weighted_m8_speedup']}x;"
+          f"mse_guard_ok={r['mse_guard_ok']}")
+
+
+def _bench_slda_ragged(args):
+    from . import bench_slda_ragged
+    payload = bench_slda_ragged.run(quick=not args.full)
+    r, m = payload["results"], payload["results"]["chains"]
+    print(f"slda_ragged_weighted,"
+          f"{r[f'weighted_m{m}_bucketed_s'] * 1e6:.0f},"
+          f"speedup={r[f'weighted_m{m}_speedup']}x;"
+          f"padding={r['padding_frac']};mse_guard_ok={r['mse_guard_ok']}")
+
+
+def _bench_roofline(args):
+    try:
+        from . import roofline
+        rows = roofline.load()
+        for d in rows:
+            tag = (f"{d['arch']}_{d['shape']}_"
+                   f"{'multi' if d['multi_pod'] else 'single'}")
+            print(f"roofline_{tag},{d['compile_s'] * 1e6:.0f},"
+                  f"dom={d['dominant']};frac={d['roofline_frac']:.3f}")
+    except Exception as e:  # noqa: BLE001 — artifacts may not exist yet
+        print(f"roofline_skipped,0,{e!r}", file=sys.stderr)
+
+
+#: name → (runner, run_by_default) — opt-in extras run only via --only
+BENCHES = {
+    "fig6": (_bench_fig6, True),
+    "fig7": (_bench_fig7, True),
+    "ablation": (_bench_ablation, False),
+    "kernels": (_bench_kernels, True),
+    "slda_predict": (_bench_slda_predict, False),
+    "slda_train": (_bench_slda_train, False),
+    "slda_parallel": (_bench_slda_parallel, False),
+    "slda_ragged": (_bench_slda_ragged, False),
+    "roofline": (_bench_roofline, True),
+}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale corpora (slow on CPU)")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig6,fig7,kernels,roofline; opt-in "
-                         "extras: ablation,slda_predict")
+                    help="comma list from the registry: "
+                         + ",".join(BENCHES))
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
+    unknown = (only or set()) - set(BENCHES)
+    if unknown:
+        ap.error(f"unknown bench(es): {sorted(unknown)}")
 
     print("name,us_per_call,derived")
-    if only is None or "fig6" in only:
-        from . import fig6_mdna
-        scale = 1.0 if args.full else 0.1
-        rows = fig6_mdna.run(scale=scale)
-        for r in rows:
-            print(f"fig6_{r['algorithm']},{r['wall_s'] * 1e6:.0f},"
-                  f"mse={r['test_mse']};modeled_s={r['modeled_s']}")
-    if only is None or "fig7" in only:
-        from . import fig7_imdb
-        scale = 1.0 if args.full else 0.02
-        rows = fig7_imdb.run(scale=scale)
-        for r in rows:
-            print(f"fig7_{r['algorithm']},{r['wall_s'] * 1e6:.0f},"
-                  f"acc={r['test_acc']};modeled_s={r['modeled_s']}")
-    if only is not None and "ablation" in only:
-        # beyond-paper: quality vs chain count (slow — opt-in)
-        from . import ablation_chains
-        for r in ablation_chains.run():
-            print(f"ablation_m{r['m']}_{r['rule']},0,mse={r['mse']}")
-    if only is None or "kernels" in only:
-        from . import kernels_bench
-        for r in kernels_bench.run():
-            print(f"kernel_{r['name']},{r['us_per_call']},{r['derived']}")
-    if only is not None and "slda_predict" in only:
-        # end-to-end before/after for the fused prediction path (slow —
-        # trains 8 chains twice; opt-in).  `python -m
-        # benchmarks.bench_slda_predict` writes the JSON artifact.
-        from . import bench_slda_predict
-        payload = bench_slda_predict.run(scale=1.0 if args.full else 0.25)
-        r = payload["results"]
-        for k in ("weighted_average_seed_s", "weighted_average_fused_s"):
-            print(f"slda_predict_{k},{r[k] * 1e6:.0f},"
-                  f"speedup={r['weighted_average_speedup']}x")
-    if only is None or "roofline" in only:
-        try:
-            from . import roofline
-            rows = roofline.load()
-            for d in rows:
-                tag = (f"{d['arch']}_{d['shape']}_"
-                       f"{'multi' if d['multi_pod'] else 'single'}")
-                print(f"roofline_{tag},{d['compile_s'] * 1e6:.0f},"
-                      f"dom={d['dominant']};frac={d['roofline_frac']:.3f}")
-        except Exception as e:  # noqa: BLE001 — artifacts may not exist yet
-            print(f"roofline_skipped,0,{e!r}", file=sys.stderr)
+    for name, (fn, default_on) in BENCHES.items():
+        if (only is None and default_on) or (only is not None
+                                             and name in only):
+            fn(args)
 
 
 if __name__ == "__main__":

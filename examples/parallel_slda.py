@@ -44,6 +44,24 @@ for name in ("nonparallel", "naive", "simple", "weighted"):
     print(f"  {name:12s} wall {time.time() - t0:6.2f}s   "
           f"test MSE {mse:.4f}   R² {1 - mse / var_y:.3f}")
 
+print("\n=== same algorithms over the ragged execution plan ===")
+# A length-bucketed config routes the SAME entry points through the
+# ragged execution layer (DESIGN.md §Execution-plan) — no *_bucketed
+# twins; call un-jitted so schedules build from concrete lengths.
+import dataclasses
+from repro.core import build_plan, build_schedule
+cfg_ragged = dataclasses.replace(cfg, length_buckets=6)
+plan = build_plan(build_schedule(train, cfg_ragged), cfg_ragged)
+d = plan.describe()
+print(f"  plan: executor={d['executor']} buckets={d['bucket_widths']} "
+      f"slot/real tokens {d['slot_tokens_per_sweep']}/"
+      f"{d['real_tokens_per_sweep']}")
+yhat = ALGORITHMS["weighted"](jax.random.PRNGKey(1), train, test,
+                              cfg_ragged, M)
+mse = float(jnp.mean((yhat - test.y) ** 2))
+print(f"  weighted (ragged plan)   test MSE {mse:.4f}   "
+      f"R² {1 - mse / var_y:.3f}")
+
 print("\n=== fault tolerance: drop a chain, renormalize, carry on ===")
 models = jax.jit(train_chains, static_argnums=(2,))(
     jax.random.PRNGKey(2), partition(train, M), cfg)

@@ -3,6 +3,8 @@
 Runs in ~1 minute on CPU:
   PYTHONPATH=src python examples/quickstart.py
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
@@ -29,3 +31,14 @@ yhat = jax.jit(run_simple_average, static_argnums=(3, 4))(
 mse = float(jnp.mean((yhat - test.y) ** 2))
 print(f"simple average: test MSE {mse:.4f}  (R² {1 - mse / var_y:.3f})  "
       f"— 4 chains, zero training communication")
+
+# ragged corpora need no separate API: the SAME entry point, with
+# cfg.length_buckets > 0, routes through the length-bucketed execution
+# plan (call it un-jitted — schedules are built from concrete lengths;
+# bit-identical predictions, compute scaling with Σ true tokens).
+# `python -m repro.launch.dryrun --slda-plan` shows the chosen plan.
+cfg_ragged = dataclasses.replace(cfg, length_buckets=8)
+yhat = run_simple_average(jax.random.PRNGKey(1), train, test, cfg_ragged, 4)
+mse = float(jnp.mean((yhat - test.y) ** 2))
+print(f"simple average: test MSE {mse:.4f}  (R² {1 - mse / var_y:.3f})  "
+      f"— same algorithm over the ragged execution plan")

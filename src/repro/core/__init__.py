@@ -1,24 +1,25 @@
 """Paper core: communication-free embarrassingly parallel MCMC for sLDA."""
 from .types import (BucketedCorpus, Corpus, GibbsState, SLDAConfig,
                     SLDAModel, apply_count_deltas, bucket_corpus,
-                    counts_from_assignments)
+                    counts_from_assignments, devices_support_pallas,
+                    partition)
 from .gibbs import init_state, sweep, train_chain, zbar, phi_hat
 from .regression import solve_eta, solve_eta_ols
+from .plan import ExecutionPlan, as_bucketed, build_plan, build_schedule
 from .predict import predict
 from .combine import simple_average, weighted_average, median, COMBINERS
-from .parallel import (ALGORITHMS, partition, train_chains, predict_chains,
+from .parallel import (ALGORITHMS, train_chains, predict_chains,
                        run_nonparallel, run_naive, run_simple_average,
-                       run_simple_average_bucketed, run_weighted_average,
-                       run_weighted_average_bucketed)
+                       run_weighted_average)
 
 __all__ = [
     "BucketedCorpus", "Corpus", "GibbsState", "SLDAConfig", "SLDAModel",
     "apply_count_deltas", "bucket_corpus", "counts_from_assignments",
-    "init_state", "sweep", "train_chain", "zbar", "phi_hat",
-    "solve_eta", "solve_eta_ols", "predict",
-    "simple_average", "weighted_average", "median", "COMBINERS",
+    "devices_support_pallas", "init_state", "sweep", "train_chain",
+    "zbar", "phi_hat", "solve_eta", "solve_eta_ols",
+    "ExecutionPlan", "as_bucketed", "build_plan", "build_schedule",
+    "predict", "simple_average", "weighted_average", "median", "COMBINERS",
     "ALGORITHMS", "partition", "train_chains", "predict_chains",
     "run_nonparallel", "run_naive", "run_simple_average",
-    "run_simple_average_bucketed", "run_weighted_average",
-    "run_weighted_average_bucketed",
+    "run_weighted_average",
 ]

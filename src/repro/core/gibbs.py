@@ -20,9 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.mathutil import upper_tri_ones
-from .types import (BucketedCorpus, Corpus, GibbsState, SLDAConfig,
-                    SLDAModel, apply_count_deltas, counts_from_assignments)
-from .regression import solve_eta
+from .types import (Corpus, GibbsState, SLDAConfig, SLDAModel,
+                    apply_count_deltas, counts_from_assignments)
 
 
 def init_state(key: jax.Array, corpus: Corpus, cfg: SLDAConfig) -> GibbsState:
@@ -135,220 +134,6 @@ def phi_hat(state: GibbsState, cfg: SLDAConfig) -> jax.Array:
     return (state.ntw + cfg.beta) / (state.nt[:, None] + cfg.vocab_size * cfg.beta)
 
 
-def _train_chain_fused(k_sweeps: jax.Array, corpus: Corpus,
-                       state0: GibbsState, cfg: SLDAConfig) -> GibbsState:
-    """Stochastic-EM via the fused multi-sweep launch (sweeps_per_launch>1).
-
-    Each launch runs `spl` Gibbs sweeps through `ops.slda_train_sweeps`
-    (counter-hash PRNG, block-local delayed counts between in-launch
-    sweeps, DESIGN.md §Train-kernel); between launches the global tables
-    refresh exactly — compacted deltas with a periodic
-    `count_rebuild_every` re-scatter, both exact — and η re-solves.
-    Total sweeps stay cfg.n_iters: a remainder launch mops up when
-    n_iters is not a multiple of spl.
-    """
-    spl = cfg.sweeps_per_launch
-    every = cfg.count_rebuild_every
-    D = corpus.n_docs
-    # clamp the block to the corpus (rounded to the sublane tile) so a
-    # small shard doesn't pad up to a mostly-empty block
-    doc_block = min(cfg.train_doc_block, -(-D // 8) * 8)
-    inv_len = 1.0 / jnp.maximum(corpus.lengths(), 1.0)
-    from repro.kernels import ops  # local import: kernels are optional
-
-    def launch(state: GibbsState, k, it, n_sweeps: int) -> GibbsState:
-        seeds = jax.random.randint(k, (D,), 0, jnp.iinfo(jnp.int32).max,
-                                   jnp.int32)
-        z, ndt = ops.slda_train_sweeps(
-            corpus.tokens, corpus.mask, state.z, state.ndt, corpus.y,
-            inv_len, state.ntw, state.nt, state.eta, seeds,
-            alpha=cfg.alpha, beta=cfg.beta, rho=cfg.rho,
-            n_sweeps=n_sweeps, supervised=True,
-            doc_block=doc_block, use_pallas=cfg.use_pallas,
-            product_form=cfg.product_form_sweeps)
-
-        def rebuild(_):
-            return counts_from_assignments(corpus.tokens, corpus.mask, z,
-                                           cfg.n_topics, cfg.vocab_size)
-
-        def incremental(_):
-            ntw, nt = apply_count_deltas(state.ntw, state.nt, corpus.tokens,
-                                         corpus.mask, state.z, z)
-            return ndt, ntw, nt
-
-        # exact global refresh from (z_launch_start, z_final); periodic
-        # full rebuild on the count_rebuild_every cadence (in launches)
-        if every > 0:
-            ndt, ntw, nt = jax.lax.cond(it % every == 0, rebuild,
-                                        incremental, None)
-        else:
-            ndt, ntw, nt = incremental(None)
-        state = GibbsState(z=z, ndt=ndt, ntw=ntw, nt=nt, eta=state.eta)
-        eta = solve_eta(zbar(state, corpus), corpus.y, cfg)
-        return GibbsState(z, ndt, ntw, nt, eta)
-
-    n_full, rem = divmod(cfg.n_iters, spl)
-    keys = jax.random.split(k_sweeps, n_full + (1 if rem else 0))
-    state = state0
-    if n_full:
-        state, _ = jax.lax.scan(
-            lambda s, inp: (launch(s, inp[0], inp[1], spl), None),
-            state, (keys[:n_full], jnp.arange(n_full)))
-    if rem:  # remainder launch keeps total sweeps == n_iters exactly
-        state = launch(state, keys[-1], jnp.asarray(n_full), rem)
-    return state
-
-
-# ------------------------------------------------ bucketed (ragged) path
-
-def _init_state_bucketed(key: jax.Array, bc: BucketedCorpus,
-                         cfg: SLDAConfig):
-    """init_state on a length-bucketed corpus: the SAME `[D, max_len]`
-    threefry draw as the padded path (so bit-identity holds per doc),
-    carved along the schedule.  Returns (state, z_fill) where state.z is
-    a tuple of per-bucket assignment arrays and z_fill keeps the init
-    values of the all-padding token slots beyond each bucket's width
-    (what the padded path would have left untouched)."""
-    z_fill = jax.random.randint(key, (bc.n_docs, bc.ctr_stride), 0,
-                                cfg.n_topics, jnp.int32)
-    z_b = tuple(bc.split_padded(z_fill))
-    ndt_pieces, ntw = [], jnp.zeros((cfg.n_topics, cfg.vocab_size),
-                                    jnp.float32)
-    for b, zb in zip(bc.buckets, z_b):
-        nd, nw, _ = counts_from_assignments(b.tokens, b.mask, zb,
-                                            cfg.n_topics, cfg.vocab_size)
-        ndt_pieces.append(nd)
-        ntw = ntw + nw               # ±1 integer adds — exact in any order
-    eta = jnp.full((cfg.n_topics,), cfg.mu, jnp.float32)
-    state = GibbsState(z=z_b, ndt=bc.merge_docs(ndt_pieces), ntw=ntw,
-                       nt=jnp.sum(ntw, axis=-1), eta=eta)
-    return state, z_fill
-
-
-def _refresh_bucketed(bc: BucketedCorpus, z_old_b, z_new_b, ndt, ntw, nt,
-                      cfg: SLDAConfig, rebuild_now):
-    """Exact global (ndt, ntw, nt) refresh across buckets — rebuild and
-    incremental forms, both exact (all updates are ±1 integers)."""
-    def rebuild(_):
-        ntw2 = jnp.zeros_like(ntw)
-        pieces = []
-        for b, zb in zip(bc.buckets, z_new_b):
-            nd, nw, _ = counts_from_assignments(b.tokens, b.mask, zb,
-                                                cfg.n_topics,
-                                                cfg.vocab_size)
-            pieces.append(nd)
-            ntw2 = ntw2 + nw
-        return bc.merge_docs(pieces), ntw2, jnp.sum(ntw2, axis=-1)
-
-    def incremental(_):
-        ntw2, nt2 = ntw, nt
-        for b, zo, zn in zip(bc.buckets, z_old_b, z_new_b):
-            ntw2, nt2 = apply_count_deltas(ntw2, nt2, b.tokens, b.mask,
-                                           zo, zn)
-        return ndt, ntw2, nt2
-
-    if isinstance(rebuild_now, bool):
-        return rebuild(None) if rebuild_now else incremental(None)
-    return jax.lax.cond(rebuild_now, rebuild, incremental, None)
-
-
-def _train_chain_bucketed(key: jax.Array, bc: BucketedCorpus,
-                          cfg: SLDAConfig):
-    """train_chain over a length-bucketed schedule (DESIGN.md
-    §Ragged-execution): every sweep/launch runs once per bucket at the
-    bucket's own padded width, while ndt/η/y stay in ORIGINAL document
-    order at each EM boundary so all cross-document reductions (η solve,
-    MSE) see the padded path's operand order.  At sweeps_per_launch=1
-    this is bit-identical per document to the padded train_chain (same
-    threefry uniforms sliced along the schedule); at >1 it is the fused
-    sampler family with the bucket-local block partition."""
-    from repro.kernels import ops  # local import: kernels are optional
-
-    k_init, k_sweeps = jax.random.split(key)
-    state0, z_fill = _init_state_bucketed(k_init, bc, cfg)
-    every = cfg.count_rebuild_every
-    D, S = bc.n_docs, bc.ctr_stride
-    y = bc.y
-    lengths = jnp.maximum(bc.lengths(), 1.0)
-    inv_len = 1.0 / lengths
-    inv_len_b = bc.split_docs(inv_len)
-
-    def em_boundary(state, z_new_b, ndt_pieces, rebuild_now):
-        ndt, ntw, nt = _refresh_bucketed(
-            bc, state.z, z_new_b, bc.merge_docs(ndt_pieces), state.ntw,
-            state.nt, cfg, rebuild_now)
-        eta = solve_eta(ndt / lengths[:, None], y, cfg)
-        return GibbsState(z=tuple(z_new_b), ndt=ndt, ntw=ntw, nt=nt,
-                          eta=eta)
-
-    if cfg.sweeps_per_launch > 1:
-        spl = cfg.sweeps_per_launch
-
-        def launch(state, k, it, n_sweeps):
-            seeds = jax.random.randint(k, (D,), 0,
-                                       jnp.iinfo(jnp.int32).max, jnp.int32)
-            seeds_b = bc.split_docs(seeds)
-            ndt_b = bc.split_docs(state.ndt)
-            z_new_b, ndt_pieces = [], []
-            for b, zb, ndb, sb, ilb in zip(bc.buckets, state.z, ndt_b,
-                                           seeds_b, inv_len_b):
-                db = min(cfg.train_doc_block, -(-b.tokens.shape[0] // 8) * 8)
-                z2, nd2 = ops.slda_train_sweeps(
-                    b.tokens, b.mask, zb, ndb, b.y, ilb, state.ntw,
-                    state.nt, state.eta, sb, alpha=cfg.alpha,
-                    beta=cfg.beta, rho=cfg.rho, n_sweeps=n_sweeps,
-                    supervised=True, doc_block=db,
-                    use_pallas=cfg.use_pallas,
-                    product_form=cfg.product_form_sweeps, ctr_stride=S)
-                z_new_b.append(z2)
-                ndt_pieces.append(nd2)
-            rebuild_now = (it % every == 0) if every > 0 else False
-            return em_boundary(state, z_new_b, ndt_pieces, rebuild_now)
-
-        n_full, rem = divmod(cfg.n_iters, spl)
-        keys = jax.random.split(k_sweeps, n_full + (1 if rem else 0))
-        state = state0
-        if n_full:
-            state, _ = jax.lax.scan(
-                lambda s, inp: (launch(s, inp[0], inp[1], spl), None),
-                state, (keys[:n_full], jnp.arange(n_full)))
-        if rem:
-            state = launch(state, keys[-1], jnp.asarray(n_full), rem)
-    else:
-        def em_step(state, inp):
-            k, it = inp
-            uniforms = jax.random.uniform(k, (D, S))  # the padded draw
-            u_b = bc.split_padded(uniforms)
-            ndt_b = bc.split_docs(state.ndt)
-            z_new_b, ndt_pieces = [], []
-            for b, ub, zb, ndb, ilb in zip(bc.buckets, u_b, state.z,
-                                           ndt_b, inv_len_b):
-                z2, nd2 = ops.slda_gibbs_sweep(
-                    b.tokens, b.mask, ub, zb, ndb, b.y, ilb, state.ntw,
-                    state.nt, state.eta, alpha=cfg.alpha, beta=cfg.beta,
-                    rho=cfg.rho, supervised=True,
-                    use_pallas=cfg.use_pallas)
-                z_new_b.append(z2)
-                ndt_pieces.append(nd2)
-            rebuild_now = (it % every == 0) if every > 0 else False
-            return em_boundary(state, z_new_b, ndt_pieces,
-                               rebuild_now), None
-
-        state, _ = jax.lax.scan(
-            em_step, state0, (jax.random.split(k_sweeps, cfg.n_iters),
-                              jnp.arange(cfg.n_iters)))
-
-    zb = state.ndt / lengths[:, None]
-    yhat_tr = zb @ state.eta
-    mse = jnp.mean((yhat_tr - y) ** 2)
-    acc = jnp.mean(((yhat_tr > 0.5) == (y > 0.5)).astype(jnp.float32))
-    model = SLDAModel(phi=phi_hat(state, cfg), eta=state.eta,
-                      train_mse=mse, train_acc=acc)
-    state = GibbsState(z=bc.merge_padded(state.z, z_fill), ndt=state.ndt,
-                       ntw=state.ntw, nt=state.nt, eta=state.eta)
-    return state, model
-
-
 def train_chain(key: jax.Array, corpus: Corpus, cfg: SLDAConfig) -> tuple[GibbsState, SLDAModel]:
     """Full stochastic-EM loop for ONE chain on ONE (sub-)corpus.
 
@@ -359,37 +144,16 @@ def train_chain(key: jax.Array, corpus: Corpus, cfg: SLDAConfig) -> tuple[GibbsS
     between launches).  Fully jit-able; contains no collectives — chains
     run communication-free.
 
-    `corpus` may be a `BucketedCorpus` (DESIGN.md §Ragged-execution):
-    sweeps then run once per length bucket at the bucket's own padded
-    width — bit-identical per document at sweeps_per_launch=1, the
-    bucket-partitioned fused sampler family above it.
+    Thin wrapper over the unified execution plan (DESIGN.md
+    §Execution-plan): a single chain is M=1 through the chain-batched
+    loop — bit-identical to the old dedicated single-chain path, which
+    is deleted.  `corpus` may be a `BucketedCorpus` (DESIGN.md
+    §Ragged-execution): sweeps then run over the length-bucketed
+    schedule — bit-identical per document at sweeps_per_launch=1; at
+    sweeps_per_launch>1 on the jnp route the plan picks the STAIRCASE
+    executor (the stair form of the single-chain fused train path).
     """
-    if isinstance(corpus, BucketedCorpus):
-        return _train_chain_bucketed(key, corpus, cfg)
-    k_init, k_sweeps = jax.random.split(key)
-    state0 = init_state(k_init, corpus, cfg)
-    every = cfg.count_rebuild_every
-
-    if cfg.sweeps_per_launch > 1:
-        state = _train_chain_fused(k_sweeps, corpus, state0, cfg)
-    else:
-        def em_step(state, inp):
-            k, it = inp
-            # incremental delta refresh between periodic exact rebuilds
-            rebuild = (it % every == 0) if every > 0 else False
-            state = sweep(k, corpus, state, cfg, supervised=True,
-                          exact_rebuild=rebuild)
-            eta = solve_eta(zbar(state, corpus), corpus.y, cfg)
-            return GibbsState(state.z, state.ndt, state.ntw, state.nt,
-                              eta), None
-
-        state, _ = jax.lax.scan(
-            em_step, state0, (jax.random.split(k_sweeps, cfg.n_iters),
-                              jnp.arange(cfg.n_iters)))
-
-    yhat_tr = zbar(state, corpus) @ state.eta
-    mse = jnp.mean((yhat_tr - corpus.y) ** 2)
-    acc = jnp.mean(((yhat_tr > 0.5) == (corpus.y > 0.5)).astype(jnp.float32))
-    model = SLDAModel(phi=phi_hat(state, cfg), eta=state.eta,
-                      train_mse=mse, train_acc=acc)
-    return state, model
+    from .plan import build_plan   # local import: plan sits above gibbs
+    plan = build_plan(corpus, cfg, chained=True)
+    state, model = plan.train(key[None])
+    return jax.tree.map(lambda a: a[0], (state, model))

@@ -1,4 +1,4 @@
-"""The four algorithms of Section IV, sharing one sampler.
+"""The four algorithms of Section IV, sharing ONE plan-driven sampler.
 
   non-parallel      one chain on the full training corpus (paper benchmark 1)
   naive             M chains; pool the *sampled topics* as if drawn on the
@@ -8,401 +8,49 @@
   weighted-average  M chains; each predicts test AND full train set (for the
                     weights); Eq. (8)-(9) combine
 
-Chains are CHAIN-BATCHED here (single-host form): the M independent
-chains run through the `chain_axis` forms of `kernels.ops` — one fused
-launch (or one folded/nested-vmap jnp op) carries all M chains instead
-of replaying the single-chain path under `jax.vmap` per chain
-(DESIGN.md §Chain-batched).  At `sweeps_per_launch=1` the batched EM
-loop reproduces `jax.vmap(train_chain)` BIT-FOR-BIT (same threefry key
-tree, same sweep op order — asserted in tests/test_chain_batched.py);
-at `sweeps_per_launch>1` it is the fused multi-sweep sampler family of
-DESIGN.md §Train-kernel, chain-batched.
+Every entry point here is a thin wrapper over the unified execution
+plan (`core.plan`, DESIGN.md §Execution-plan): `build_schedule` decides
+the data layout (padded = the degenerate 1-bucket schedule; length
+bucketing when `cfg.length_buckets > 0` — built host-side, outside
+jit), and `ExecutionPlan` owns the routing (executor, chain batching,
+sweeps-per-launch schedule, refresh cadence).  The EM loop exists
+exactly once, in `plan.py`; there are no per-layout twins left.
+
+At `sweeps_per_launch=1` the chain-batched loop reproduces the seed
+semantics BIT-FOR-BIT for every (layout × backend × M) cell
+(tests/test_dispatch_matrix.py); at `>1` it is the fused multi-sweep
+sampler family of DESIGN.md §Train-kernel.
 
 The multi-device form — `shard_map` over the mesh's chain axis with
 zero collectives until the final prediction gather, and
 `chains_per_device` local chains per mesh slice riding these same
-chain-batched entry points — lives in `repro.launch.slda_parallel`.
+entry points (one plan built per shard) — lives in
+`repro.launch.slda_parallel`.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import combine
-from .gibbs import init_state, phi_hat, train_chain
+from .gibbs import train_chain
+from .plan import build_plan, build_schedule
 from .predict import predict
-from .regression import solve_eta, solve_eta_ols
-from .types import (BucketedCorpus, Corpus, GibbsState, SLDAConfig,
-                    SLDAModel, _stair_segments, _take_docs,
-                    _unstair_segments, apply_count_deltas, bucket_corpus,
-                    counts_from_assignments)
-
-
-def partition(corpus: Corpus, m: int) -> Corpus:
-    """Split a corpus into M equal shards: [D, ...] → [M, D/M, ...].
-
-    The paper partitions uniformly at random; callers should pre-shuffle.
-    D must be divisible by M (pad the corpus if not).
-    """
-    if corpus.n_docs % m:
-        raise ValueError(f"{corpus.n_docs} docs not divisible by {m} shards")
-    reshape = lambda x: x.reshape((m, corpus.n_docs // m) + x.shape[1:])
-    return Corpus(tokens=reshape(corpus.tokens), mask=reshape(corpus.mask),
-                  y=reshape(corpus.y))
+from .regression import solve_eta_ols
+from .types import (BucketedCorpus, Corpus, SLDAConfig, SLDAModel,
+                    _concat_corpora, partition)
 
 
 # ----------------------------------------------- chain-batched training
-
-def _refresh_and_solve(z, ndt, state, shards, cfg, rebuild_now):
-    """Exact global count refresh (rebuild or incremental deltas, both
-    exact) followed by the per-chain η ridge solve — one EM boundary,
-    batched over the chain axis."""
-    def rebuild(_):
-        return jax.vmap(lambda t, m_, zz: counts_from_assignments(
-            t, m_, zz, cfg.n_topics, cfg.vocab_size))(
-            shards.tokens, shards.mask, z)
-
-    def incremental(_):
-        ntw, nt = jax.vmap(apply_count_deltas)(
-            state.ntw, state.nt, shards.tokens, shards.mask, state.z, z)
-        return ndt, ntw, nt
-
-    if isinstance(rebuild_now, bool):
-        ndt, ntw, nt = rebuild(None) if rebuild_now else incremental(None)
-    else:
-        ndt, ntw, nt = jax.lax.cond(rebuild_now, rebuild, incremental, None)
-    lengths = jnp.maximum(shards.mask.sum(-1), 1.0)
-    eta = jax.vmap(lambda nd, l, yy: solve_eta(nd / l[:, None], yy, cfg))(
-        ndt, lengths, shards.y)
-    return GibbsState(z=z, ndt=ndt, ntw=ntw, nt=nt, eta=eta)
-
-
-def _train_chains_seed(k_sweeps, shards, state0, cfg: SLDAConfig):
-    """Chain-batched stochastic EM at sweeps_per_launch=1: per-sweep
-    threefry uniforms, seed-semantics sweep, η solve every sweep —
-    bit-identical to `jax.vmap(train_chain)` (the per-chain key tree and
-    every op are the vmapped ones; only the sweep itself runs through
-    the chain_axis op)."""
-    from repro.kernels import ops  # local import: kernels are optional
-    every = cfg.count_rebuild_every
-    inv_len = 1.0 / jnp.maximum(shards.mask.sum(-1), 1.0)
-
-    def em_step(state, inp):
-        ks, it = inp
-        uniforms = jax.vmap(
-            lambda k: jax.random.uniform(k, shards.tokens.shape[1:]))(ks)
-        z, ndt = ops.slda_gibbs_sweep(
-            shards.tokens, shards.mask, uniforms, state.z, state.ndt,
-            shards.y, inv_len, state.ntw, state.nt, state.eta,
-            alpha=cfg.alpha, beta=cfg.beta, rho=cfg.rho, supervised=True,
-            use_pallas=cfg.use_pallas, chain_axis=True)
-        rebuild_now = (it % every == 0) if every > 0 else False
-        return _refresh_and_solve(z, ndt, state, shards, cfg,
-                                  rebuild_now), None
-
-    keys = jax.vmap(lambda k: jax.random.split(k, cfg.n_iters))(k_sweeps)
-    state, _ = jax.lax.scan(em_step, state0,
-                            (jnp.moveaxis(keys, 0, 1),
-                             jnp.arange(cfg.n_iters)))
-    return state
-
-
-def _train_chains_fused(k_sweeps, shards, state0, cfg: SLDAConfig):
-    """Chain-batched stochastic EM via fused multi-sweep launches: ONE
-    grid-(M, B) kernel launch (or one chain-batched jnp op) runs
-    `sweeps_per_launch` sweeps for ALL chains; the exact global refresh
-    and the η solves happen between launches (chain-batched mirror of
-    `gibbs._train_chain_fused`)."""
-    from repro.kernels import ops  # local import: kernels are optional
-    spl = cfg.sweeps_per_launch
-    every = cfg.count_rebuild_every
-    d_m = shards.tokens.shape[1]
-    doc_block = min(cfg.train_doc_block, -(-d_m // 8) * 8)
-    inv_len = 1.0 / jnp.maximum(shards.mask.sum(-1), 1.0)
-
-    def launch(state, ks, it, n_sweeps: int):
-        seeds = jax.vmap(lambda k: jax.random.randint(
-            k, (d_m,), 0, jnp.iinfo(jnp.int32).max, jnp.int32))(ks)
-        z, ndt = ops.slda_train_sweeps(
-            shards.tokens, shards.mask, state.z, state.ndt, shards.y,
-            inv_len, state.ntw, state.nt, state.eta, seeds,
-            alpha=cfg.alpha, beta=cfg.beta, rho=cfg.rho,
-            n_sweeps=n_sweeps, supervised=True, doc_block=doc_block,
-            use_pallas=cfg.use_pallas,
-            product_form=cfg.product_form_sweeps, chain_axis=True)
-        rebuild_now = (it % every == 0) if every > 0 else False
-        return _refresh_and_solve(z, ndt, state, shards, cfg, rebuild_now)
-
-    n_full, rem = divmod(cfg.n_iters, spl)
-    keys = jax.vmap(lambda k: jax.random.split(
-        k, n_full + (1 if rem else 0)))(k_sweeps)
-    keys = jnp.moveaxis(keys, 0, 1)
-    state = state0
-    if n_full:
-        state, _ = jax.lax.scan(
-            lambda s, inp: (launch(s, inp[0], inp[1], spl), None),
-            state, (keys[:n_full], jnp.arange(n_full)))
-    if rem:  # remainder launch keeps total sweeps == n_iters exactly
-        state = launch(state, keys[-1], jnp.asarray(n_full), rem)
-    return state
-
-
-def _export_models(state: GibbsState, shards, cfg: SLDAConfig) -> SLDAModel:
-    """Per-chain (φ̂, η̂, train MSE/acc) — what crosses the chain boundary.
-    `shards` may be a Corpus or a BucketedCorpus — both expose original-
-    order lengths()/y, so the export reductions are order-identical."""
-    lengths = jnp.maximum(shards.lengths(), 1.0)
-    zb = state.ndt / lengths[..., None]
-    yhat = jax.vmap(lambda z, e: z @ e)(zb, state.eta)
-    mse = jax.vmap(lambda yh, yy: jnp.mean((yh - yy) ** 2))(yhat, shards.y)
-    acc = jax.vmap(lambda yh, yy: jnp.mean(
-        ((yh > 0.5) == (yy > 0.5)).astype(jnp.float32)))(yhat, shards.y)
-    phi = jax.vmap(lambda s: phi_hat(s, cfg))(state)
-    return SLDAModel(phi=phi, eta=state.eta, train_mse=mse, train_acc=acc)
-
-
-# ------------------------------------- bucketed (ragged) chain batching
-
-def _init_states_bucketed(keys_init, bc: BucketedCorpus, cfg: SLDAConfig):
-    """vmap(init_state) over a chain-sharded bucketed schedule: the same
-    per-chain [D/M, max_len] threefry draws as the padded path, carved
-    along each chain's schedule.  Returns (state, z_fill); state.z is a
-    tuple of per-bucket [M, D_b, N_b] arrays, state.ndt is [M, D/M, T]
-    in ORIGINAL order."""
-    d_m, S = bc.perm.shape[-1], bc.ctr_stride
-    z_fill = jax.vmap(lambda k: jax.random.randint(
-        k, (d_m, S), 0, cfg.n_topics, jnp.int32))(keys_init)
-    z_b = tuple(bc.split_padded(z_fill))
-    counts = lambda b, zb: jax.vmap(
-        lambda t, m_, zz: counts_from_assignments(
-            t, m_, zz, cfg.n_topics, cfg.vocab_size))(b.tokens, b.mask, zb)
-    pieces, ntw = [], 0.0
-    for b, zb in zip(bc.buckets, z_b):
-        nd, nw, _ = counts(b, zb)
-        pieces.append(nd)
-        ntw = ntw + nw               # ±1 integer adds — exact in any order
-    eta = jnp.full((keys_init.shape[0], cfg.n_topics), cfg.mu, jnp.float32)
-    state = GibbsState(z=z_b, ndt=bc.merge_docs(pieces), ntw=ntw,
-                       nt=jnp.sum(ntw, axis=-1), eta=eta)
-    return state, z_fill
-
-
-def _refresh_and_solve_bucketed(z_new_b, ndt, state, bc: BucketedCorpus,
-                                cfg: SLDAConfig, rebuild_now):
-    """_refresh_and_solve across buckets: exact global refresh (either
-    form), then the per-chain η solve on ORIGINAL-order rows."""
-    def rebuild(_):
-        ntw2, pieces = 0.0, []
-        for b, zb in zip(bc.buckets, z_new_b):
-            nd, nw, _ = jax.vmap(
-                lambda t, m_, zz: counts_from_assignments(
-                    t, m_, zz, cfg.n_topics, cfg.vocab_size))(
-                b.tokens, b.mask, zb)
-            pieces.append(nd)
-            ntw2 = ntw2 + nw
-        return bc.merge_docs(pieces), ntw2, jnp.sum(ntw2, axis=-1)
-
-    def incremental(_):
-        ntw2, nt2 = state.ntw, state.nt
-        for b, zo, zn in zip(bc.buckets, state.z, z_new_b):
-            ntw2, nt2 = jax.vmap(apply_count_deltas)(
-                ntw2, nt2, b.tokens, b.mask, zo, zn)
-        return ndt, ntw2, nt2
-
-    if isinstance(rebuild_now, bool):
-        ndt, ntw, nt = rebuild(None) if rebuild_now else incremental(None)
-    else:
-        ndt, ntw, nt = jax.lax.cond(rebuild_now, rebuild, incremental, None)
-    lengths = jnp.maximum(bc.lengths(), 1.0)
-    eta = jax.vmap(lambda nd, l, yy: solve_eta(nd / l[:, None], yy, cfg))(
-        ndt, lengths, bc.y)
-    return GibbsState(z=tuple(z_new_b), ndt=ndt, ntw=ntw, nt=nt, eta=eta)
-
-
-def _train_chains_seed_bucketed(k_sweeps, bc: BucketedCorpus, state0,
-                                cfg: SLDAConfig):
-    """_train_chains_seed over the bucketed schedule — per-sweep threefry
-    uniforms drawn at the padded [M, D/M, max_len] shape (bit-identity)
-    and sliced along each chain's schedule."""
-    from repro.kernels import ops  # local import: kernels are optional
-    every = cfg.count_rebuild_every
-    d_m, S = bc.perm.shape[-1], bc.ctr_stride
-    inv_len_b = bc.split_docs(1.0 / jnp.maximum(bc.lengths(), 1.0))
-
-    def em_step(state, inp):
-        ks, it = inp
-        uniforms = jax.vmap(lambda k: jax.random.uniform(k, (d_m, S)))(ks)
-        u_b = bc.split_padded(uniforms)
-        ndt_b = bc.split_docs(state.ndt)
-        z_new_b, pieces = [], []
-        for b, ub, zb, ndb, ilb in zip(bc.buckets, u_b, state.z, ndt_b,
-                                       inv_len_b):
-            z2, nd2 = ops.slda_gibbs_sweep(
-                b.tokens, b.mask, ub, zb, ndb, b.y, ilb, state.ntw,
-                state.nt, state.eta, alpha=cfg.alpha, beta=cfg.beta,
-                rho=cfg.rho, supervised=True, use_pallas=cfg.use_pallas,
-                chain_axis=True)
-            z_new_b.append(z2)
-            pieces.append(nd2)
-        rebuild_now = (it % every == 0) if every > 0 else False
-        return _refresh_and_solve_bucketed(
-            z_new_b, bc.merge_docs(pieces), state, bc, cfg,
-            rebuild_now), None
-
-    keys = jax.vmap(lambda k: jax.random.split(k, cfg.n_iters))(k_sweeps)
-    state, _ = jax.lax.scan(em_step, state0,
-                            (jnp.moveaxis(keys, 0, 1),
-                             jnp.arange(cfg.n_iters)))
-    return state
-
-
-def _train_chains_fused_stair(k_sweeps, bc: BucketedCorpus, state0,
-                              cfg: SLDAConfig):
-    """The STAIRCASE fused trainer (jnp route of the ragged layer): one
-    `slda_train_stair_jnp` call per EM boundary runs all in-launch
-    sweeps for ALL chains — chains folded doc-major around a stacked
-    [M·W, T] table, token segments walked over the live doc suffix, so
-    per-sweep step count stays N_max while slots collapse to the
-    staircase.  The in-launch delayed-count partition is the WHOLE
-    corpus (doc_block→D limit — least delayed member of the fused
-    family); state stays in bucket layout between launches, ndt/η in
-    ORIGINAL order at every boundary as usual."""
-    from repro.kernels.slda_train import slda_train_stair_jnp
-    spl = cfg.sweeps_per_launch
-    every = cfg.count_rebuild_every
-    M = bc.n_chains
-    d_m, S = bc.perm.shape[-1], bc.ctr_stride
-    T, W = cfg.n_topics, cfg.vocab_size
-    fold = lambda a: jnp.swapaxes(a, 0, 1).reshape((-1,) + a.shape[2:])
-    unfold = lambda a: jnp.swapaxes(
-        a.reshape((-1, M) + a.shape[1:]), 0, 1)
-    sort = lambda a: _take_docs(a, bc.perm, 1)
-    unsort = lambda a: _take_docs(a, bc.inv_perm, 1)
-
-    off = (jnp.arange(M, dtype=jnp.int32) * W)[:, None, None]
-    tok_segs = [fold(s + off) for s in _stair_segments(
-        bc, [b.tokens for b in bc.buckets])]
-    mask_segs = [fold(s) for s in _stair_segments(
-        bc, [b.mask for b in bc.buckets])]
-    starts = np.cumsum([0] + list(bc.counts))
-    seg_r0 = [int(s) * M for s in starts[:-1]]
-    seg_n0 = [0] + list(bc.widths[:-1])
-    chain_of_row = jnp.tile(jnp.arange(M, dtype=jnp.int32), d_m)
-    y_f = fold(jnp.concatenate([b.y for b in bc.buckets], axis=1))
-    il_f = fold(jnp.concatenate(
-        [1.0 / jnp.maximum(b.mask.sum(-1), 1.0) for b in bc.buckets],
-        axis=1))
-
-    def launch(state, ks, it, n_sweeps: int):
-        seeds = jax.vmap(lambda k: jax.random.randint(
-            k, (d_m,), 0, jnp.iinfo(jnp.int32).max, jnp.int32))(ks)
-        z_segs = [fold(s) for s in _stair_segments(bc, state.z)]
-        z_segs_f, ndt_f = slda_train_stair_jnp(
-            tok_segs, mask_segs, z_segs, seg_r0, seg_n0,
-            fold(sort(seeds)), fold(sort(state.ndt)), y_f, il_f,
-            jnp.swapaxes(state.ntw, 1, 2).reshape(M * W, T), state.nt,
-            state.eta, chain_of_row, alpha=cfg.alpha, beta=cfg.beta,
-            rho=cfg.rho, vocab_size=W, ctr_stride=S, supervised=True,
-            n_sweeps=n_sweeps, product_form=cfg.product_form_sweeps)
-        z_new_b = _unstair_segments(bc, [unfold(z) for z in z_segs_f])
-        ndt = unsort(unfold(ndt_f))
-        rebuild_now = (it % every == 0) if every > 0 else False
-        return _refresh_and_solve_bucketed(z_new_b, ndt, state, bc, cfg,
-                                           rebuild_now)
-
-    n_full, rem = divmod(cfg.n_iters, spl)
-    keys = jax.vmap(lambda k: jax.random.split(
-        k, n_full + (1 if rem else 0)))(k_sweeps)
-    keys = jnp.moveaxis(keys, 0, 1)
-    state = state0
-    if n_full:
-        state, _ = jax.lax.scan(
-            lambda s, inp: (launch(s, inp[0], inp[1], spl), None),
-            state, (keys[:n_full], jnp.arange(n_full)))
-    if rem:  # remainder launch keeps total sweeps == n_iters exactly
-        state = launch(state, keys[-1], jnp.asarray(n_full), rem)
-    return state
-
-
-def _train_chains_fused_bucketed(k_sweeps, bc: BucketedCorpus, state0,
-                                 cfg: SLDAConfig):
-    """_train_chains_fused over the bucketed schedule.  jnp route: the
-    STAIRCASE trainer (`_train_chains_fused_stair`).  pallas route: one
-    chain-batched fused launch per bucket per EM boundary, each at its
-    bucket's padded width with the PRNG counter stride pinned to the
-    source max_len."""
-    if not cfg.use_pallas:
-        return _train_chains_fused_stair(k_sweeps, bc, state0, cfg)
-    from repro.kernels import ops  # local import: kernels are optional
-    spl = cfg.sweeps_per_launch
-    every = cfg.count_rebuild_every
-    d_m, S = bc.perm.shape[-1], bc.ctr_stride
-    inv_len_b = bc.split_docs(1.0 / jnp.maximum(bc.lengths(), 1.0))
-
-    def launch(state, ks, it, n_sweeps: int):
-        seeds = jax.vmap(lambda k: jax.random.randint(
-            k, (d_m,), 0, jnp.iinfo(jnp.int32).max, jnp.int32))(ks)
-        seeds_b = bc.split_docs(seeds)
-        ndt_b = bc.split_docs(state.ndt)
-        z_new_b, pieces = [], []
-        for b, zb, ndb, sb, ilb in zip(bc.buckets, state.z, ndt_b,
-                                       seeds_b, inv_len_b):
-            db = min(cfg.train_doc_block, -(-b.tokens.shape[1] // 8) * 8)
-            z2, nd2 = ops.slda_train_sweeps(
-                b.tokens, b.mask, zb, ndb, b.y, ilb, state.ntw, state.nt,
-                state.eta, sb, alpha=cfg.alpha, beta=cfg.beta,
-                rho=cfg.rho, n_sweeps=n_sweeps, supervised=True,
-                doc_block=db, use_pallas=cfg.use_pallas,
-                product_form=cfg.product_form_sweeps, chain_axis=True,
-                ctr_stride=S)
-            z_new_b.append(z2)
-            pieces.append(nd2)
-        rebuild_now = (it % every == 0) if every > 0 else False
-        return _refresh_and_solve_bucketed(
-            z_new_b, bc.merge_docs(pieces), state, bc, cfg, rebuild_now)
-
-    n_full, rem = divmod(cfg.n_iters, spl)
-    keys = jax.vmap(lambda k: jax.random.split(
-        k, n_full + (1 if rem else 0)))(k_sweeps)
-    keys = jnp.moveaxis(keys, 0, 1)
-    state = state0
-    if n_full:
-        state, _ = jax.lax.scan(
-            lambda s, inp: (launch(s, inp[0], inp[1], spl), None),
-            state, (keys[:n_full], jnp.arange(n_full)))
-    if rem:  # remainder launch keeps total sweeps == n_iters exactly
-        state = launch(state, keys[-1], jnp.asarray(n_full), rem)
-    return state
-
 
 def train_chains_keyed(keys: jax.Array, shards, cfg: SLDAConfig):
     """Train M independent chains (no communication) from explicit
     per-chain keys [M] — the entry the multi-device runner uses with
     fold_in-derived keys.  shards is [M, D/M, ...] — a Corpus, or a
-    BucketedCorpus built from one (`bucket_corpus(partition(...))`) for
-    the ragged execution layer.  Returns (GibbsState, SLDAModel), each
-    with leading chain dim."""
-    ks = jax.vmap(jax.random.split)(keys)             # [M, 2, key]
-    if isinstance(shards, BucketedCorpus):
-        state0, z_fill = _init_states_bucketed(ks[:, 0], shards, cfg)
-        if cfg.sweeps_per_launch > 1:
-            state = _train_chains_fused_bucketed(ks[:, 1], shards, state0,
-                                                 cfg)
-        else:
-            state = _train_chains_seed_bucketed(ks[:, 1], shards, state0,
-                                                cfg)
-        models = _export_models(state, shards, cfg)
-        state = GibbsState(z=shards.merge_padded(state.z, z_fill),
-                           ndt=state.ndt, ntw=state.ntw, nt=state.nt,
-                           eta=state.eta)
-        return state, models
-    state0 = jax.vmap(lambda k, c: init_state(k, c, cfg))(ks[:, 0], shards)
-    if cfg.sweeps_per_launch > 1:
-        state = _train_chains_fused(ks[:, 1], shards, state0, cfg)
-    else:
-        state = _train_chains_seed(ks[:, 1], shards, state0, cfg)
-    return state, _export_models(state, shards, cfg)
+    BucketedCorpus built from one (`build_schedule(partition(...))`)
+    for the ragged execution layer.  Returns (GibbsState, SLDAModel),
+    each with leading chain dim."""
+    return build_plan(shards, cfg).train(keys)
 
 
 def train_chains(key: jax.Array, shards, cfg: SLDAConfig):
@@ -415,58 +63,17 @@ def train_chains(key: jax.Array, shards, cfg: SLDAConfig):
 
 # --------------------------------------------- chain-batched prediction
 
-def _predict_chains_bucketed(keys, models: SLDAModel, bc: BucketedCorpus,
-                             cfg: SLDAConfig) -> jnp.ndarray:
-    """predict_chains over the bucketed schedule: the STAIRCASE executor
-    on the jnp route (chains folded doc-major around one stacked table),
-    one chain-batched fused pass per bucket on the pallas route.  Either
-    way ndt averages merge back to ORIGINAL document order —
-    bit-identical per document to the padded pass
-    (tests/test_ragged.py)."""
-    from .predict import bucketed_predict_pallas, stair_predict
-    D, S = bc.n_docs, bc.ctr_stride
-    ks = jax.vmap(jax.random.split)(keys)             # [M, 2, key]
-    z0 = jax.vmap(lambda k: jax.random.randint(
-        k, (D, S), 0, cfg.n_topics, jnp.int32))(ks[:, 0])
-    seeds = jax.vmap(lambda k: jax.random.randint(
-        k, (D,), 0, jnp.iinfo(jnp.int32).max, jnp.int32))(ks[:, 1])
-    run = stair_predict if not cfg.use_pallas else bucketed_predict_pallas
-    ndt_avg = run(bc, models.phi, z0, seeds, cfg)     # [M, D, T] original
-    lengths = jnp.maximum(bc.lengths(), 1.0)
-    zb = jax.vmap(lambda nd: nd / lengths[:, None])(ndt_avg)
-    return jax.vmap(lambda z, e: z @ e)(zb, models.eta)   # Eq. (5)
-
-
 def predict_chains_keyed(keys: jax.Array, models: SLDAModel, corpus,
                          cfg: SLDAConfig) -> jnp.ndarray:
     """Every chain predicts every document of `corpus` → [M, D], from
-    explicit per-chain keys [M].  One chain-batched fused pass: the
-    corpus is SHARED across chains (one token tile per doc block on the
-    kernel path, one folded row-op on the jnp path).  A `BucketedCorpus`
-    routes through the ragged execution layer (one pass per bucket)."""
-    from repro.kernels import ops  # local import (DESIGN.md §1)
-    if isinstance(corpus, BucketedCorpus):
-        return _predict_chains_bucketed(keys, models, corpus, cfg)
-    D = corpus.n_docs
-    ks = jax.vmap(jax.random.split)(keys)             # [M, 2, key]
-    z0 = jax.vmap(lambda k: jax.random.randint(
-        k, corpus.tokens.shape, 0, cfg.n_topics, jnp.int32))(ks[:, 0])
-    seeds = jax.vmap(lambda k: jax.random.randint(
-        k, (D,), 0, jnp.iinfo(jnp.int32).max, jnp.int32))(ks[:, 1])
-    d_idx = jnp.arange(D)[:, None]
-    ndt0 = jax.vmap(lambda z: jnp.zeros((D, cfg.n_topics), jnp.float32)
-                    .at[d_idx, z].add(corpus.mask))(z0)
-    ndt_avg, _ = ops.slda_predict_sweeps(
-        corpus.tokens, corpus.mask, z0, ndt0, models.phi, seeds,
-        alpha=cfg.alpha, n_burnin=cfg.n_pred_burnin,
-        n_samples=cfg.n_pred_samples, doc_block=cfg.pred_doc_block,
-        use_pallas=cfg.use_pallas, chain_axis=True)
-    zb = jax.vmap(lambda nd: nd / jnp.maximum(corpus.lengths(),
-                                              1.0)[:, None])(ndt_avg)
-    return jax.vmap(lambda z, e: z @ e)(zb, models.eta)   # Eq. (5) per chain
+    explicit per-chain keys [M].  The corpus is SHARED across chains
+    (one token tile per doc block on the kernel path, one folded
+    row-op on the jnp path); a `BucketedCorpus` routes through the
+    ragged execution layer."""
+    return build_plan(corpus, cfg).predict(keys, models)
 
 
-def predict_chains(key: jax.Array, models: SLDAModel, corpus: Corpus,
+def predict_chains(key: jax.Array, models: SLDAModel, corpus,
                    cfg: SLDAConfig) -> jnp.ndarray:
     """Every chain predicts every document of `corpus` → [M, D]."""
     m = models.eta.shape[0]
@@ -474,58 +81,61 @@ def predict_chains(key: jax.Array, models: SLDAModel, corpus: Corpus,
                                 cfg)
 
 
-def _concat_corpora(a: Corpus, b: Corpus) -> Corpus:
-    """Stack two corpora along the doc axis (padding to a common max_len)
-    so one fused prediction pass covers both."""
-    n = max(a.max_len, b.max_len)
-    padn = lambda x, w: jnp.pad(x, ((0, 0), (0, w))) if w else x
-    return Corpus(
-        tokens=jnp.concatenate([padn(a.tokens, n - a.max_len),
-                                padn(b.tokens, n - b.max_len)]),
-        mask=jnp.concatenate([padn(a.mask, n - a.max_len),
-                              padn(b.mask, n - b.max_len)]),
-        y=jnp.concatenate([a.y, b.y]))
-
-
 # ---------------------------------------------------------------- algorithms
+# Host-side orchestrators: schedules are built from CONCRETE corpora
+# when cfg.length_buckets > 0 (shapes are data-dependent — call the
+# orchestrators OUTSIDE jit then), while the padded degenerate schedule
+# is shape-only, so with length_buckets == 0 each orchestrator stays
+# fully jit-able.  The chain phases run through these module-level jits
+# either way; at sweeps_per_launch=1 the bucketed run is bit-identical
+# to the padded one (tests/test_dispatch_matrix.py) and the speedup
+# comes from sweep compute scaling with Σ true tokens
+# (BENCH_slda_ragged.json).
+
+_train_chain_jit = jax.jit(train_chain, static_argnums=(2,))
+_train_chains_jit = jax.jit(train_chains, static_argnums=(2,))
+_train_chains_keyed_jit = jax.jit(train_chains_keyed, static_argnums=(2,))
+_predict_chains_jit = jax.jit(predict_chains, static_argnums=(3,))
+_predict_jit = jax.jit(predict, static_argnums=(3,))
+
 
 def run_nonparallel(key, train: Corpus, test: Corpus, cfg: SLDAConfig):
     k1, k2 = jax.random.split(key)
-    _, model = train_chain(k1, train, cfg)
-    return predict(k2, model, test, cfg)
+    _, model = _train_chain_jit(k1, build_schedule(train, cfg), cfg)
+    return _predict_jit(k2, model, build_schedule(test, cfg), cfg)
 
 
 def run_naive(key, train: Corpus, test: Corpus, cfg: SLDAConfig, m: int):
     """Naive Combination: pool sub-sampled topics, then fit + predict once."""
     k1, k2, k3 = jax.random.split(key, 3)
-    shards = partition(train, m)
+    shards = build_schedule(partition(train, m), cfg)
     keys = jax.random.split(k1, m)
-    states, _ = train_chains_keyed(keys, shards, cfg)
+    states, _ = _train_chains_keyed_jit(keys, shards, cfg)
 
     # step 3: treat the union of sub-samples as one global sample
-    lengths = jnp.maximum(shards.mask.sum(-1), 1.0)          # [M, D/M]
+    lengths = jnp.maximum(shards.lengths(), 1.0)             # [M, D/M]
     zbar_all = (states.ndt / lengths[..., None]).reshape(-1, cfg.n_topics)
     eta = solve_eta_ols(zbar_all, shards.y.reshape(-1))      # 3(a): OLS
     ntw = states.ntw.sum(0)                                  # 3(b): pooled φ
     phi = (ntw + cfg.beta) / (ntw.sum(-1, keepdims=True) + cfg.vocab_size * cfg.beta)
     model = SLDAModel(phi=phi, eta=eta,
                       train_mse=jnp.zeros(()), train_acc=jnp.zeros(()))
-    return predict(k3, model, test, cfg)
+    return _predict_jit(k3, model, build_schedule(test, cfg), cfg)
 
 
 def run_simple_average(key, train: Corpus, test: Corpus, cfg: SLDAConfig,
                        m: int, alive=None):
     k1, k2 = jax.random.split(key)
-    models = train_chains(k1, partition(train, m), cfg)
-    yhat = predict_chains(k2, models, test, cfg)             # [M, D_test]
+    models = _train_chains_jit(k1, build_schedule(partition(train, m), cfg),
+                               cfg)
+    yhat = _predict_chains_jit(k2, models, build_schedule(test, cfg), cfg)
     return combine.simple_average(yhat, alive=alive)
 
 
 def _combine_weighted(yhat_te, yhat_tr, train_y, cfg: SLDAConfig, alive):
     """Eq. (8)-(9): weight each chain's test predictions by its
     full-training-set accuracy (binary) or MSE (continuous) — the ONE
-    copy of the weighting rule, shared by the padded and bucketed
-    Weighted Average runners."""
+    copy of the weighting rule."""
     if cfg.label_type == "binary":
         acc = ((yhat_tr > 0.5) == (train_y[None, :] > 0.5)).mean(-1)
         return combine.weighted_average(yhat_te, train_acc=acc, alive=alive)
@@ -542,60 +152,18 @@ def run_weighted_average(key, train: Corpus, test: Corpus, cfg: SLDAConfig,
     run as ONE chain-batched fused pass over the concatenated corpus —
     same sweeps per document, half the sequential token-loop launches."""
     k1, k2, k3 = jax.random.split(key, 3)
-    models = train_chains(k1, partition(train, m), cfg)
+    models = _train_chains_jit(k1, build_schedule(partition(train, m), cfg),
+                               cfg)
     if cfg.fuse_weighted_predict:
         both = _concat_corpora(test, train)
-        yhat = predict_chains(k2, models, both, cfg)         # [M, D_te+D_tr]
+        yhat = _predict_chains_jit(k2, models, build_schedule(both, cfg),
+                                   cfg)
         yhat_te, yhat_tr = yhat[:, :test.n_docs], yhat[:, test.n_docs:]
     else:
-        yhat_te = predict_chains(k2, models, test, cfg)      # [M, D_test]
-        yhat_tr = predict_chains(k3, models, train, cfg)     # [M, D_train]
-    return _combine_weighted(yhat_te, yhat_tr, train.y, cfg, alive)
-
-
-# --------------------------------------- bucketed (ragged) entry points
-# Host-side orchestrators: the bucket schedules are built from CONCRETE
-# corpora (shapes are data-dependent), then every chain phase runs
-# through these module-level jits — so call them OUTSIDE jit.  At
-# sweeps_per_launch=1 each is bit-identical to its padded counterpart
-# (tests/test_ragged.py); the speedup comes from sweep compute scaling
-# with Σ true tokens instead of D × max_len (BENCH_slda_ragged.json).
-
-_train_chains_jit = jax.jit(train_chains, static_argnums=(2,))
-_predict_chains_jit = jax.jit(predict_chains, static_argnums=(3,))
-
-
-def _schedule(corpus: Corpus, cfg: SLDAConfig) -> BucketedCorpus:
-    return bucket_corpus(corpus, cfg.length_buckets or 8,
-                         token_block=cfg.bucket_token_block,
-                         overhead_docs=cfg.bucket_overhead_docs)
-
-
-def run_simple_average_bucketed(key, train: Corpus, test: Corpus,
-                                cfg: SLDAConfig, m: int, alive=None):
-    """run_simple_average over the ragged execution layer."""
-    k1, k2 = jax.random.split(key)
-    models = _train_chains_jit(k1, _schedule(partition(train, m), cfg), cfg)
-    yhat = _predict_chains_jit(k2, models, _schedule(test, cfg), cfg)
-    return combine.simple_average(yhat, alive=alive)
-
-
-def run_weighted_average_bucketed(key, train: Corpus, test: Corpus,
-                                  cfg: SLDAConfig, m: int, alive=None):
-    """run_weighted_average over the ragged execution layer — the
-    paper's slowest algorithm, and the one with the most padded-slot
-    waste to reclaim (its dominant cost re-sweeps the test set PLUS the
-    full training set once per chain)."""
-    k1, k2, k3 = jax.random.split(key, 3)
-    models = _train_chains_jit(k1, _schedule(partition(train, m), cfg), cfg)
-    if cfg.fuse_weighted_predict:
-        both = _concat_corpora(test, train)
-        yhat = _predict_chains_jit(k2, models, _schedule(both, cfg), cfg)
-        yhat_te, yhat_tr = yhat[:, :test.n_docs], yhat[:, test.n_docs:]
-    else:
-        yhat_te = _predict_chains_jit(k2, models, _schedule(test, cfg), cfg)
-        yhat_tr = _predict_chains_jit(k3, models, _schedule(train, cfg),
-                                      cfg)
+        yhat_te = _predict_chains_jit(k2, models,
+                                      build_schedule(test, cfg), cfg)
+        yhat_tr = _predict_chains_jit(k3, models,
+                                      build_schedule(train, cfg), cfg)
     return _combine_weighted(yhat_te, yhat_tr, train.y, cfg, alive)
 
 

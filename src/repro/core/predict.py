@@ -13,107 +13,22 @@ documents under
 (averaging over samples follows Nguyen et al. 2014, which the paper builds
 its MCMC procedure on).
 
-All sweeps run through the fused multi-sweep path in
-`kernels.ops.slda_predict_sweeps` (DESIGN.md §Predict-kernel): one launch
-per document block, φ̂ row-gathered from the transposed [W, T] layout, and
-per-token uniforms derived from a counter-based hash of a per-document
-seed — precomputing [D, n_sweeps, N] uniforms up front is a multi-GB
-allocation at the paper's corpus sizes (found the hard way: the
-paper-scale Fig. 6 run OOMed).
+`predict` is a thin wrapper over the unified execution plan
+(DESIGN.md §Execution-plan): a single model is M=1 through the
+chain-batched prediction executors — per-bucket fused launches
+(`kernels.ops.slda_predict_sweeps`, one launch per doc block, φ̂
+row-gathered from the transposed [W, T] layout, per-token uniforms from
+a counter-based hash of a per-document seed) on the pallas route and
+for the degenerate padded schedule, the STAIRCASE twin for multi-bucket
+jnp plans.  Precomputing [D, n_sweeps, N] uniforms up front is a
+multi-GB allocation at the paper's corpus sizes (found the hard way:
+the paper-scale Fig. 6 run OOMed) — hence the counter-hash PRNG.
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from .types import (BucketedCorpus, Corpus, SLDAConfig, SLDAModel,
-                    _stair_segments, _take_docs)
-
-
-def stair_predict(bc: BucketedCorpus, phi, z0, seeds, cfg: SLDAConfig):
-    """Run the STAIRCASE prediction executor over a bucketed schedule of
-    a SHARED corpus (DESIGN.md §Ragged-execution) — the jnp-route
-    counterpart of the per-bucket fused launches: same schedule, but the
-    bucket widths become token-range segments walked inside each sweep
-    over the still-alive doc suffix, so the sequential step count stays
-    N_max while executed slots collapse to the staircase.
-
-    phi [M, T, W]; z0 [M, D, ctr_stride]; seeds [M, D] — all in
-    ORIGINAL doc order (M may be 1; ndt0 is derived from z0 and the
-    bucket masks, the same bits as the padded scatter).  Chains are
-    folded
-    DOC-MAJOR (row r = d·M + c) around one stacked [M·W, T] table so doc
-    suffixes stay row suffixes.  Returns ndt_avg [M, D, T], original
-    order — bit-identical per document to the padded chains twin.
-    """
-    from repro.kernels.slda_predict import slda_predict_stair_jnp
-
-    M, T, W = phi.shape
-    D, S = bc.n_docs, bc.ctr_stride
-    assert bc.n_chains is None, "stair_predict wants a shared corpus"
-    phi_t = jnp.swapaxes(phi, -1, -2).reshape(M * W, T)
-    off = jnp.arange(M, dtype=jnp.int32) * W
-    fold = lambda a: jnp.swapaxes(a, 0, 1).reshape((D * M,) + a.shape[2:])
-    sort = lambda a: _take_docs(a, bc.perm, 1)
-    seeds_f = fold(sort(seeds))
-    z0_b = bc.split_padded(z0, d_axis=1)          # [M, Db, Nb] sorted
-    ndt0_f = fold(jnp.concatenate(
-        [jax.vmap(lambda z: jnp.zeros((b.tokens.shape[0], T), jnp.float32)
-                  .at[jnp.arange(b.tokens.shape[0])[:, None], z]
-                  .add(b.mask))(zb)
-         for b, zb in zip(bc.buckets, z0_b)], axis=1))
-
-    starts = np.cumsum([0] + list(bc.counts))
-    seg_r0 = [int(s) * M for s in starts[:-1]]
-    seg_n0 = [0] + list(bc.widths[:-1])
-    # shared segment slicing (types._stair_segments), then the doc-major
-    # chain fold with per-chain vocab offsets on the token ids
-    seg_tok = [(tk[:, None, :] + off[None, :, None])
-               .reshape(tk.shape[0] * M, tk.shape[1])
-               for tk in _stair_segments(bc, [b.tokens
-                                              for b in bc.buckets])]
-    seg_mask = [jnp.broadcast_to(mk[:, None, :], mk.shape[:1] + (M,)
-                                 + mk.shape[1:]).reshape(-1, mk.shape[1])
-                for mk in _stair_segments(bc, [b.mask
-                                               for b in bc.buckets])]
-    seg_z0 = [jnp.swapaxes(zk, 0, 1).reshape(-1, zk.shape[-1])
-              for zk in _stair_segments(bc, z0_b)]
-
-    avg_f = slda_predict_stair_jnp(
-        seg_tok, seg_mask, seg_z0, seg_r0, seg_n0, seeds_f, ndt0_f, phi_t,
-        alpha=cfg.alpha, n_burnin=cfg.n_pred_burnin,
-        n_samples=cfg.n_pred_samples, ctr_stride=S)
-    avg_sorted = jnp.swapaxes(avg_f.reshape(D, M, T), 0, 1)
-    return _take_docs(avg_sorted, bc.inv_perm, 1)     # [M, D, T] original
-
-
-def bucketed_predict_pallas(bc: BucketedCorpus, phi, z0, seeds,
-                            cfg: SLDAConfig):
-    """Pallas-route ragged prediction: one chain-batched fused launch per
-    length bucket over a SHARED corpus, each at the bucket's width with
-    the counter stride pinned (the ONE copy of the per-bucket loop —
-    single-chain callers pass M=1).  Same chain-form signature and
-    return as `stair_predict`: phi [M, T, W]; z0 [M, D, ctr_stride];
-    seeds [M, D] — ndt_avg [M, D, T] in ORIGINAL doc order."""
-    from repro.kernels import ops
-
-    S = bc.ctr_stride
-    z0_b = bc.split_padded(z0, d_axis=1)
-    seeds_b = bc.split_docs(seeds, d_axis=1)
-    avgs = []
-    for b, z0b, sb in zip(bc.buckets, z0_b, seeds_b):
-        d_idx = jnp.arange(b.tokens.shape[0])[:, None]
-        ndt0 = jax.vmap(
-            lambda z: jnp.zeros((b.tokens.shape[0], cfg.n_topics),
-                                jnp.float32).at[d_idx, z].add(b.mask))(z0b)
-        avg, _ = ops.slda_predict_sweeps(
-            b.tokens, b.mask, z0b, ndt0, phi, sb,
-            alpha=cfg.alpha, n_burnin=cfg.n_pred_burnin,
-            n_samples=cfg.n_pred_samples, doc_block=cfg.pred_doc_block,
-            use_pallas=True, chain_axis=True, ctr_stride=S)
-        avgs.append(avg)
-    return bc.merge_docs(avgs, d_axis=1)              # [M, D, T] original
+from .types import Corpus, SLDAConfig, SLDAModel
 
 
 def predict(key: jax.Array, model: SLDAModel, corpus: Corpus,
@@ -121,52 +36,12 @@ def predict(key: jax.Array, model: SLDAModel, corpus: Corpus,
     """ŷ for every document in `corpus` under `model`. jit-able, local.
 
     `corpus` may be a `BucketedCorpus` (DESIGN.md §Ragged-execution):
-    the fused pass then runs once per length bucket — compute scaling
-    with Σ true tokens instead of D·max_len — and is bit-identical per
-    document to the padded path (frozen φ̂ makes prediction document-
-    independent, and the schedule pins the PRNG counter stride)."""
-    # local import keeps the kernels package off core's module-import
-    # path; unlike the training sweep, BOTH predict routes (pallas and
-    # the batched-jnp fast path) live behind kernels.ops (DESIGN.md §1)
-    from repro.kernels import ops
-
-    if isinstance(corpus, BucketedCorpus):
-        return _predict_bucketed(key, model, corpus, cfg)
-
-    k_init, k_seeds = jax.random.split(key)
-    z0 = jax.random.randint(k_init, corpus.tokens.shape, 0, cfg.n_topics,
-                            jnp.int32)
-    d_idx = jnp.arange(corpus.n_docs)[:, None]
-    ndt0 = jnp.zeros((corpus.n_docs, cfg.n_topics), jnp.float32)
-    ndt0 = ndt0.at[d_idx, z0].add(corpus.mask)
-    seeds = jax.random.randint(k_seeds, (corpus.n_docs,), 0,
-                               jnp.iinfo(jnp.int32).max, jnp.int32)
-
-    ndt_avg, _ = ops.slda_predict_sweeps(
-        corpus.tokens, corpus.mask, z0, ndt0, model.phi, seeds,
-        alpha=cfg.alpha, n_burnin=cfg.n_pred_burnin,
-        n_samples=cfg.n_pred_samples, doc_block=cfg.pred_doc_block,
-        use_pallas=cfg.use_pallas)
-
-    zbar = ndt_avg / jnp.maximum(corpus.lengths(), 1.0)[:, None]
-    return zbar @ model.eta          # Eq. (5)
-
-
-def _predict_bucketed(key: jax.Array, model: SLDAModel, bc: BucketedCorpus,
-                      cfg: SLDAConfig) -> jax.Array:
-    """Ragged prediction: the STAIRCASE executor on the jnp route, one
-    fused launch per bucket on the pallas route.  Either way ndt
-    averages are merged back to ORIGINAL document order before ŷ, so
-    every reduction downstream sees the same operand order as the padded
-    path (the bit-identity contract — tests/test_ragged.py)."""
-    D, S = bc.n_docs, bc.ctr_stride
-    k_init, k_seeds = jax.random.split(key)
-    # same draws as the padded path: z0 [D, max_len] + seeds [D] in
-    # original order, then carved along the schedule
-    z0 = jax.random.randint(k_init, (D, S), 0, cfg.n_topics, jnp.int32)
-    seeds = jax.random.randint(k_seeds, (D,), 0,
-                               jnp.iinfo(jnp.int32).max, jnp.int32)
-    run = stair_predict if not cfg.use_pallas else bucketed_predict_pallas
-    ndt_avg = run(bc, model.phi[None], z0[None], seeds[None], cfg)[0]
-    zbar = ndt_avg / jnp.maximum(bc.lengths(), 1.0)[:, None]
-    return zbar @ model.eta          # Eq. (5)
+    the fused pass then runs over the length-bucketed schedule —
+    compute scaling with Σ true tokens instead of D·max_len — and is
+    bit-identical per document to the padded path (frozen φ̂ makes
+    prediction document-independent, and the schedule pins the PRNG
+    counter stride)."""
+    from .plan import build_plan
+    plan = build_plan(corpus, cfg)
+    models = jax.tree.map(lambda a: a[None], model)
+    return plan.predict(key[None], models)[0]

@@ -133,6 +133,31 @@ class SLDAConfig:
                              # count (still zero collectives until the
                              # final prediction gather).
 
+    def resolve_backend(self, devices=None) -> str:
+        """The ONE backend-routing decision (DESIGN.md §Execution-plan).
+
+        Returns "jnp" (the batched-jnp twins — the CPU fast path),
+        "pallas" (compiled kernels — every device is a TPU), or
+        "pallas-interpret" (use_pallas forced on a non-TPU backend —
+        correct but slow; what the kernel-parity tests exercise).
+        `devices=None` asks the default backend; the multi-device
+        runner passes its mesh's devices.
+        """
+        if not self.use_pallas:
+            return "jnp"
+        return ("pallas" if devices_support_pallas(devices)
+                else "pallas-interpret")
+
+
+def devices_support_pallas(devices=None) -> bool:
+    """True when every target device compiles the sLDA Pallas kernels
+    natively (TPU).  Shared predicate behind `SLDAConfig.resolve_backend`,
+    `kernels.ops`' interpret-mode switch, and the launch runner's
+    auto_pallas flip — the one copy of the platform check."""
+    if devices is None:
+        return jax.default_backend() == "tpu"
+    return all(d.platform == "tpu" for d in devices)
+
 
 @_pytree
 @dataclasses.dataclass
@@ -234,6 +259,17 @@ class BucketedCorpus:
     perm: Array
     inv_perm: Array
     ctr_stride: int
+    identity: bool = False   # static: the DEGENERATE 1-bucket schedule
+                             # with an identity permutation (the padded
+                             # path as a plan cell — core.plan.as_bucketed).
+                             # Row plumbing is a no-op then, so the
+                             # degenerate plan compiles to exactly the
+                             # padded program (same bits, zero gather
+                             # overhead).
+
+    @property
+    def _trivial(self) -> bool:
+        return self.identity and len(self.buckets) == 1
 
     # ---- static schedule facts (shapes only — safe under tracing)
 
@@ -282,6 +318,8 @@ class BucketedCorpus:
 
     def split_docs(self, arr, d_axis=None):
         """Original-order doc rows [.., D, ...] → per-bucket pieces."""
+        if self._trivial:
+            return [arr]
         if d_axis is None:
             d_axis = self.perm.ndim - 1
         srt = _take_docs(arr, self.perm, d_axis)
@@ -294,14 +332,19 @@ class BucketedCorpus:
 
     def merge_docs(self, pieces, d_axis=None):
         """Per-bucket doc rows → one array in ORIGINAL order."""
+        pieces = list(pieces)
+        if self._trivial:
+            return pieces[0]
         if d_axis is None:
             d_axis = self.perm.ndim - 1
-        return _take_docs(jnp.concatenate(list(pieces), axis=d_axis),
+        return _take_docs(jnp.concatenate(pieces, axis=d_axis),
                           self.inv_perm, d_axis)
 
     def split_padded(self, arr, d_axis=None):
         """[.., D, ctr_stride] original order → per-bucket [.., D_b, N_b]
         (rows gathered, token tail truncated to the bucket width)."""
+        if self._trivial and self.widths[0] == self.ctr_stride:
+            return [arr]
         if d_axis is None:
             d_axis = self.perm.ndim - 1
         return [p[..., :w] for p, w in zip(self.split_docs(arr, d_axis),
@@ -312,6 +355,9 @@ class BucketedCorpus:
         token columns beyond each bucket's width come from `fill`
         (original order) — they are all-padding slots, which the
         unbucketed launch leaves at their input values."""
+        pieces = list(pieces)
+        if self._trivial and pieces[0].shape[-1] == self.ctr_stride:
+            return pieces[0]
         if d_axis is None:
             d_axis = self.perm.ndim - 1
         fills = self.split_docs(fill, d_axis)
@@ -322,9 +368,11 @@ class BucketedCorpus:
 
 jax.tree_util.register_pytree_node(
     BucketedCorpus,
-    lambda bc: ((bc.buckets, bc.perm, bc.inv_perm), bc.ctr_stride),
+    lambda bc: ((bc.buckets, bc.perm, bc.inv_perm),
+                (bc.ctr_stride, bc.identity)),
     lambda aux, ch: BucketedCorpus(buckets=tuple(ch[0]), perm=ch[1],
-                                   inv_perm=ch[2], ctr_stride=aux),
+                                   inv_perm=ch[2], ctr_stride=aux[0],
+                                   identity=aux[1]),
 )
 
 
@@ -442,6 +490,32 @@ def bucket_corpus(corpus: Corpus, n_buckets: int = 8, *,
     return BucketedCorpus(buckets=tuple(buckets), perm=perm_j,
                           inv_perm=jnp.asarray(inv_perm),
                           ctr_stride=src_n)
+
+
+def partition(corpus: Corpus, m: int) -> Corpus:
+    """Split a corpus into M equal shards: [D, ...] → [M, D/M, ...].
+
+    The paper partitions uniformly at random; callers should pre-shuffle.
+    D must be divisible by M (pad the corpus if not).
+    """
+    if corpus.n_docs % m:
+        raise ValueError(f"{corpus.n_docs} docs not divisible by {m} shards")
+    reshape = lambda x: x.reshape((m, corpus.n_docs // m) + x.shape[1:])
+    return Corpus(tokens=reshape(corpus.tokens), mask=reshape(corpus.mask),
+                  y=reshape(corpus.y))
+
+
+def _concat_corpora(a: Corpus, b: Corpus) -> Corpus:
+    """Stack two corpora along the doc axis (padding to a common max_len)
+    so one fused prediction pass covers both."""
+    n = max(a.max_len, b.max_len)
+    padn = lambda x, w: jnp.pad(x, ((0, 0), (0, w))) if w else x
+    return Corpus(
+        tokens=jnp.concatenate([padn(a.tokens, n - a.max_len),
+                                padn(b.tokens, n - b.max_len)]),
+        mask=jnp.concatenate([padn(a.mask, n - a.max_len),
+                              padn(b.mask, n - b.max_len)]),
+        y=jnp.concatenate([a.y, b.y]))
 
 
 def _stair_segments(bc, pieces):

@@ -28,7 +28,10 @@ from .ssd_scan import ssd_scan, ssd_decode_step  # noqa: F401 (re-export)
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    # the ONE platform predicate (shared with SLDAConfig.resolve_backend
+    # and the launch runner's auto_pallas flip)
+    from repro.core.types import devices_support_pallas
+    return not devices_support_pallas()
 
 
 # §Perf trace-time switches (set by the launcher before lowering; the

@@ -196,6 +196,73 @@ def run_cell(arch, shape_name, multi_pod, out_dir=None, verbose=True,
     return meta
 
 
+def slda_plan_report(args):
+    """Print the chosen sLDA `ExecutionPlan` for a corpus of the given
+    shape — executor, bucket widths, spl schedule, refresh cadence, and
+    the predicted padded-slot vs effective token work — so a user can
+    see WHY a route was picked before paying for a run (DESIGN.md
+    §Execution-plan).  The corpus is synthetic (the paper's heavy-tailed
+    log-normal length profile) but the plan depends only on lengths and
+    the config, so the report transfers to any corpus with the same
+    shape."""
+    from repro.core import SLDAConfig, build_plan, build_schedule, partition
+    from repro.data import make_slda_corpus
+
+    cfg = SLDAConfig(n_topics=args.slda_topics, vocab_size=args.slda_vocab,
+                     length_buckets=args.slda_buckets,
+                     sweeps_per_launch=args.slda_spl,
+                     use_pallas=args.slda_pallas)
+    corpus, _ = make_slda_corpus(
+        jax.random.PRNGKey(0), args.slda_docs, args.slda_vocab,
+        args.slda_topics, args.slda_maxlen,
+        doc_len_dist="lognormal" if args.slda_len_sigma > 0 else "uniform",
+        len_sigma=args.slda_len_sigma or 1.0)
+    m = args.slda_chains
+    train_plan = build_plan(
+        build_schedule(partition(corpus, m), cfg), cfg)
+    predict_plan = build_plan(build_schedule(corpus, cfg), cfg)
+    report = {
+        "backend_resolution": cfg.resolve_backend(),
+        "train_plan": train_plan.describe(),
+        "predict_plan": predict_plan.describe(),
+    }
+    d = train_plan.describe()
+    why = []
+    why.append(f"backend={train_plan.backend}: "
+               + ("use_pallas off -> batched-jnp twins"
+                  if not cfg.use_pallas else
+                  ("all devices TPU -> compiled kernels"
+                   if train_plan.backend == "pallas"
+                   else "use_pallas forced on non-TPU -> interpret mode")))
+    if d["buckets"] == 1:
+        why.append("1 bucket (length_buckets=0 or uniform lengths) -> "
+                   "padded degenerate schedule; per-bucket 'blocks' "
+                   "executor == the padded fused launches")
+    elif train_plan.executor == "stair":
+        why.append(f"{d['buckets']} buckets on the jnp route -> STAIR "
+                   "executor (per-bucket launches would re-run the "
+                   "token loop per bucket; stair keeps step count at "
+                   "N_max while slots collapse to the staircase)")
+    else:
+        why.append(f"{d['buckets']} buckets on the pallas route -> one "
+                   "fused launch per bucket (chain grids intact)")
+    n_rem = d["remainder_sweeps"]
+    why.append(f"spl schedule: {d['launches'] - (1 if n_rem else 0)} "
+               f"launches x {d['sweeps_per_launch']} sweeps"
+               + (f" + one {n_rem}-sweep remainder launch" if n_rem
+                  else "")
+               + f" (total sweeps stay exact); {d['count_refresh']}")
+    why.append(f"predicted work per chain-sweep: "
+               f"{d['slot_tokens_per_sweep']} executed slot-tokens vs "
+               f"{d['real_tokens_per_sweep']} real (effective tok/s = "
+               f"slot tok/s / {d['slot_vs_effective_tok_ratio']}); the "
+               f"padded path would execute "
+               f"{d['docs_per_chain'] * d['ctr_stride']} slots")
+    report["why"] = why
+    print(json.dumps(report, indent=1))
+    return report
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -208,7 +275,23 @@ def main():
                          "baseline on the multi-pod mesh)")
     ap.add_argument("--tag", default="", help="artifact filename suffix")
     ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--slda-plan", action="store_true",
+                    help="print the sLDA ExecutionPlan for the given "
+                         "corpus shape (see slda_plan_report) and exit")
+    ap.add_argument("--slda-docs", type=int, default=512)
+    ap.add_argument("--slda-maxlen", type=int, default=256)
+    ap.add_argument("--slda-chains", type=int, default=8)
+    ap.add_argument("--slda-buckets", type=int, default=8)
+    ap.add_argument("--slda-spl", type=int, default=8)
+    ap.add_argument("--slda-vocab", type=int, default=1000)
+    ap.add_argument("--slda-topics", type=int, default=32)
+    ap.add_argument("--slda-len-sigma", type=float, default=1.0)
+    ap.add_argument("--slda-pallas", action="store_true")
     args = ap.parse_args()
+
+    if args.slda_plan:
+        slda_plan_report(args)
+        return
 
     if args.all:
         archs = sorted(ARCHS)

@@ -27,7 +27,8 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import Corpus, SLDAConfig, bucket_corpus, combine, partition
+from repro.core import (Corpus, SLDAConfig, build_schedule, combine,
+                        devices_support_pallas, partition)
 from repro.core.parallel import predict_chains_keyed, train_chains_keyed
 
 
@@ -35,8 +36,10 @@ def mesh_supports_pallas(mesh: Mesh) -> bool:
     """True when every device in the mesh compiles the sLDA Pallas kernels
     natively (TPU).  On CPU/GPU meshes the kernels would run in interpret
     mode — correct but slower than the batched-jnp twins, so the runner
-    keeps use_pallas off there."""
-    return all(d.platform == "tpu" for d in mesh.devices.flat)
+    keeps use_pallas off there.  (Thin alias of the shared
+    `core.devices_support_pallas` predicate — the one platform check,
+    also behind `SLDAConfig.resolve_backend`.)"""
+    return devices_support_pallas(mesh.devices.flat)
 
 
 def parallel_slda_shard_map(key, train: Corpus, test: Corpus,
@@ -71,10 +74,11 @@ def parallel_slda_shard_map(key, train: Corpus, test: Corpus,
     shards = partition(train, m)                      # [M, D/M, ...]
     shard_spec, test_spec = P(axis), P()
     if cfg.length_buckets > 0:
-        kw = dict(token_block=cfg.bucket_token_block,
-                  overhead_docs=cfg.bucket_overhead_docs)
-        shards = bucket_corpus(shards, cfg.length_buckets, **kw)
-        test = bucket_corpus(test, cfg.length_buckets, **kw)
+        # schedules are built HERE — outside shard_map, where lengths
+        # are concrete; inside each slice `train_chains_keyed` builds
+        # its plan from the sharded schedule (plan per shard)
+        shards = build_schedule(shards, cfg)
+        test = build_schedule(test, cfg)
         shard_spec = jax.tree.map(lambda _: P(axis), shards)
         test_spec = jax.tree.map(lambda _: P(), test)
 

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import SLDAConfig, predict, train_chain
+from repro.core import SLDAConfig
 from repro.core.parallel import (partition, predict_chains, train_chains,
                                  run_weighted_average)
 from repro.data import make_slda_corpus, train_test_split
@@ -203,41 +203,9 @@ def test_gibbs_sweep_chain_axis_bitwise():
 
 
 # ------------------------------------------------- core chain-batched EM
-
-def test_train_chains_spl1_bit_identical_to_vmapped_train_chain():
-    """THE seed-semantics contract: the chain-batched EM loop at
-    sweeps_per_launch=1 reproduces jax.vmap(train_chain) bit-for-bit
-    (same threefry key tree, same sweep op order, same η solves)."""
-    cfg = SLDAConfig(n_topics=8, vocab_size=80, n_iters=5, rho=0.25)
-    corpus, _ = make_slda_corpus(jax.random.PRNGKey(10), 48, 80, 8, 16,
-                                 rho=0.25)
-    shards = partition(corpus, 4)
-    key = jax.random.PRNGKey(11)
-    keys = jax.random.split(key, 4)
-    _, mv = jax.jit(jax.vmap(train_chain, in_axes=(0, 0, None)),
-                    static_argnums=(2,))(keys, shards, cfg)
-    mc = jax.jit(train_chains, static_argnums=(2,))(key, shards, cfg)
-    for f in ("phi", "eta", "train_mse", "train_acc"):
-        a, b = np.asarray(getattr(mv, f)), np.asarray(getattr(mc, f))
-        np.testing.assert_allclose(a, b, atol=0, err_msg=f)
-
-
-def test_predict_chains_bit_identical_to_vmapped_predict():
-    cfg = SLDAConfig(n_topics=8, vocab_size=80, n_iters=4, rho=0.25,
-                     n_pred_burnin=2, n_pred_samples=2)
-    corpus, _ = make_slda_corpus(jax.random.PRNGKey(12), 48, 80, 8, 16,
-                                 rho=0.25)
-    train, test = train_test_split(corpus, 32)
-    models = jax.jit(train_chains, static_argnums=(2,))(
-        jax.random.PRNGKey(13), partition(train, 4), cfg)
-    kp = jax.random.PRNGKey(14)
-    y_v = jax.jit(jax.vmap(predict, in_axes=(0, 0, None, None)),
-                  static_argnums=(3,))(jax.random.split(kp, 4), models,
-                                       test, cfg)
-    y_c = jax.jit(predict_chains, static_argnums=(3,))(kp, models, test,
-                                                       cfg)
-    np.testing.assert_allclose(np.asarray(y_v), np.asarray(y_c), atol=0)
-
+# (The spl=1 bit-identity of the chain-batched EM loop vs the
+# seed-semantics reference — for every layout × M × backend cell — now
+# lives in tests/test_dispatch_matrix.py.)
 
 def test_weighted_average_fused_predict_matches_two_pass_statistically():
     """Fusing the test+train prediction passes changes the seed

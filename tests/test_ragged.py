@@ -32,9 +32,6 @@ import pytest
 
 from repro.core import (BucketedCorpus, Corpus, SLDAConfig, bucket_corpus,
                         partition, predict, train_chain)
-from repro.core.parallel import (_concat_corpora, _predict_chains_jit,
-                                 _train_chains_jit, combine,
-                                 run_weighted_average_bucketed)
 from repro.data import make_slda_corpus, train_test_split
 from repro.kernels import ops
 
@@ -215,86 +212,11 @@ def test_bucketed_chain_axis_ops_bitwise():
 
 
 # ------------------------------------------------------------ core level
-
-def test_train_chain_bucketed_bitwise_spl1():
-    """Full stochastic-EM bit-identity: state AND model — ndt/η live in
-    original doc order at every EM boundary, so even the η solve and the
-    MSE reduction see the padded operand order."""
-    cfg = SLDAConfig(n_topics=8, vocab_size=80, n_iters=5, rho=0.25)
-    corpus, _ = make_slda_corpus(jax.random.PRNGKey(10), 40, 80, 8, 24,
-                                 rho=0.25, doc_len_dist="lognormal")
-    k = jax.random.PRNGKey(11)
-    jt = jax.jit(train_chain, static_argnums=2)
-    s_pad, m_pad = jt(k, corpus, cfg)
-    s_bkt, m_bkt = jt(k, bucket_corpus(corpus, 3, overhead_docs=0), cfg)
-    for f in ("phi", "eta", "train_mse", "train_acc"):
-        np.testing.assert_allclose(np.asarray(getattr(m_pad, f)),
-                                   np.asarray(getattr(m_bkt, f)), atol=0,
-                                   err_msg=f)
-    for f in ("z", "ndt", "ntw", "nt", "eta"):
-        np.testing.assert_allclose(np.asarray(getattr(s_pad, f)),
-                                   np.asarray(getattr(s_bkt, f)), atol=0,
-                                   err_msg=f)
-
-
-def test_predict_bucketed_bitwise():
-    cfg = SLDAConfig(n_topics=8, vocab_size=80, n_iters=3, rho=0.25,
-                     n_pred_burnin=2, n_pred_samples=3)
-    corpus, _ = make_slda_corpus(jax.random.PRNGKey(12), 32, 80, 8, 20,
-                                 rho=0.25, doc_len_dist="lognormal")
-    _, model = jax.jit(train_chain, static_argnums=2)(
-        jax.random.PRNGKey(13), corpus, cfg)
-    kp = jax.random.PRNGKey(14)
-    jp = jax.jit(predict, static_argnums=3)
-    y_pad = jp(kp, model, corpus, cfg)
-    for nb in (1, 2, 4):
-        y_bkt = jp(kp, model, bucket_corpus(corpus, nb, overhead_docs=0), cfg)
-        np.testing.assert_allclose(np.asarray(y_pad), np.asarray(y_bkt),
-                                   atol=0, err_msg=str(nb))
-
-
-def test_chain_runners_bucketed_bitwise_spl1():
-    cfg = SLDAConfig(n_topics=8, vocab_size=80, n_iters=4, rho=0.25,
-                     n_pred_burnin=2, n_pred_samples=2)
-    corpus, _ = make_slda_corpus(jax.random.PRNGKey(15), 72, 80, 8, 24,
-                                 rho=0.25, doc_len_dist="lognormal")
-    train, test = train_test_split(corpus, 48)
-    shards = partition(train, 4)
-    k = jax.random.PRNGKey(16)
-    m_pad = _train_chains_jit(k, shards, cfg)
-    m_bkt = _train_chains_jit(k, bucket_corpus(shards, 3, overhead_docs=0), cfg)
-    for f in ("phi", "eta", "train_mse", "train_acc"):
-        np.testing.assert_allclose(np.asarray(getattr(m_pad, f)),
-                                   np.asarray(getattr(m_bkt, f)), atol=0,
-                                   err_msg=f)
-    kp = jax.random.PRNGKey(17)
-    y_pad = _predict_chains_jit(kp, m_pad, test, cfg)
-    y_bkt = _predict_chains_jit(kp, m_bkt, bucket_corpus(test, 3, overhead_docs=0), cfg)
-    np.testing.assert_allclose(np.asarray(y_pad), np.asarray(y_bkt),
-                               atol=0)
-
-
-def test_weighted_average_bucketed_end_to_end_bitwise():
-    """run_weighted_average_bucketed at spl=1 == the padded algorithm
-    run through the SAME phase-jit structure, bitwise."""
-    cfg = SLDAConfig(n_topics=8, vocab_size=80, n_iters=3, rho=0.25,
-                     n_pred_burnin=1, n_pred_samples=2, length_buckets=3,
-                     bucket_overhead_docs=0.0)
-    corpus, _ = make_slda_corpus(jax.random.PRNGKey(18), 60, 80, 8, 24,
-                                 rho=0.25, doc_len_dist="lognormal")
-    train, test = train_test_split(corpus, 40)
-    key = jax.random.PRNGKey(19)
-    got = run_weighted_average_bucketed(key, train, test, cfg, 4)
-    # padded reference with identical key tree and phase-jit boundaries
-    k1, k2, _ = jax.random.split(key, 3)
-    models = _train_chains_jit(k1, partition(train, 4), cfg)
-    both = _concat_corpora(test, train)
-    yhat = _predict_chains_jit(k2, models, both, cfg)
-    yhat_te, yhat_tr = yhat[:, :test.n_docs], yhat[:, test.n_docs:]
-    mse = ((yhat_tr - train.y[None, :]) ** 2).mean(-1)
-    ref = combine.weighted_average(yhat_te, train_mse=mse)
-    np.testing.assert_allclose(np.asarray(ref), np.asarray(got), atol=0)
-
+# (The spl=1 bit-identity of train_chain / predict / train_chains /
+# predict_chains and the end-to-end Weighted Average on a BucketedCorpus
+# vs the padded path is asserted cell-by-cell by the dispatch-matrix
+# test — tests/test_dispatch_matrix.py.  This module keeps the
+# schedule-type, ops-level, stair-executor, and hypothesis coverage.)
 
 def test_bucketed_fused_spl_gt1_self_consistent():
     """spl>1 bucketed is its own sampler family — not bit-equal to the
@@ -348,8 +270,8 @@ def test_stair_train_bitwise_at_one_sweep():
     """The STAIRCASE fused-training twin at n_sweeps=1 (no in-launch
     refresh → document-independent) == the padded chain_axis op,
     bitwise per document — both sampling forms."""
-    from repro.core.parallel import _stair_segments, _unstair_segments
-    from repro.core.types import _take_docs
+    from repro.core.types import (_stair_segments, _take_docs,
+                                  _unstair_segments)
     from repro.kernels.slda_train import slda_train_stair_jnp
     m, n_docs, vocab, n_topics, doc_len = 3, 11, 40, 6, 18
     (corpus, z0, ndt0, ntw, nt, eta, seeds, _,
