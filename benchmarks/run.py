@@ -6,7 +6,7 @@ figure/table or perf artifact.
   kernels  per-kernel µs/call
   roofline  aggregated dry-run roofline table (if artifacts exist)
   opt-in extras (--only): ablation, slda_predict, slda_train,
-  slda_parallel, slda_ragged — the sLDA perf suites (quick shapes
+  slda_parallel, slda_ragged, slda_robust — the sLDA perf suites (quick shapes
   unless --full; headline A/B rows printed; run each bench module's
   own __main__ to write the JSON artifacts).
 
@@ -94,6 +94,15 @@ def _bench_slda_ragged(args):
           f"padding={r['padding_frac']};mse_guard_ok={r['mse_guard_ok']}")
 
 
+def _bench_slda_robust(args):
+    from . import bench_slda_robust
+    r = bench_slda_robust.run(quick=not args.full)["results"]
+    print(f"slda_robust_checks_on,{r['checks_on_s'] * 1e6:.0f},"
+          f"overhead={r['health_check_overhead_frac']};"
+          f"overhead_ok={r['health_check_overhead_ok']};"
+          f"degraded_mse_guard_ok={r['degraded_mse_guard_ok']}")
+
+
 def _bench_roofline(args):
     try:
         from . import roofline
@@ -117,6 +126,7 @@ BENCHES = {
     "slda_train": (_bench_slda_train, False),
     "slda_parallel": (_bench_slda_parallel, False),
     "slda_ragged": (_bench_slda_ragged, False),
+    "slda_robust": (_bench_slda_robust, False),
     "roofline": (_bench_roofline, True),
 }
 

@@ -1,6 +1,8 @@
 """Fault-tolerant checkpointing for communication-free chains."""
-from .store import (save_checkpoint, restore_checkpoint, latest_step,
-                    list_chains, restore_elastic, CheckpointManager)
+from .store import (save_checkpoint, restore_checkpoint, restore_chain,
+                    latest_step, list_chains, restore_elastic,
+                    CheckpointManager)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "list_chains", "restore_elastic", "CheckpointManager"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "restore_chain",
+           "latest_step", "list_chains", "restore_elastic",
+           "CheckpointManager"]

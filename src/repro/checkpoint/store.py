@@ -19,6 +19,7 @@ import json
 import os
 import shutil
 import tempfile
+import zipfile
 
 import jax
 import jax.numpy as jnp
@@ -82,6 +83,22 @@ def list_chains(ckpt_dir: str, step: int) -> list[int]:
                   for f in os.listdir(d) if f.startswith("chain_"))
 
 
+def _load_manifest(step_dir: str, step: int) -> dict:
+    """Read + validate a step's manifest (handle closed promptly — the
+    old `json.load(open(...))` leaked the fd until GC).  A manifest whose
+    recorded step disagrees with the directory name means a torn or
+    hand-copied checkpoint; restoring it silently would resume training
+    from the wrong point, so fail loudly instead."""
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    if manifest.get("step") != step:
+        raise ValueError(
+            f"checkpoint manifest in {step_dir} records step "
+            f"{manifest.get('step')!r}, expected {step} — torn or "
+            "mislabelled checkpoint")
+    return manifest
+
+
 def _unflatten_into(template_chain, flat):
     paths, treedef = jax.tree_util.tree_flatten_with_path(template_chain)
     leaves = []
@@ -96,7 +113,7 @@ def restore_checkpoint(ckpt_dir: str, step: int, template):
     """Restore all chains recorded in the manifest; template is a pytree
     with the target leading chain dim (its values are ignored)."""
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
-    manifest = json.load(open(os.path.join(d, "manifest.json")))
+    manifest = _load_manifest(d, step)
     n = manifest["n_chains"]
     chains = []
     tmpl0 = _chain_slice(template, 0)
@@ -105,6 +122,17 @@ def restore_checkpoint(ckpt_dir: str, step: int, template):
             chains.append(_unflatten_into(tmpl0, dict(z)))
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *chains)
     return stacked, manifest
+
+
+def restore_chain(ckpt_dir: str, step: int, chain: int, template_chain):
+    """Restore ONE chain's pytree slice (no leading chain dim) — the
+    supervisor's restart path: a failed chain re-reads its own file and
+    nobody else's.  Raises on a missing/corrupt/truncated file; the
+    caller decides the fallback (fresh init per the recovery policy)."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    _load_manifest(d, step)
+    with np.load(os.path.join(d, f"chain_{chain:03d}.npz")) as z:
+        return _unflatten_into(template_chain, dict(z))
 
 
 def restore_elastic(ckpt_dir: str, step: int, template, init_fn,
@@ -116,7 +144,7 @@ def restore_elastic(ckpt_dir: str, step: int, template, init_fn,
     missing chain files likewise fall back to init_fn (fault isolation).
     """
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
-    manifest = json.load(open(os.path.join(d, "manifest.json")))
+    manifest = _load_manifest(d, step)
     target = jax.tree.leaves(template)[0].shape[0]
     tmpl0 = _chain_slice(template, 0)
     chains, restored = [], []
@@ -126,7 +154,8 @@ def restore_elastic(ckpt_dir: str, step: int, template, init_fn,
             with np.load(path) as z:
                 chains.append(_unflatten_into(tmpl0, dict(z)))
             restored.append(i)
-        except (FileNotFoundError, KeyError, ValueError, OSError):
+        except (FileNotFoundError, KeyError, ValueError, OSError,
+                zipfile.BadZipFile):   # truncated .npz = torn write
             if not missing_ok:
                 raise
             chains.append(init_fn(i))

@@ -7,10 +7,14 @@ from .gibbs import init_state, sweep, train_chain, zbar, phi_hat
 from .regression import solve_eta, solve_eta_ols
 from .plan import ExecutionPlan, as_bucketed, build_plan, build_schedule
 from .predict import predict
-from .combine import simple_average, weighted_average, median, COMBINERS
+from .combine import simple_average, weighted_average, median, all_dead, \
+    COMBINERS
 from .parallel import (ALGORITHMS, train_chains, predict_chains,
                        run_nonparallel, run_naive, run_simple_average,
                        run_weighted_average)
+from .supervisor import (ChainSupervisor, EnsembleHealthError, HealthConfig,
+                         RecoveryPolicy, SupervisorReport, chain_status,
+                         describe_status, supervised_run_average)
 
 __all__ = [
     "BucketedCorpus", "Corpus", "GibbsState", "SLDAConfig", "SLDAModel",
@@ -18,8 +22,11 @@ __all__ = [
     "devices_support_pallas", "init_state", "sweep", "train_chain",
     "zbar", "phi_hat", "solve_eta", "solve_eta_ols",
     "ExecutionPlan", "as_bucketed", "build_plan", "build_schedule",
-    "predict", "simple_average", "weighted_average", "median", "COMBINERS",
-    "ALGORITHMS", "partition", "train_chains", "predict_chains",
-    "run_nonparallel", "run_naive", "run_simple_average",
+    "predict", "simple_average", "weighted_average", "median", "all_dead",
+    "COMBINERS", "ALGORITHMS", "partition", "train_chains",
+    "predict_chains", "run_nonparallel", "run_naive", "run_simple_average",
     "run_weighted_average",
+    "ChainSupervisor", "EnsembleHealthError", "HealthConfig",
+    "RecoveryPolicy", "SupervisorReport", "chain_status", "describe_status",
+    "supervised_run_average",
 ]

@@ -17,38 +17,72 @@ Extensions beyond the paper (flagged as such):
 
 All rules accept a per-chain `alive` mask: a crashed or straggling chain is
 simply dropped and the weights renormalize over survivors.  This is the
-fault-tolerance dividend of communication-free training (DESIGN.md §4).
+fault-tolerance dividend of communication-free training (DESIGN.md
+§Fault-model): because chains never communicate, dropping one is EXACT —
+the surviving sub-ensemble's combined prediction is bit-identical to an
+ensemble that never contained the dead chain.
+
+Quarantine safety: a dead chain's predictions and weights are zeroed via
+`where` BEFORE any reduction, so a NaN/Inf-poisoned chain can never
+contaminate the combine (0 * NaN is NaN — a plain mask-multiply is not
+enough).  An all-dead mask falls back to the UNMASKED combine and warns
+when the mask is concrete: returning the data-dependent answer is more
+useful than the renormalize-by-zero NaN it used to produce, and callers
+who must fail hard can check `all_dead(alive)` themselves.
 """
 from __future__ import annotations
 
+import warnings
+
 import jax.numpy as jnp
+import numpy as np
 
 _EPS = 1e-12
 
 
-def _alive(yhat: jnp.ndarray, alive) -> jnp.ndarray:
+def all_dead(alive) -> bool:
+    """Host-side check for the degenerate mask (None counts as alive)."""
+    return alive is not None and float(np.asarray(alive).sum()) == 0.0
+
+
+def _alive(yhat: jnp.ndarray, alive):
+    """The ONE copy of the alive-mask semantics.  Returns
+    `(mask, yhat_safe)`: the effective mask (all-ones fallback when every
+    chain is dead) and the predictions with dead rows zeroed so poison
+    cannot propagate through the reductions."""
     if alive is None:
-        return jnp.ones((yhat.shape[0],), yhat.dtype)
-    return alive.astype(yhat.dtype)
+        return jnp.ones((yhat.shape[0],), yhat.dtype), yhat
+    a = alive.astype(yhat.dtype)
+    try:                       # concrete mask → warn on the fallback
+        if float(np.asarray(a).sum()) == 0.0:
+            warnings.warn("combine: all-dead alive mask — falling back "
+                          "to the unmasked combine", RuntimeWarning,
+                          stacklevel=3)
+    except Exception:          # traced under jit — no host warning possible
+        pass
+    a = jnp.where(a.sum() > 0, a, jnp.ones_like(a))
+    return a, jnp.where(a[:, None] > 0, yhat, 0.0)
 
 
 def simple_average(yhat: jnp.ndarray, alive=None) -> jnp.ndarray:
     """yhat: [M, D_test] per-chain predictions → [D_test]."""
-    a = _alive(yhat, alive)
-    return (a[:, None] * yhat).sum(0) / jnp.maximum(a.sum(), 1.0)
+    a, safe = _alive(yhat, alive)
+    return (a[:, None] * safe).sum(0) / jnp.maximum(a.sum(), 1.0)
 
 
 def weighted_average(yhat: jnp.ndarray, train_mse: jnp.ndarray = None,
                      train_acc: jnp.ndarray = None, alive=None) -> jnp.ndarray:
     """Weights from inverse training MSE (continuous) or training accuracy
-    (binary); exactly one of train_mse / train_acc must be given."""
-    a = _alive(yhat, alive)
+    (binary); exactly one of train_mse / train_acc must be given.  A dead
+    or non-finite-weight chain contributes exactly zero — its (possibly
+    NaN) statistic is excluded via `where`, not multiplied by zero."""
+    a, safe = _alive(yhat, alive)
     if (train_mse is None) == (train_acc is None):
         raise ValueError("pass exactly one of train_mse / train_acc")
     raw = 1.0 / (train_mse + _EPS) if train_mse is not None else train_acc
-    w = raw * a
+    w = jnp.where((a > 0) & jnp.isfinite(raw), raw, 0.0)
     w = w / jnp.maximum(w.sum(), _EPS)
-    return w @ yhat
+    return w @ safe
 
 
 def median(yhat: jnp.ndarray, alive=None) -> jnp.ndarray:
@@ -59,17 +93,16 @@ def median(yhat: jnp.ndarray, alive=None) -> jnp.ndarray:
     it — exactly.  (An earlier version averaged medians over ±big-padded
     copies, which mis-locates the median whenever the padding straddles
     it, e.g. one survivor out of two chains came back halved.)  All-dead
-    degrades to 0.0, matching the other rules.
+    falls back to the unmasked median like the other rules (`_alive`).
     """
-    a = _alive(yhat, alive)
-    big = jnp.nanmax(jnp.abs(yhat)) + 1.0
-    s = jnp.sort(jnp.where(a[:, None] > 0, yhat, big), axis=0)
+    a, safe = _alive(yhat, alive)
+    big = jnp.nanmax(jnp.abs(safe)) + 1.0
+    s = jnp.sort(jnp.where(a[:, None] > 0, safe, big), axis=0)
     n = jnp.sum(a > 0).astype(jnp.int32)
     m = yhat.shape[0]
     i0 = jnp.clip((n - 1) // 2, 0, m - 1)
     i1 = jnp.clip(n // 2, 0, m - 1)
-    med = 0.5 * (jnp.take(s, i0, axis=0) + jnp.take(s, i1, axis=0))
-    return jnp.where(n > 0, med, jnp.zeros_like(med))
+    return 0.5 * (jnp.take(s, i0, axis=0) + jnp.take(s, i1, axis=0))
 
 
 COMBINERS = {

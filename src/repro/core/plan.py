@@ -391,26 +391,52 @@ class ExecutionPlan:
         every = self.cfg.count_rebuild_every
         return (it % every == 0) if every > 0 else False
 
-    def train_em(self, k_sweeps, state0):
+    def n_boundaries(self) -> int:
+        """EM boundaries this plan executes (count refresh + η solve
+        points): one per sweep at spl=1, one per launch at spl>1 —
+        the granularity at which an `em_hook` observes the state."""
+        _, n_full, rem = self.sweep_schedule()
+        return n_full + (1 if rem else 0)
+
+    def train_em(self, k_sweeps, state0, *, em_hook=None, status0=None,
+                 it_offset=0):
         """The stochastic-EM loop — the one copy.  spl=1 runs the seed
         path (threefry uniforms, η solve every sweep); spl>1 runs the
         fused-launch schedule through the plan's executor, with a
-        remainder launch keeping total sweeps == cfg.n_iters exactly."""
+        remainder launch keeping total sweeps == cfg.n_iters exactly.
+
+        `em_hook(state, it, status) -> (state, status)`, when given, is
+        called at EVERY EM boundary *inside* the scan — the supervisor
+        layer's attachment point (DESIGN.md §Fault-model): fault
+        injection mutates the state, health probes fold per-chain flags
+        into `status` (initialised from `status0`), all with zero extra
+        host syncs; the accumulated status surfaces only in the return
+        value `(state, status)`.  `it` is the EM-boundary index (sweep
+        index at spl=1, launch index at spl>1) plus `it_offset`, which
+        also offsets the count-rebuild cadence so a supervisor running
+        the loop round-by-round keeps the single-run cadence.  With
+        `em_hook=None` the loop is byte-for-byte the pre-hook program
+        and returns `state` alone."""
         spl, n_full, rem = self.sweep_schedule()
         if spl == 1:
             inv_len_b = self._inv_len_b()   # hoisted: scan constant
 
-            def em_step(state, inp):
+            def em_step(carry, inp):
+                state, status = carry
                 ks, it = inp
                 z_new_b, ndt = self._seed_sweep(state, ks, inv_len_b)
-                return self._refresh_and_solve(
-                    z_new_b, ndt, state, self._rebuild_now(it)), None
+                state = self._refresh_and_solve(
+                    z_new_b, ndt, state, self._rebuild_now(it))
+                if em_hook is not None:
+                    state, status = em_hook(state, it, status)
+                return (state, status), None
 
             keys = jnp.moveaxis(jax.vmap(lambda k: jax.random.split(
                 k, n_full))(k_sweeps), 0, 1)
-            state, _ = jax.lax.scan(em_step, state0,
-                                    (keys, jnp.arange(n_full)))
-            return state
+            (state, status), _ = jax.lax.scan(
+                em_step, (state0, status0),
+                (keys, jnp.arange(n_full) + it_offset))
+            return state if em_hook is None else (state, status)
 
         # schedule-invariant staging is hoisted HERE, once per trace —
         # the launch closures see it as scan constants
@@ -422,14 +448,25 @@ class ExecutionPlan:
                                        inv_len_b=self._inv_len_b())
         keys = jnp.moveaxis(jax.vmap(lambda k: jax.random.split(
             k, n_full + (1 if rem else 0)))(k_sweeps), 0, 1)
-        state = state0
+
+        def launch_step(carry, inp):
+            state, status = carry
+            state = launch(state, inp[0], inp[1], spl)
+            if em_hook is not None:
+                state, status = em_hook(state, inp[1], status)
+            return (state, status), None
+
+        state, status = state0, status0
         if n_full:
-            state, _ = jax.lax.scan(
-                lambda s, inp: (launch(s, inp[0], inp[1], spl), None),
-                state, (keys[:n_full], jnp.arange(n_full)))
+            (state, status), _ = jax.lax.scan(
+                launch_step, (state, status),
+                (keys[:n_full], jnp.arange(n_full) + it_offset))
         if rem:
-            state = launch(state, keys[-1], jnp.asarray(n_full), rem)
-        return state
+            it = jnp.asarray(n_full) + it_offset
+            state = launch(state, keys[-1], it, rem)
+            if em_hook is not None:
+                state, status = em_hook(state, it, status)
+        return state if em_hook is None else (state, status)
 
     def _export(self, state) -> SLDAModel:
         """Per-chain (φ̂, η̂, train MSE/acc) — what crosses the chain

@@ -258,6 +258,31 @@ def slda_plan_report(args):
                f"slot tok/s / {d['slot_vs_effective_tok_ratio']}); the "
                f"padded path would execute "
                f"{d['docs_per_chain'] * d['ctr_stride']} slots")
+    # supervisor plan (DESIGN.md §Fault-model): what the fault-tolerant
+    # runtime would check and how it would recover, for this plan
+    from repro.core import HealthConfig, RecoveryPolicy
+    health, rec = HealthConfig(), RecoveryPolicy(
+        max_restarts=args.slda_restarts, min_alive_frac=args.slda_min_alive)
+    n_bound = train_plan.n_boundaries()
+    checks = [n for n, on in [("nan", health.check_nan),
+                              ("counts", health.check_counts),
+                              ("mse-z", health.check_mse)] if on]
+    report["supervisor"] = {
+        "health_checks": checks,
+        "em_boundaries": n_bound,
+        "mse_z_cut": health.mse_z_cut,
+        "mse_warmup_boundaries": health.mse_warmup,
+        "max_restarts_per_chain": rec.max_restarts,
+        "backoff_base_s": rec.backoff_base,
+        "min_alive_frac": rec.min_alive_frac,
+    }
+    why.append(f"supervisor: health checks [{', '.join(checks)}] compiled "
+               f"into the EM scan at each of the {n_bound} boundaries "
+               f"(zero extra host syncs); hard faults get up to "
+               f"{rec.max_restarts} checkpointed restarts per chain "
+               f"(backoff {rec.backoff_base}s base), then quarantine — "
+               f"exact chain drop, run aborts below "
+               f"{rec.min_alive_frac:.0%} alive")
     report["why"] = why
     print(json.dumps(report, indent=1))
     return report
@@ -287,6 +312,10 @@ def main():
     ap.add_argument("--slda-topics", type=int, default=32)
     ap.add_argument("--slda-len-sigma", type=float, default=1.0)
     ap.add_argument("--slda-pallas", action="store_true")
+    ap.add_argument("--slda-restarts", type=int, default=2,
+                    help="supervisor restart budget per chain")
+    ap.add_argument("--slda-min-alive", type=float, default=0.25,
+                    help="abort threshold on the alive chain fraction")
     args = ap.parse_args()
 
     if args.slda_plan:

@@ -46,7 +46,9 @@ def parallel_slda_shard_map(key, train: Corpus, test: Corpus,
                             cfg: SLDAConfig, mesh: Mesh,
                             axis: str = "data", rule: str = "simple",
                             auto_pallas: bool = True,
-                            chains_per_device: int | None = None):
+                            chains_per_device: int | None = None,
+                            alive=None, auto_quarantine: bool = True,
+                            return_report: bool = False):
     """Run M = mesh.shape[axis] × chains_per_device chains, a chain batch
     per mesh slice, then combine predictions.  Returns ŷ [D_test].
 
@@ -64,7 +66,17 @@ def parallel_slda_shard_map(key, train: Corpus, test: Corpus,
     length-bucketed HERE — outside shard_map, where lengths are concrete
     — and the bucketed pytrees flow through the same per-slice chain
     functions (every bucket's arrays carry the chain dim, so the specs
-    below still shard only that axis; zero collectives is untouched)."""
+    below still shard only that axis; zero collectives is untouched).
+
+    Fault tolerance (DESIGN.md §Fault-model): `alive` [M] masks chains
+    out of the combine — communication-freedom makes the drop EXACT.
+    With `alive=None` and `auto_quarantine=True` (default), any chain
+    whose gathered predictions or train stats came back non-finite is
+    quarantined automatically — a NaN-poisoned replica cannot
+    contaminate ŷ.  When every chain is healthy the mask is all-ones,
+    which evaluates to the identical combine expressions, so healthy
+    runs are unchanged.  `return_report=True` additionally returns
+    {"alive": ..., "n_quarantined": ...}."""
     if auto_pallas and not cfg.use_pallas and mesh_supports_pallas(mesh):
         cfg = dataclasses.replace(cfg, use_pallas=True)
     cpd = cfg.chains_per_device if chains_per_device is None \
@@ -109,13 +121,30 @@ def parallel_slda_shard_map(key, train: Corpus, test: Corpus,
         check_rep=False,   # chain-local scans carry unvarying state
     )
     yhat_all, stats_all = fn(key, shards, test)
+    if alive is None and auto_quarantine:
+        # the gathered per-chain vectors are the chain's only output —
+        # a non-finite row means the chain is unusable, full stop
+        alive = (jnp.isfinite(yhat_all).all(axis=-1)
+                 & jnp.isfinite(stats_all).all(axis=-1)).astype(jnp.float32)
     if rule == "simple":
-        return combine.simple_average(yhat_all)
-    if rule == "weighted":
+        yhat = combine.simple_average(yhat_all, alive=alive)
+    elif rule == "weighted":
         if cfg.label_type == "binary":
-            return combine.weighted_average(yhat_all,
-                                            train_acc=stats_all[:, 1])
-        return combine.weighted_average(yhat_all, train_mse=stats_all[:, 0])
-    if rule == "median":
-        return combine.median(yhat_all)
-    raise ValueError(rule)
+            yhat = combine.weighted_average(yhat_all,
+                                            train_acc=stats_all[:, 1],
+                                            alive=alive)
+        else:
+            yhat = combine.weighted_average(yhat_all,
+                                            train_mse=stats_all[:, 0],
+                                            alive=alive)
+    elif rule == "median":
+        yhat = combine.median(yhat_all, alive=alive)
+    else:
+        raise ValueError(rule)
+    if return_report:
+        a = None if alive is None else jnp.asarray(alive)
+        report = {"alive": a,
+                  "n_quarantined": (0 if a is None
+                                    else int(m - float(a.sum())))}
+        return yhat, report
+    return yhat

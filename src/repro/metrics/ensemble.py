@@ -26,6 +26,32 @@ def chain_divergence(logits) -> jnp.ndarray:
     return 0.5 * (kl + kl.T)
 
 
+def robust_z(values, valid=None, *, rel_floor: float = 0.0) -> jnp.ndarray:
+    """Robust z-scores (median / MAD) of a 1-D statistic, jit-safe.
+
+    Non-finite entries — and entries masked out by the optional boolean
+    `valid` — are excluded from the location/scale estimate (nanmedian
+    over the valid subset) and come back as +inf, so downstream
+    `z < cut` tests treat them as maximal outliers.  `rel_floor` clamps
+    the scale to at least `rel_floor · |median|` — with a handful of
+    near-identical values the MAD degenerates to ~0 and any rounding
+    jitter becomes an "outlier"; the floor makes the score mean "several
+    times the typical level", which is what a divergence check wants.
+    This is the ONE copy of the outlier score, shared by the out-of-band
+    `ensemble_health` probe and the supervisor's in-scan train-MSE check
+    (`core.supervisor` — where host-side `int()` casts are illegal)."""
+    v = jnp.asarray(values, jnp.float32)
+    ok = jnp.isfinite(v)
+    if valid is not None:
+        ok = ok & (valid > 0)
+    vals = jnp.where(ok, v, jnp.nan)
+    med = jnp.nanmedian(vals)
+    mad = jnp.nanmedian(jnp.abs(vals - med))
+    scale = jnp.maximum(1.4826 * mad, rel_floor * jnp.abs(med)) + 1e-9
+    z = (v - med) / scale
+    return jnp.where(ok & jnp.isfinite(z), z, jnp.inf)
+
+
 def ensemble_health(per_chain_loss, logits=None, *, loss_z_cut: float = 4.0,
                     collapse_kl: float = 1e-3):
     """Returns (alive [C] float mask, report dict).
@@ -36,9 +62,7 @@ def ensemble_health(per_chain_loss, logits=None, *, loss_z_cut: float = 4.0,
     identical (median pairwise KL below `collapse_kl`)."""
     loss = jnp.asarray(per_chain_loss, jnp.float32)
     finite = jnp.isfinite(loss)
-    med = jnp.median(jnp.where(finite, loss, jnp.nanmax(loss)))
-    mad = jnp.median(jnp.abs(jnp.where(finite, loss, med) - med)) + 1e-9
-    z = (loss - med) / (1.4826 * mad)
+    z = robust_z(loss)
     alive = (finite & (z < loss_z_cut)).astype(jnp.float32)
 
     report = {"loss": loss, "z": z, "alive": alive, "collapsed": False}

@@ -123,3 +123,22 @@ class ServingEngine:
         """Serving-time straggler/failure cut: zero a chain's weight; the
         combiner renormalizes (the paper's alive-mask semantics)."""
         self.chain_weights = self.chain_weights.at[idx].set(0.0)
+
+    def revive_chain(self, idx: int, weight: float = 1.0):
+        """Undo a drop (the replica came back): restore the chain's
+        combine weight.  Exact for the same reason the drop is — chains
+        share nothing, so re-adding one only changes the mix weights."""
+        self.chain_weights = self.chain_weights.at[idx].set(weight)
+
+    def quarantine_unhealthy(self, per_chain_loss, logits=None, *,
+                             loss_z_cut: float = 4.0):
+        """Serving-side health cut: drop every chain whose probe loss is
+        non-finite or a robust-z outlier (`metrics.ensemble_health` — the
+        same statistic the training supervisor uses).  Multiplies the
+        weights by the alive mask, so an operator-set weight of 0 stays
+        0.  Returns the health report."""
+        from repro.metrics import ensemble_health
+        alive, report = ensemble_health(per_chain_loss, logits,
+                                        loss_z_cut=loss_z_cut)
+        self.chain_weights = self.chain_weights * alive
+        return report

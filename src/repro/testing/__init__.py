@@ -1,0 +1,6 @@
+"""Deterministic chaos-engineering harness for the chain ensemble."""
+from .faults import (FaultPlan, inject, no_faults, poison,
+                     random_fault_plan, truncate_chain_file)
+
+__all__ = ["FaultPlan", "inject", "no_faults", "poison",
+           "random_fault_plan", "truncate_chain_file"]

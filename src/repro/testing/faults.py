@@ -1,0 +1,142 @@
+"""Deterministic fault injection for the chain ensemble.
+
+Chaos testing the supervisor (DESIGN.md §Fault-model) needs faults that
+are (a) DETERMINISTIC — same seed, same fault, same boundary, so a
+failure report reproduces bit-for-bit — and (b) JIT-COMPATIBLE, because
+the supervisor's health probe runs inside the compiled EM scan and the
+whole point is to test detection *there*, not in host-side wrappers.
+
+A `FaultPlan` is therefore data, not control flow: per-chain int32
+trigger steps (−1 = never), compared against the traced EM-boundary
+index `it` inside the scan.  `FaultPlan.hook` plugs straight into
+`ChainSupervisor(fault_hook=...)`, which composes it BEFORE the health
+probe — an injected fault at boundary `it` is detectable at that same
+boundary.
+
+Fault semantics mirror how each failure class behaves in the wild:
+
+  * `nan_eta_step` — PERSISTENT (fires at every boundary ≥ step): a
+    genuinely diverged sampler re-produces NaN after any restart, so
+    this is the fault that exhausts the restart budget and exercises
+    the quarantine fallback.
+  * `corrupt_counts_step` — PERSISTENT: ndt[c,0,0] += 7 (breaks the
+    Σ ndt == Σ lengths invariant) and ntw[c,0,0] = −5 (breaks ntw ≥ 0);
+    η stays finite, so ONLY the count probes can catch it.
+  * `kill_step` — TRANSIENT (fires at exactly one boundary): a dead
+    worker loses its in-memory state once (poisoned to NaN here) and
+    also raises F_KILLED directly, the way a cluster runtime reports a
+    lost worker out-of-band.  Restart-from-checkpoint fully recovers.
+  * `straggle_step` — TRANSIENT, flag-only (F_STRAGGLER): a late chain
+    is *correct*; nothing in its state may change.
+
+State mutation + detection stay decoupled on purpose: NaN/count faults
+set NO bits here — the health probes must find them (that is the test);
+kill/straggle set F_KILLED/F_STRAGGLER because dead/late workers are
+runtime-reported events with no state signature of their own.
+"""
+from __future__ import annotations
+
+import os
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.supervisor import F_KILLED, F_STRAGGLER
+from repro.core.types import GibbsState
+
+_KINDS = ("nan", "corrupt", "kill", "straggle")
+
+
+class FaultPlan(NamedTuple):
+    """Per-chain trigger boundaries, [M] int32 each, −1 = never.  A
+    NamedTuple of arrays — already a pytree, so a plan can close over a
+    jitted round or ride through scan carries unchanged."""
+
+    nan_eta_step: jnp.ndarray
+    corrupt_counts_step: jnp.ndarray
+    kill_step: jnp.ndarray
+    straggle_step: jnp.ndarray
+
+    def hook(self):
+        """`em_hook`-shaped closure for `ChainSupervisor(fault_hook=)`."""
+        return lambda state, it: inject(state, it, self)
+
+
+def inject(state: GibbsState, it, fp: FaultPlan):
+    """Apply `fp` at traced EM-boundary `it` → (state', bits [M] uint32).
+    Pure jnp — runs inside the EM scan."""
+    m = state.eta.shape[0]
+    it = jnp.asarray(it)
+    armed = lambda step: step >= 0
+
+    # persistent divergence: η goes NaN at every boundary ≥ step
+    nan_on = armed(fp.nan_eta_step) & (it >= fp.nan_eta_step)
+    eta = jnp.where(nan_on[:, None], jnp.nan, state.eta)
+
+    # persistent count corruption: finite but invariant-breaking
+    cor = armed(fp.corrupt_counts_step) & (it >= fp.corrupt_counts_step)
+    ndt = state.ndt.at[:, 0, 0].add(jnp.where(cor, 7.0, 0.0))
+    ntw = state.ntw.at[:, 0, 0].set(
+        jnp.where(cor, -5.0, state.ntw[:, 0, 0]))
+
+    # one-shot kill: the worker's in-memory state is lost once
+    kill = armed(fp.kill_step) & (it == fp.kill_step)
+    eta = jnp.where(kill[:, None], jnp.nan, eta)
+    ndt = jnp.where(kill[:, None, None], jnp.nan, ndt)
+
+    strag = armed(fp.straggle_step) & (it == fp.straggle_step)
+    bits = (jnp.where(kill, jnp.uint32(F_KILLED), jnp.uint32(0))
+            | jnp.where(strag, jnp.uint32(F_STRAGGLER), jnp.uint32(0)))
+    return GibbsState(z=state.z, ndt=ndt, ntw=ntw, nt=state.nt,
+                      eta=eta), bits
+
+
+# ------------------------------------------------------------ constructors
+
+def no_faults(m: int) -> FaultPlan:
+    never = jnp.full((m,), -1, jnp.int32)
+    return FaultPlan(never, never, never, never)
+
+
+def poison(m: int, chain: int, step: int, kind: str = "nan") -> FaultPlan:
+    """One fault: `kind` on `chain` at EM boundary `step`."""
+    if kind not in _KINDS:
+        raise ValueError(f"kind must be one of {_KINDS}, got {kind!r}")
+    field = {"nan": 0, "corrupt": 1, "kill": 2, "straggle": 3}[kind]
+    cols = [jnp.full((m,), -1, jnp.int32) for _ in range(4)]
+    cols[field] = cols[field].at[chain].set(step)
+    return FaultPlan(*cols)
+
+
+def random_fault_plan(key, m: int, n_boundaries: int, *,
+                      p_fault: float = 0.3) -> FaultPlan:
+    """Seed-driven chaos: each chain independently draws whether it
+    faults (prob `p_fault`), which kind, and at which boundary.  Same
+    key → same plan, bit-for-bit (threefry), so a chaos-test failure
+    log names a key that reproduces it exactly."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    hit = jax.random.bernoulli(k1, p_fault, (m,))
+    kind = jax.random.randint(k2, (m,), 0, len(_KINDS))
+    step = jax.random.randint(k3, (m,), 0, max(n_boundaries, 1))
+    cols = [jnp.where(hit & (kind == i), step.astype(jnp.int32),
+                      jnp.int32(-1)) for i in range(len(_KINDS))]
+    return FaultPlan(*cols)
+
+
+# ---------------------------------------------------- host-side storage fault
+
+def truncate_chain_file(ckpt_dir: str, step: int, chain: int,
+                        keep_bytes: int = 16) -> str:
+    """Simulate a torn write / partial disk: truncate ONE chain's .npz in
+    a published checkpoint to `keep_bytes`.  The manifest stays valid —
+    exactly the half-damaged checkpoint `restore_elastic` and the
+    supervisor's restart path must fault-isolate (every OTHER chain
+    restores; this one falls back to fresh init)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}",
+                        f"chain_{chain:03d}.npz")
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(min(keep_bytes, size))
+    return path

@@ -1,4 +1,5 @@
 """Checkpoint / fault-tolerance / elasticity tests."""
+import json
 import os
 
 import jax
@@ -7,8 +8,8 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import (CheckpointManager, latest_step, list_chains,
-                              restore_checkpoint, restore_elastic,
-                              save_checkpoint)
+                              restore_chain, restore_checkpoint,
+                              restore_elastic, save_checkpoint)
 
 
 def make_state(key, chains=4, d=8):
@@ -93,6 +94,91 @@ def test_chain_failure_isolated(tmp_path):
         assert trees_equal(jax.tree.map(lambda x: x[i], state),
                            jax.tree.map(lambda x: x[i], restored))
     assert float(restored["params"]["w"][2, 0, 0]) == -1.0
+
+
+def test_crash_mid_second_save_keeps_previous_step(tmp_path,
+                                                   monkeypatch):
+    """A crash partway through writing the chain files of a LATER
+    checkpoint must leave the previous complete step as latest — the
+    crash-consistency contract the supervisor's restart relies on."""
+    import repro.checkpoint.store as store
+    state = make_state(jax.random.PRNGKey(9))
+    save_checkpoint(str(tmp_path), 1, state)
+
+    calls = {"n": 0}
+    real_savez = store.np.savez
+
+    def dying_savez(f, **kw):
+        calls["n"] += 1
+        if calls["n"] == 3:        # die on the 3rd chain of the 2nd save
+            raise OSError("disk gone")
+        return real_savez(f, **kw)
+
+    monkeypatch.setattr(store.np, "savez", dying_savez)
+    with pytest.raises(OSError):
+        save_checkpoint(str(tmp_path), 2, state)
+    monkeypatch.undo()
+    assert latest_step(str(tmp_path)) == 1
+    restored, manifest = restore_checkpoint(str(tmp_path), 1, state)
+    assert manifest["step"] == 1 and trees_equal(state, restored)
+    assert not any(d.startswith(".tmp_") for d in os.listdir(tmp_path))
+
+
+def test_truncated_chain_file_is_fault_isolated(tmp_path):
+    """A torn write (file truncated mid-flush) on ONE chain must behave
+    exactly like the corrupt-file case: every other chain restores, the
+    victim falls back to init_fn."""
+    from repro.testing import truncate_chain_file
+    state = make_state(jax.random.PRNGKey(10), chains=4)
+    save_checkpoint(str(tmp_path), 30, state)
+    truncate_chain_file(str(tmp_path), 30, 1)
+
+    fresh = make_state(jax.random.PRNGKey(11), chains=1)
+    init_fn = lambda i: jax.tree.map(lambda x: x[0] * 0 - 2.0, fresh)
+    restored, info = restore_elastic(str(tmp_path), 30, state, init_fn)
+    assert info["restored_chains"] == [0, 2, 3]
+    for i in (0, 2, 3):
+        assert trees_equal(jax.tree.map(lambda x: x[i], state),
+                           jax.tree.map(lambda x: x[i], restored))
+    assert float(restored["params"]["w"][1, 0, 0]) == -2.0
+    # the strict single-chain reader refuses the torn file outright
+    tmpl = jax.tree.map(lambda x: x[0], state)
+    with pytest.raises(Exception):
+        restore_chain(str(tmp_path), 30, 1, tmpl)
+
+
+def test_manifest_step_mismatch_raises(tmp_path):
+    """A manifest disagreeing with its directory name means a torn or
+    hand-copied checkpoint — restoring it would silently resume from the
+    wrong point, so every reader must refuse."""
+    state = make_state(jax.random.PRNGKey(12), chains=2)
+    save_checkpoint(str(tmp_path), 40, state)
+    mpath = os.path.join(str(tmp_path), "step_00000040", "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["step"] = 39
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(ValueError, match="torn or mislabelled"):
+        restore_checkpoint(str(tmp_path), 40, state)
+    with pytest.raises(ValueError, match="torn or mislabelled"):
+        restore_chain(str(tmp_path), 40, 0,
+                      jax.tree.map(lambda x: x[0], state))
+    with pytest.raises(ValueError, match="torn or mislabelled"):
+        restore_elastic(str(tmp_path), 40, state, lambda i: None)
+
+
+def test_restore_chain_roundtrip(tmp_path):
+    """The supervisor's restart path: one chain's slice comes back
+    bit-identical without touching any other chain's file."""
+    state = make_state(jax.random.PRNGKey(13), chains=4)
+    save_checkpoint(str(tmp_path), 50, state)
+    tmpl = jax.tree.map(lambda x: x[0], state)
+    for c in (0, 3):
+        got = restore_chain(str(tmp_path), 50, c, tmpl)
+        assert trees_equal(jax.tree.map(lambda x: x[c], state), got)
+    with pytest.raises(FileNotFoundError):
+        restore_chain(str(tmp_path), 50, 9, tmpl)
 
 
 def test_manager_gc_keeps_last_k(tmp_path):

@@ -148,18 +148,51 @@ def test_single_survivor_reduces_to_identity(rows, which):
 
 @given(yhat_strategy(min_chains=1))
 @settings(max_examples=60, deadline=None)
-def test_all_dead_mask_is_well_defined(rows):
-    """An all-dead mask must not divide by zero or emit NaN/inf — a fleet
-    that lost every chain degrades to a defined (zero) prediction rather
-    than poisoning downstream consumers."""
+def test_all_dead_mask_falls_back_to_unmasked_combine(rows):
+    """An all-dead mask must not divide by zero or emit NaN/inf; the
+    defined degradation is the UNMASKED combine (with a warning) — every
+    rule, one semantics (`combine._alive`).  A fleet that lost its last
+    health signal serves the full ensemble rather than zeros."""
     yhat = jnp.asarray(rows, jnp.float32)
     m = yhat.shape[0]
     alive = jnp.zeros((m,), jnp.float32)
     mse = jnp.linspace(0.1, 1.0, m)
-    for out in (combine.simple_average(yhat, alive=alive),
-                combine.weighted_average(yhat, train_mse=mse, alive=alive),
-                combine.median(yhat, alive=alive)):
+    assert combine.all_dead(alive) and not combine.all_dead(None)
+    for masked, unmasked in (
+            (lambda: combine.simple_average(yhat, alive=alive),
+             lambda: combine.simple_average(yhat)),
+            (lambda: combine.weighted_average(yhat, train_mse=mse,
+                                              alive=alive),
+             lambda: combine.weighted_average(yhat, train_mse=mse)),
+            (lambda: combine.median(yhat, alive=alive),
+             lambda: combine.median(yhat))):
+        with pytest.warns(RuntimeWarning, match="all-dead"):
+            out = masked()
         assert np.all(np.isfinite(np.asarray(out)))
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(unmasked()),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@given(yhat_strategy(min_chains=3))
+@settings(max_examples=60, deadline=None)
+def test_dead_nan_chain_cannot_contaminate(rows):
+    """A dead chain full of NaN/inf must be arithmetically invisible —
+    masking by multiplication would leak 0·NaN = NaN into every rule."""
+    yhat = jnp.asarray(rows, jnp.float32).at[0].set(jnp.nan)
+    m = yhat.shape[0]
+    alive = jnp.ones((m,), jnp.float32).at[0].set(0.0)
+    mse = jnp.linspace(0.1, 1.0, m).at[0].set(jnp.inf)
+    pairs = (
+        (combine.simple_average(yhat, alive=alive),
+         combine.simple_average(yhat[1:])),
+        (combine.weighted_average(yhat, train_mse=mse, alive=alive),
+         combine.weighted_average(yhat[1:], train_mse=mse[1:])),
+        (combine.median(yhat, alive=alive), combine.median(yhat[1:])))
+    for got, want in pairs:
+        assert np.all(np.isfinite(np.asarray(got)))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
 
 
 @given(yhat_strategy(min_chains=2), st.randoms(use_true_random=False))

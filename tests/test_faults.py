@@ -1,0 +1,225 @@
+"""Chaos suite: deterministic fault injection against the supervisor
+(DESIGN.md §Fault-model).
+
+Every scenario drives the REAL end-to-end path — `supervised_run_average`
+or `ChainSupervisor.train` over the chain-batched EM loop — with faults
+injected inside the compiled scan by `repro.testing.faults`.  The
+central assertion is the paper's fault-isolation dividend: because
+chains never communicate, a poisoned chain's quarantine is EXACT — the
+surviving lanes' models and predictions are bit-identical to a run where
+the fault never happened, and the combined prediction equals the clean
+per-chain predictions combined under the faulty run's alive mask.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (EnsembleHealthError, HealthConfig, RecoveryPolicy,
+                        SLDAConfig, combine, supervised_run_average)
+from repro.core.supervisor import (F_KILLED, F_MSE_OUTLIER, F_NAN_ETA,
+                                   F_NDT_SUM, F_NTW_NEG, F_STRAGGLER,
+                                   ChainSupervisor, describe_status)
+from repro.core.plan import build_plan, build_schedule
+from repro.core.types import partition
+from repro.data import make_slda_corpus, train_test_split
+from repro.testing import (FaultPlan, inject, no_faults, poison,
+                           random_fault_plan, truncate_chain_file)
+
+M = 4
+NO_RESTART = RecoveryPolicy(max_restarts=0, min_alive_frac=0.0)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    c, _ = make_slda_corpus(jax.random.PRNGKey(0), 48, 32, 4, 8)
+    return train_test_split(c, 32)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return SLDAConfig(n_topics=4, vocab_size=32, n_iters=5,
+                      n_pred_burnin=2, n_pred_samples=2)
+
+
+def _run(corpus, cfg, **kw):
+    train, test = corpus
+    kw.setdefault("rule", "simple")
+    return supervised_run_average(jax.random.PRNGKey(3), train, test, cfg,
+                                  M, **kw)
+
+
+def test_clean_run_all_alive_status_zero(corpus, cfg):
+    yhat, rep = _run(corpus, cfg)
+    assert rep.alive.all()
+    assert (rep.status == 0).all()
+    assert rep.restarts.sum() == 0
+    assert np.isfinite(np.asarray(yhat)).all()
+
+
+def test_nan_poison_detected_quarantined_and_drop_is_exact(corpus, cfg):
+    """A NaN-poisoned chain is flagged within the round it fires,
+    quarantined, and the combined prediction is BIT-IDENTICAL to the
+    clean run's per-chain predictions combined under the faulty alive
+    mask — the exactness-of-drop contract."""
+    y_clean, rep_clean = _run(corpus, cfg)
+    y_bad, rep_bad = _run(corpus, cfg, recovery=NO_RESTART,
+                          fault_hook=poison(M, 1, 2, "nan").hook())
+    assert list(rep_bad.alive) == [True, False, True, True]
+    assert rep_bad.status[1] & F_NAN_ETA
+    # surviving lanes never saw the fault: bit-identical predictions
+    for c in (0, 2, 3):
+        np.testing.assert_array_equal(rep_bad.yhat_chains[c],
+                                      rep_clean.yhat_chains[c])
+    # combined == clean per-chain predictions under the faulty mask
+    want = combine.simple_average(jnp.asarray(rep_clean.yhat_chains),
+                                  alive=rep_bad.alive_mask())
+    np.testing.assert_array_equal(np.asarray(y_bad), np.asarray(want))
+    assert np.isfinite(np.asarray(y_bad)).all()
+
+
+def test_kill_restarts_from_checkpoint_and_completes(corpus, cfg, tmp_path):
+    """One-shot state loss → restart from the round's checkpoint on a
+    fresh PRNG lane; the run completes with every chain alive."""
+    yhat, rep = _run(corpus, cfg, ckpt_dir=str(tmp_path), round_iters=2,
+                     fault_hook=poison(M, 2, 1, "kill").hook())
+    assert rep.alive.all()
+    assert list(rep.restarts) == [0, 0, 1, 0]
+    assert rep.status[2] & F_KILLED
+    acts = [e["action"] for h in rep.history for e in h["events"]]
+    assert any(a.startswith("restart_from_step_") for a in acts)
+    assert np.isfinite(np.asarray(yhat)).all()
+
+
+def test_persistent_poison_exhausts_budget_then_quarantines(corpus, cfg,
+                                                            tmp_path):
+    """A fault that reproduces after restart (persistent NaN) burns the
+    restart budget and falls back to quarantine — bounded recovery."""
+    yhat, rep = _run(corpus, cfg, ckpt_dir=str(tmp_path), round_iters=2,
+                     recovery=RecoveryPolicy(max_restarts=1,
+                                             min_alive_frac=0.0),
+                     fault_hook=poison(M, 0, 0, "nan").hook())
+    assert list(rep.alive) == [False, True, True, True]
+    assert rep.restarts[0] == 1
+    acts = [e["action"] for h in rep.history for e in h["events"]]
+    assert any(a.startswith("restart_") for a in acts)
+    assert "quarantine" in acts
+    assert np.isfinite(np.asarray(yhat)).all()
+
+
+def test_corrupt_counts_detected_by_invariant_probes(corpus, cfg):
+    """Finite-but-wrong counts can only be caught by the count
+    invariants (η stays finite): Σ ndt drift and negative ntw."""
+    _, rep = _run(corpus, cfg, recovery=NO_RESTART,
+                  fault_hook=poison(M, 3, 1, "corrupt").hook())
+    assert not rep.alive[3] and rep.alive[[0, 1, 2]].all()
+    assert rep.status[3] & F_NDT_SUM
+    assert rep.status[3] & F_NTW_NEG
+    assert set(describe_status(int(rep.status[3]))) >= {"ndt_sum",
+                                                        "ntw_neg"}
+
+
+def test_straggler_is_flag_only(corpus, cfg):
+    """A late chain is correct — flagged for observability, never
+    quarantined, and the output is bit-identical to the clean run."""
+    y_clean, _ = _run(corpus, cfg)
+    y_strag, rep = _run(corpus, cfg,
+                        fault_hook=poison(M, 1, 1, "straggle").hook())
+    assert rep.alive.all()
+    assert rep.status[1] & F_STRAGGLER
+    np.testing.assert_array_equal(np.asarray(y_strag), np.asarray(y_clean))
+
+
+def test_truncated_checkpoint_isolated_to_fresh_init(corpus, cfg, tmp_path):
+    """A torn chain file in the checkpoint must not sink the restart:
+    the damaged chain alone falls back to fresh init and the run still
+    completes with every chain alive."""
+    train, test = corpus
+    shards = build_schedule(partition(train, M), cfg)
+    sup = ChainSupervisor(shards, cfg, ckpt_dir=str(tmp_path),
+                          round_iters=2,
+                          fault_hook=poison(M, 2, 1, "kill").hook())
+    orig = sup._manager.maybe_save
+
+    def sabotage(step, state, extra=None):
+        path = orig(step, state, extra)
+        if path is not None:       # tear chain 2's file in every save
+            truncate_chain_file(str(tmp_path), step, 2)
+        return path
+
+    sup._manager.maybe_save = sabotage
+    _, models, rep = sup.train(jax.random.split(jax.random.PRNGKey(3), M))
+    assert rep.alive.all()
+    acts = [e["action"] for h in rep.history for e in h["events"]]
+    assert "checkpoint_corrupt" in acts
+    assert "restart_fresh_init" in acts
+    assert np.isfinite(np.asarray(models.eta)).all()
+
+
+def test_min_alive_frac_aborts_the_run(corpus, cfg):
+    with pytest.raises(EnsembleHealthError, match="alive"):
+        _run(corpus, cfg,
+             recovery=RecoveryPolicy(max_restarts=0, min_alive_frac=0.9),
+             fault_hook=poison(M, 0, 1, "nan").hook())
+
+
+def test_mse_outlier_soft_quarantine(corpus, cfg):
+    """A finite-but-diverged chain (here: poisoned to a constant huge η
+    via a custom hook) trips ONLY the statistical probe and is
+    quarantined without a restart attempt."""
+    train, test = corpus
+
+    def diverge(state, it):
+        eta = state.eta.at[1].set(jnp.where(it >= 1, 1e4,
+                                            state.eta[1][0]))
+        from repro.core.types import GibbsState
+        bits = jnp.zeros((M,), jnp.uint32)
+        return GibbsState(z=state.z, ndt=state.ndt, ntw=state.ntw,
+                          nt=state.nt, eta=eta), bits
+
+    _, rep = supervised_run_average(
+        jax.random.PRNGKey(3), train, test, cfg, M,
+        health=HealthConfig(mse_warmup=0),
+        recovery=RecoveryPolicy(max_restarts=2, min_alive_frac=0.0),
+        fault_hook=diverge)
+    assert not rep.alive[1]
+    assert rep.status[1] & F_MSE_OUTLIER
+    assert rep.restarts[1] == 0     # soft fault: quarantine, not restart
+
+
+def test_fault_plan_is_seed_deterministic():
+    k = jax.random.PRNGKey(11)
+    a = random_fault_plan(k, 8, 10)
+    b = random_fault_plan(k, 8, 10)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    c = random_fault_plan(jax.random.PRNGKey(12), 8, 10)
+    assert any(not np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(a, c))
+
+
+def test_inject_is_jit_compatible_and_no_op_when_unarmed(corpus, cfg):
+    train, _ = corpus
+    plan = build_plan(build_schedule(partition(train, M), cfg), cfg)
+    state, _ = plan.init_states(jax.random.split(jax.random.PRNGKey(0), M))
+    out, bits = jax.jit(inject)(state, jnp.int32(3), no_faults(M))
+    assert (np.asarray(bits) == 0).all()
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_train_em_hook_is_transparent(corpus, cfg):
+    """`train_em(em_hook=None)` and an identity hook produce the same
+    bits — the hook threading cannot perturb the sampler."""
+    train, _ = corpus
+    plan = build_plan(build_schedule(partition(train, M), cfg), cfg)
+    ks = jax.vmap(jax.random.split)(
+        jax.random.split(jax.random.PRNGKey(5), M))
+    state0, _ = plan.init_states(ks[:, 0])
+    plain = plan.train_em(ks[:, 1], state0)
+    ident = lambda st, it, status: (st, status)
+    hooked, status = plan.train_em(ks[:, 1], state0, em_hook=ident,
+                                   status0=jnp.zeros((M,), jnp.uint32))
+    assert (np.asarray(status) == 0).all()
+    for a, b in zip(jax.tree.leaves(plain), jax.tree.leaves(hooked)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
