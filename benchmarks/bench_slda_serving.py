@@ -1,0 +1,239 @@
+"""Latency/throughput of the continuous-batching sLDA prediction
+service (ROADMAP item 1, `serving/slda_service.py`) under a
+heavy-tailed log-normal request trace.
+
+Two request engines serve the SAME trace over the SAME trained M-chain
+ensemble:
+
+  cached    — the production service: fixed slot layout (width ladder +
+              per-rung quota calibrated from a traffic sample), plan
+              cache holding DISTINCT jitted callables keyed on
+              `ExecutionPlan.cache_key()`.  Steady-state dispatches
+              reuse one compiled program — the benchmark ASSERTS the
+              trace counter does not grow after warmup (retraces == 0).
+  uncached  — the anti-pattern A/B: identical packing/dispatch, but a
+              fresh `jax.jit` per flush, so every micro-batch pays a
+              full retrace no matter how the static args hash.  The
+              cached/uncached latency ratio is the price the plan cache
+              removes.
+
+The trace mixes fresh documents (log-normal lengths, the paper's
+heavy-tailed profile) with content repeats; repeats exercise the
+theta/ŷ result cache and are reported separately (a cache hit never
+occupies a slot).  Latency is submit→result per request (queueing
+inside the open micro-batch included — that's what a caller sees);
+p50/p99 over the steady-state window plus docs/s throughput.
+
+Exactness guard: for 3 seeds, the full trace is served by the cached
+service AND replayed through the uncached plan-layer path; per-request
+ŷ must match BITWISE (the serving machinery adds zero deviation versus
+the offline bucketed plan path), and the 3-seed mean squared
+difference is asserted to be exactly 0.0.
+
+Writes BENCH_slda_serving.json (or /tmp/..._quick.json with --quick).
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_slda_serving [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import jax
+import numpy as np
+
+from repro.core import SLDAConfig, partition, train_chains
+from repro.data import make_slda_corpus
+from repro.serving import ServiceConfig, SLDAPredictionService
+from repro.serving.slda_service import _combine_yhat
+
+
+class _UncachedService(SLDAPredictionService):
+    """The retrace-every-batch baseline: same packing, same plan layer,
+    but a fresh jit (fresh, empty trace cache) per flush."""
+
+    def _dispatch_fn(self, plan_key):
+        self._trace_counts[plan_key] += 1        # count what we pay for
+        rule = self.svc.combine
+
+        def dispatch(keys, models, plan, chain_weights):
+            zb = plan.predict_zbar(keys, models)
+            yhat = jax.vmap(lambda z, e: z @ e)(zb, models.eta)
+            return zb, yhat, _combine_yhat(rule, yhat, chain_weights,
+                                           models.train_mse)
+
+        return jax.jit(dispatch)
+
+
+def make_trace(seed: int, n_req: int, vocab: int, max_len: int, *,
+               len_sigma: float = 1.0, repeat_frac: float = 0.25):
+    """Heavy-tailed request trace: log-normal lengths clipped to
+    [1, max_len], with `repeat_frac` of requests re-submitting an
+    earlier document verbatim (result-cache traffic)."""
+    rng = np.random.default_rng(seed)
+    mu = np.log(max(2.0, max_len / 6.0))
+    docs = []
+    for _ in range(n_req):
+        if docs and rng.random() < repeat_frac:
+            docs.append(docs[int(rng.integers(len(docs)))])
+            continue
+        L = int(np.clip(np.rint(rng.lognormal(mu, len_sigma)), 1, max_len))
+        docs.append(rng.integers(0, vocab, size=L).astype(np.int32))
+    return docs
+
+
+def _serve(service, trace):
+    """Closed-loop replay: submit as fast as the service accepts,
+    drain at end.  Returns (wall_s, results in submit order)."""
+    t0 = time.perf_counter()
+    rids = [service.submit(d) for d in trace]
+    service.drain()
+    wall = time.perf_counter() - t0
+    return wall, [service.result(r) for r in rids]
+
+
+def _pctl(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else 0.0
+
+
+def run(quick: bool = False):
+    if quick:   # harness smoke for CI — tiny shapes
+        d_tr, w, t, n, iters, m = 64, 128, 8, 48, 6, 2
+        batch, n_buckets, n_req, seeds = 16, 3, 96, (7, 17, 27)
+    else:
+        d_tr, w, t, n, iters, m = 512, 1000, 32, 256, 60, 8
+        batch, n_buckets, n_req, seeds = 32, 4, 512, (7, 17, 27)
+    cfg = SLDAConfig(n_topics=t, vocab_size=w, rho=0.25, n_iters=iters)
+    corpus, _ = make_slda_corpus(jax.random.PRNGKey(0), d_tr, w, t, n,
+                                 rho=0.25, doc_len_dist="lognormal",
+                                 len_sigma=1.0, len_skew=6.0)
+    models = train_chains(jax.random.PRNGKey(1), partition(corpus, m), cfg)
+    lens = np.asarray(corpus.mask.sum(-1)).astype(int)
+    svc_cfg = ServiceConfig.calibrated(lens, max_doc_len=n,
+                                       batch_docs=batch,
+                                       n_buckets=n_buckets)
+    trace = make_trace(123, n_req, w, n)
+
+    # ---- cached service: warmup batch, then the timed steady state
+    svc = SLDAPredictionService(models, cfg, svc_cfg,
+                                key=jax.random.PRNGKey(7))
+    warm, steady = trace[:batch], trace[batch:]
+    _serve(svc, warm)
+    warm_traces = svc.stats()["traces"]
+    wall, results = _serve(svc, steady)
+    st = svc.stats()
+    steady_retraces = st["traces"] - warm_traces
+    assert steady_retraces == 0, (
+        f"steady-state traffic retraced {steady_retraces}x — the plan "
+        f"cache is broken (signatures: {st['traces_by_signature']})")
+    fresh = [r.latency_s for r in results if not r.from_cache]
+    hits = [r.latency_s for r in results if r.from_cache]
+
+    # ---- uncached A/B over a slice (every batch retraces — pricey)
+    ab = steady[: 4 * batch]
+    un = _UncachedService(models, cfg, svc_cfg, key=jax.random.PRNGKey(7))
+    un_wall, _ = _serve(un, ab)
+    svc2 = SLDAPredictionService(models, cfg, svc_cfg,
+                                 key=jax.random.PRNGKey(7))
+    _serve(svc2, warm)                    # same warmup discipline
+    ab_wall, _ = _serve(svc2, ab)
+
+    # ---- 3-seed exactness guard vs the offline (uncached) plan path
+    sq_diffs = []
+    for s in seeds:
+        a = SLDAPredictionService(models, cfg, svc_cfg,
+                                  key=jax.random.PRNGKey(s))
+        b = _UncachedService(models, cfg, svc_cfg,
+                             key=jax.random.PRNGKey(s))
+        _, ra = _serve(a, trace)
+        _, rb = _serve(b, trace)
+        ya = np.asarray([r.yhat for r in ra])
+        yb = np.asarray([r.yhat for r in rb])
+        assert np.array_equal(ya, yb), (
+            f"seed {s}: served yhat deviates from the offline plan path")
+        sq_diffs.append(float(np.mean((ya - yb) ** 2)))
+    mse_vs_offline = float(np.mean(sq_diffs))
+    assert mse_vs_offline == 0.0
+
+    results_d = {
+        "requests_steady": len(steady),
+        "throughput_docs_per_s": round(len(steady) / wall, 2),
+        "latency_p50_ms": round(_pctl(fresh, 50) * 1e3, 3),
+        "latency_p99_ms": round(_pctl(fresh, 99) * 1e3, 3),
+        "cache_hit_latency_p50_ms": round(_pctl(hits, 50) * 1e3, 4),
+        "result_cache_hits": st["result_cache_hits"],
+        "result_cache_hit_frac": round(len(hits) / len(results), 4),
+        "steady_state_retraces": steady_retraces,
+        "traces_total": st["traces"],
+        "compiled_plans": st["compiled_plans"],
+        "dispatches": st["dispatches"],
+        "dummy_slot_frac": st["dummy_slot_frac"],
+        "width_ladder": st["width_ladder"],
+        "slot_quota": st["slot_quota"],
+        "chains": m,
+        "uncached_wall_s": round(un_wall, 4),
+        "cached_wall_s": round(ab_wall, 4),
+        "plan_cache_speedup": round(un_wall / ab_wall, 2),
+        "mse_vs_offline_3seed": mse_vs_offline,
+        "exact_match_ok": bool(mse_vs_offline == 0.0),
+    }
+    return {
+        "benchmark": "continuous-batching sLDA prediction service",
+        "methodology": (
+            f"A {n_req}-request closed-loop trace (log-normal lengths, "
+            f"max {n}, ~25% verbatim repeats) served by the M={m}-chain "
+            f"ensemble through the fixed-slot micro-batcher (ladder "
+            f"{list(svc_cfg.width_ladder)}, quota "
+            f"{list(svc_cfg.slot_quota)}, {batch} slots/batch).  Latency "
+            "is submit->result per request including in-batch queueing; "
+            "p50/p99 over the post-warmup window, fresh dispatches only "
+            "(result-cache hits reported separately).  The steady-state "
+            "retrace count is ASSERTED zero — every dispatch after the "
+            "first reuses the one compiled program cached by bucket "
+            "signature.  The uncached A/B replays a slice through a "
+            "fresh jax.jit per flush (full retrace per micro-batch); "
+            "plan_cache_speedup is that ratio.  Exactness: for "
+            f"{len(seeds)} seeds the full trace is replayed through the "
+            "uncached offline plan path and per-request yhat must match "
+            "bitwise (mse_vs_offline_3seed == 0.0, asserted); jnp fast "
+            f"paths on {jax.default_backend()}."),
+        "platform": {"backend": jax.default_backend(),
+                     "machine": platform.machine(),
+                     "jax": jax.__version__},
+        "shapes": {"d_train": d_tr, "vocab": w, "n_topics": t,
+                   "max_len": n, "n_iters": iters, "chains": m,
+                   "batch_docs": batch, "n_requests": n_req,
+                   "pred_sweeps": cfg.n_pred_burnin + cfg.n_pred_samples},
+        "results": results_d,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny-shape harness smoke (CI); writes to --out")
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default BENCH_slda_serving.json, "
+                         "or /tmp/BENCH_slda_serving_quick.json with "
+                         "--quick)")
+    args = ap.parse_args(argv)
+    out = args.out or ("/tmp/BENCH_slda_serving_quick.json" if args.quick
+                       else "BENCH_slda_serving.json")
+    payload = run(quick=args.quick)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    r = payload["results"]
+    print(f"serving M={r['chains']}: {r['throughput_docs_per_s']} docs/s, "
+          f"p50 {r['latency_p50_ms']}ms p99 {r['latency_p99_ms']}ms "
+          f"(cache-hit p50 {r['cache_hit_latency_p50_ms']}ms, "
+          f"hit-frac {r['result_cache_hit_frac']}); steady retraces "
+          f"{r['steady_state_retraces']}, plan-cache speedup "
+          f"{r['plan_cache_speedup']}x; exact_match_ok="
+          f"{r['exact_match_ok']}; wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,7 +6,8 @@ figure/table or perf artifact.
   kernels  per-kernel µs/call
   roofline  aggregated dry-run roofline table (if artifacts exist)
   opt-in extras (--only): ablation, slda_predict, slda_train,
-  slda_parallel, slda_ragged, slda_robust — the sLDA perf suites (quick shapes
+  slda_parallel, slda_ragged, slda_robust, slda_serving — the sLDA perf
+  suites (quick shapes
   unless --full; headline A/B rows printed; run each bench module's
   own __main__ to write the JSON artifacts).
 
@@ -103,6 +104,17 @@ def _bench_slda_robust(args):
           f"degraded_mse_guard_ok={r['degraded_mse_guard_ok']}")
 
 
+def _bench_slda_serving(args):
+    from . import bench_slda_serving
+    r = bench_slda_serving.run(quick=not args.full)["results"]
+    print(f"slda_serving_p50,{r['latency_p50_ms'] * 1e3:.0f},"
+          f"p99_ms={r['latency_p99_ms']};"
+          f"docs_per_s={r['throughput_docs_per_s']};"
+          f"retraces={r['steady_state_retraces']};"
+          f"cache_speedup={r['plan_cache_speedup']}x;"
+          f"exact_match_ok={r['exact_match_ok']}")
+
+
 def _bench_roofline(args):
     try:
         from . import roofline
@@ -127,6 +139,7 @@ BENCHES = {
     "slda_parallel": (_bench_slda_parallel, False),
     "slda_ragged": (_bench_slda_ragged, False),
     "slda_robust": (_bench_slda_robust, False),
+    "slda_serving": (_bench_slda_serving, False),
     "roofline": (_bench_roofline, True),
 }
 

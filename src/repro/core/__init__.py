@@ -1,8 +1,8 @@
 """Paper core: communication-free embarrassingly parallel MCMC for sLDA."""
 from .types import (BucketedCorpus, Corpus, GibbsState, SLDAConfig,
                     SLDAModel, apply_count_deltas, bucket_corpus,
-                    counts_from_assignments, devices_support_pallas,
-                    partition)
+                    bucket_signature, counts_from_assignments,
+                    devices_support_pallas, partition)
 from .gibbs import init_state, sweep, train_chain, zbar, phi_hat
 from .regression import solve_eta, solve_eta_ols
 from .plan import ExecutionPlan, as_bucketed, build_plan, build_schedule
@@ -18,7 +18,8 @@ from .supervisor import (ChainSupervisor, EnsembleHealthError, HealthConfig,
 
 __all__ = [
     "BucketedCorpus", "Corpus", "GibbsState", "SLDAConfig", "SLDAModel",
-    "apply_count_deltas", "bucket_corpus", "counts_from_assignments",
+    "apply_count_deltas", "bucket_corpus", "bucket_signature",
+    "counts_from_assignments",
     "devices_support_pallas", "init_state", "sweep", "train_chain",
     "zbar", "phi_hat", "solve_eta", "solve_eta_ols",
     "ExecutionPlan", "as_bucketed", "build_plan", "build_schedule",

@@ -44,7 +44,7 @@ from .regression import solve_eta
 from .types import (BucketedCorpus, Corpus, GibbsState, SLDAConfig,
                     SLDAModel, _stair_segments, _take_docs,
                     _unstair_segments, apply_count_deltas, bucket_corpus,
-                    counts_from_assignments)
+                    bucket_signature, counts_from_assignments)
 
 
 # ------------------------------------------------------- canonicalization
@@ -175,6 +175,17 @@ class ExecutionPlan:
         sublane tile) so a small bucket doesn't pad to an empty block.
         Part of the SEMANTICS at spl>1 (the delayed-count partition)."""
         return min(self.cfg.train_doc_block, -(-n_bucket_docs // 8) * 8)
+
+    def cache_key(self) -> tuple:
+        """Everything a compiled program's identity depends on: the
+        schedule's static shape signature (`types.bucket_signature`)
+        plus `(cfg, backend)`.  Two plans with equal cache keys trace
+        to identical programs — the serving layer's plan-cache key.
+        NOTE the cache must hold DISTINCT jitted callables keyed on
+        this (jit identity): a fresh `jax.jit(fn)` per request owns a
+        fresh, empty trace cache and retraces every call no matter how
+        the static args hash (serving/slda_service.py)."""
+        return (bucket_signature(self.corpus), self.cfg, self.backend)
 
     def describe(self) -> dict:
         """The plan, human-readable — what launch/dryrun.py prints so a
@@ -573,11 +584,14 @@ class ExecutionPlan:
         avg_sorted = jnp.swapaxes(avg_f.reshape(D, M, T), 0, 1)
         return _take_docs(avg_sorted, bc.inv_perm, 1)   # [M, D, T] orig
 
-    def predict(self, keys, models: SLDAModel):
-        """Every chain predicts every document of the plan's (SHARED)
-        corpus → ŷ [M, D], from explicit per-chain keys [M].  Same key
-        tree as the deleted per-path implementations, so every cell is
-        bit-identical to the path it replaced."""
+    def predict_zbar(self, keys, models: SLDAModel):
+        """Per-chain posterior-mean topic mixtures z̄ [M, D, T]
+        (ORIGINAL doc order) for every document of the plan's (SHARED)
+        corpus, from explicit per-chain keys [M] — the serving entry:
+        a prediction service caches z̄ per document and re-derives
+        ŷ = z̄ᵀη̂ under whatever alive mask is CURRENT, so a mid-stream
+        drop/revive stays exact for cached results too
+        (serving/slda_service.py)."""
         bc, cfg = self.corpus, self.cfg
         assert bc.n_chains is None, \
             "predict wants a shared (flat) corpus schedule"
@@ -591,7 +605,14 @@ class ExecutionPlan:
                else self._predict_blocks)
         ndt_avg = run(models.phi, z0, seeds)            # [M, D, T] orig
         lengths = jnp.maximum(bc.lengths(), 1.0)
-        zb = jax.vmap(lambda nd: nd / lengths[:, None])(ndt_avg)
+        return jax.vmap(lambda nd: nd / lengths[:, None])(ndt_avg)
+
+    def predict(self, keys, models: SLDAModel):
+        """Every chain predicts every document of the plan's (SHARED)
+        corpus → ŷ [M, D], from explicit per-chain keys [M].  Same key
+        tree as the deleted per-path implementations, so every cell is
+        bit-identical to the path it replaced."""
+        zb = self.predict_zbar(keys, models)
         return jax.vmap(lambda z, e: z @ e)(zb, models.eta)   # Eq. (5)
 
 

@@ -376,6 +376,19 @@ jax.tree_util.register_pytree_node(
 )
 
 
+def bucket_signature(bc: BucketedCorpus) -> tuple:
+    """The static shape signature of a bucketed schedule — everything
+    the corpus contributes to a compiled program's identity: one
+    (width, count) pair per bucket plus the PRNG counter stride, the
+    chain layout, and the degenerate-identity flag.  Hashable; two
+    schedules with equal signatures trace to identical programs, so a
+    prediction program compiled for one micro-batch serves every later
+    batch with the same signature (the serving plan-cache key —
+    serving/slda_service.py)."""
+    return (tuple(zip(bc.widths, bc.counts)), bc.ctr_stride,
+            bc.n_chains, bc.identity)
+
+
 def _dp_bucket_cuts(segs, max_buckets: int, overhead: float):
     """Optimal contiguous grouping of width segments into ≤ max_buckets
     buckets, minimizing the modeled sweep cost Σ_b (D_b + overhead)·N_b.

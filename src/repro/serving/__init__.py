@@ -1,4 +1,9 @@
-"""Serving substrate: batched generation with chain-ensemble combination."""
+"""Serving substrate: batched generation with chain-ensemble combination,
+plus the continuous-batching sLDA prediction service (ROADMAP item 1)."""
 from .engine import GenerationConfig, ServingEngine, sample_token
+from .slda_service import (Result, ServiceConfig, SLDAPredictionService,
+                           calibrate_slots)
 
-__all__ = ["GenerationConfig", "ServingEngine", "sample_token"]
+__all__ = ["GenerationConfig", "ServingEngine", "sample_token",
+           "Result", "ServiceConfig", "SLDAPredictionService",
+           "calibrate_slots"]

@@ -28,13 +28,22 @@ class GenerationConfig:
 
 
 def sample_token(key, logits, temperature: float = 0.0, top_k: int = 0):
-    """logits: [..., V] → token ids [...]."""
+    """logits: [..., V] → token ids [...].
+
+    Top-k keeps EXACTLY k candidates: the survivors are the indices
+    `jax.lax.top_k` returns (ties at the k-th value broken by index
+    order), not a value-threshold mask — `logits < kth` keeps every
+    candidate tied at the threshold, which over-samples flat
+    distributions.  k is clamped to the vocab, so top_k >= V degrades
+    to plain sampling instead of raising."""
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits / temperature
     if top_k > 0:
-        kth = jnp.sort(logits, axis=-1)[..., -top_k][..., None]
-        logits = jnp.where(logits < kth, -1e30, logits)
+        k = min(top_k, logits.shape[-1])
+        vals, idx = jax.lax.top_k(logits, k)
+        logits = jnp.put_along_axis(jnp.full_like(logits, -1e30), idx,
+                                    vals, axis=-1, inplace=False)
     return jax.random.categorical(key, logits).astype(jnp.int32)
 
 
@@ -67,9 +76,14 @@ class ServingEngine:
         (`drop_chain` zeroes a chain's weight): Simple Average is the
         masked mean over SURVIVING chains, renormalized like
         `core.combine.simple_average` — a plain `probs.mean(0)` would
-        silently keep dead chains in the mix."""
+        silently keep dead chains in the mix.  "none" serves the first
+        ALIVE chain for the same reason: an unconditional `logits[0]`
+        would keep serving chain 0's logits after `drop_chain(0)`
+        (all-dead falls back to chain 0, matching `core.combine`'s
+        unmasked fallback)."""
         if self.gen.combine == "none" or self.n_chains == 1:
-            return logits[0, :, 0].astype(jnp.float32)
+            first_alive = jnp.argmax(chain_weights > 0)
+            return logits[first_alive, :, 0].astype(jnp.float32)
         probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
         if self.gen.combine == "simple":
             alive = (chain_weights > 0).astype(jnp.float32)
@@ -107,16 +121,36 @@ class ServingEngine:
         return toks[:, :, -1:]
 
     def generate(self, prompts, key=None):
-        """prompts: int32[b, s0] → generated int32[b, max_new_tokens]."""
+        """prompts: int32[b, s0] → generated int32[b, max_new_tokens].
+
+        With `gen.eos_id >= 0` a slot that emits EOS is FROZEN: its
+        remaining output columns are eos_id, and the token fed back to
+        the model stays eos_id (slots are independent, so freezing one
+        never perturbs the others).  The step loop breaks as soon as
+        every slot has finished — the per-slot early stop of
+        continuous batching — and the output is still always
+        [b, max_new_tokens], eos-padded."""
         key = key if key is not None else jax.random.PRNGKey(0)
+        eos = self.gen.eos_id
         last = self.prefill(prompts)
         out = []
         tok = last
+        done = jnp.zeros((prompts.shape[0],), bool)
         for i in range(self.gen.max_new_tokens):
             key, sub = jax.random.split(key)
             tok, self.cache, nxt = self._decode(self.params, self.cache,
                                                 tok, sub, self.chain_weights)
+            if eos >= 0:
+                nxt = jnp.where(done, eos, nxt)            # freeze finished
+                tok = jnp.broadcast_to(
+                    nxt[None, :, None],
+                    (self.n_chains, self.batch, 1)).astype(jnp.int32)
+                done = done | (nxt == eos)
             out.append(nxt)
+            if eos >= 0 and bool(done.all()):              # all slots done
+                pad = jnp.full_like(nxt, eos)
+                out.extend([pad] * (self.gen.max_new_tokens - i - 1))
+                break
         return jnp.stack(out, axis=1)                      # [b, T_new]
 
     def drop_chain(self, idx: int):

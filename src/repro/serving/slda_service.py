@@ -1,0 +1,495 @@
+"""Continuous-batching sLDA prediction service (ROADMAP item 1).
+
+The paper's zero-communication chains make per-request fan-out to M
+chains embarrassingly parallel; this module is the serving surface that
+routes real request traffic through the PR 5 `ExecutionPlan` layer:
+
+  * **micro-batcher** — incoming ragged documents accumulate into
+    fixed-shape micro-batches.  Every batch has the SAME slot layout: a
+    width *ladder* of bucket rungs (ascending token widths, the last
+    rung always `max_doc_len`) with a fixed per-rung slot *quota*
+    (`calibrate_slots` picks both from a sample of the traffic's length
+    distribution via the same cost-model DP that `bucket_corpus` uses).
+    A document occupies one slot of the smallest rung that fits it
+    (escalating to a wider rung when its own is full); unused slots are
+    masked-out dummies.  The payoff: every dispatch has ONE static
+    bucket signature, so steady-state traffic never retraces.
+
+  * **retrace-free plan cache** — compiled programs are cached as
+    DISTINCT `jax.jit` callables in a dict keyed on
+    `ExecutionPlan.cache_key()` (the bucket-width signature +
+    (cfg, backend)).  This is jit *identity*, not static-arg hashing: a
+    fresh `jax.jit(fn)` per request owns a fresh, empty trace cache and
+    retraces every call no matter how the static args hash — the cache
+    must hold the callables themselves.  A trace counter incremented
+    from the traced function body (a Python side effect that fires once
+    per trace, never per call) makes the no-retrace property observable
+    and assertable (tests, BENCH_slda_serving.json).
+
+  * **result cache** — per-document posterior-mean topic mixtures z̄
+    (theta) and per-chain ŷ are cached by content hash; a repeat
+    document is served without occupying a slot.  The cache stores
+    PER-CHAIN values, never the combined scalar, so…
+
+  * **mid-stream drop/revive is exact** — `chain_weights` rides as a
+    jit ARGUMENT of every cached callable (dropping a chain cannot
+    retrace), and combination happens under the weights current at
+    serve time — for fresh batches inside the compiled dispatch, for
+    cache hits on the host via the same `core.combine` rules.  Because
+    chains share nothing, serving the surviving sub-ensemble is
+    bit-identical to an ensemble that never contained the dead chain
+    (DESIGN.md §Fault-model).
+
+Numerical contract: a dispatch is exactly `plan.predict_zbar` over the
+micro-batch corpus — the serving machinery (slot packing, caches,
+combine plumbing) adds ZERO deviation versus calling the plan layer
+directly, and the bucketed slot layout is bit-identical per document to
+the padded (`bucketed=False`) layout by the `ctr_stride` pinning of
+DESIGN.md §Ragged-execution (tests/test_slda_serving.py).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.combine import median, simple_average, weighted_average
+from repro.core.plan import as_bucketed, build_plan
+from repro.core.types import (BucketedCorpus, Corpus, SLDAConfig, SLDAModel,
+                              _dp_bucket_cuts)
+
+
+# ------------------------------------------------------------ calibration
+
+def calibrate_slots(lengths, batch_docs: int, max_doc_len: int, *,
+                    n_buckets: int = 4, token_block: int = 8,
+                    overhead_docs: float = 0.0):
+    """Pick the service's (width ladder, slot quota) from a sample of
+    document lengths — the same cost-model DP as `bucket_corpus`
+    (`_dp_bucket_cuts`: minimize Σ_b (D_b + overhead)·N_b over
+    contiguous cuts of the sorted length profile), then scale the
+    bucket document counts to `batch_docs` slots by largest remainder.
+    The widest rung is forced to `max_doc_len` (and keeps ≥1 slot) so
+    every admissible request fits some rung.  Returns
+    (widths, quota) — equal-length tuples, sum(quota) == batch_docs."""
+    lens = np.clip(np.asarray(lengths).ravel(), 1, max_doc_len)
+    if batch_docs < 1:
+        raise ValueError("batch_docs must be >= 1")
+    lens_sorted = np.sort(lens)
+    round_w = np.minimum(
+        max_doc_len,
+        np.maximum(token_block, -(-lens_sorted // token_block)
+                   * token_block)).astype(int)
+    segs = []
+    for w in round_w:
+        if segs and segs[-1][1] == int(w):
+            segs[-1][0] += 1
+        else:
+            segs.append([1, int(w)])
+    segs = [(c, w) for c, w in segs]
+    ends = _dp_bucket_cuts(segs, max(1, min(n_buckets, batch_docs)),
+                           float(overhead_docs))
+    widths, counts, o = [], [], 0
+    for e in ends:
+        counts.append(sum(c for c, _ in segs[o:e]))
+        widths.append(segs[e - 1][1])
+        o = e
+    widths[-1] = max_doc_len
+
+    # largest-remainder scaling of counts → quota, each rung >= 1 slot
+    total = float(sum(counts))
+    raw = [batch_docs * c / total for c in counts]
+    quota = [max(1, int(f)) for f in raw]
+    while sum(quota) > batch_docs:        # too many rungs for the slots:
+        widths.pop(0)                     # merge the narrowest rung up
+        quota.pop(0)
+        raw.pop(0)
+    rema = sorted(range(len(quota)), key=lambda i: raw[i] - int(raw[i]),
+                  reverse=True)
+    i = 0
+    while sum(quota) < batch_docs:
+        quota[rema[i % len(quota)]] += 1
+        i += 1
+    return tuple(widths), tuple(quota)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Static configuration of the prediction service (hashable — part
+    of every cached program's closure)."""
+
+    max_doc_len: int = 256        # admission limit == PRNG ctr_stride
+    batch_docs: int = 32          # slots per micro-batch
+    width_ladder: tuple = ()      # ascending rung widths; () = 1 rung
+                                  # at max_doc_len (the padded layout)
+    slot_quota: tuple = ()        # slots per rung; () = all batch_docs
+                                  # on the single rung
+    combine: str = "weighted"     # "simple" | "weighted" | "median"
+    bucketed: bool = True         # False = dispatch the padded
+                                  # degenerate schedule (parity twin /
+                                  # A-B baseline); the ladder still
+                                  # packs, only the dispatch layout
+                                  # changes — bit-identical outputs
+    cache_results: bool = True    # theta/ŷ result cache on content hash
+    max_cached_results: int = 4096
+
+    def __post_init__(self):
+        ladder = self.width_ladder or (self.max_doc_len,)
+        quota = self.slot_quota or (self.batch_docs,)
+        if len(ladder) != len(quota):
+            raise ValueError("width_ladder and slot_quota lengths differ")
+        if list(ladder) != sorted(set(ladder)):
+            raise ValueError("width_ladder must strictly ascend")
+        if ladder[-1] != self.max_doc_len:
+            raise ValueError("widest rung must equal max_doc_len")
+        if sum(quota) != self.batch_docs or min(quota) < 1:
+            raise ValueError("slot_quota must sum to batch_docs, each >=1")
+        object.__setattr__(self, "width_ladder", tuple(ladder))
+        object.__setattr__(self, "slot_quota", tuple(quota))
+
+    @classmethod
+    def calibrated(cls, lengths, *, max_doc_len: int = 256,
+                   batch_docs: int = 32, n_buckets: int = 4,
+                   token_block: int = 8, overhead_docs: float = 0.0,
+                   **kw) -> "ServiceConfig":
+        """Build a config whose slot layout fits a traffic sample."""
+        widths, quota = calibrate_slots(
+            lengths, batch_docs, max_doc_len, n_buckets=n_buckets,
+            token_block=token_block, overhead_docs=overhead_docs)
+        return cls(max_doc_len=max_doc_len, batch_docs=batch_docs,
+                   width_ladder=widths, slot_quota=quota, **kw)
+
+
+@dataclasses.dataclass
+class Result:
+    """One served prediction.  Per-chain values are kept so the
+    combined scalar can be re-derived under any later alive mask."""
+
+    req_id: int
+    yhat: float              # combined ŷ under the weights AT SERVE TIME
+    yhat_chains: np.ndarray  # [M] per-chain ŷ
+    zbar: np.ndarray         # [M, T] per-chain posterior-mean θ
+    latency_s: float
+    from_cache: bool
+
+
+def _combine_yhat(rule: str, yhat, chain_weights, train_mse):
+    """The ONE combine used for fresh batches (inside the compiled
+    dispatch) and cache hits (host side) — `core.combine` semantics,
+    alive mask = nonzero chain weight."""
+    alive = (chain_weights > 0).astype(yhat.dtype)
+    if rule == "weighted":
+        return weighted_average(yhat, train_mse=train_mse, alive=alive)
+    if rule == "median":
+        return median(yhat, alive=alive)
+    if rule == "simple":
+        return simple_average(yhat, alive=alive)
+    raise ValueError(f"unknown combine rule {rule!r}")
+
+
+# ---------------------------------------------------------------- service
+
+class SLDAPredictionService:
+    """Continuous-batching prediction over a trained M-chain ensemble.
+
+      svc = SLDAPredictionService(models, cfg, ServiceConfig.calibrated(
+                lengths_sample, max_doc_len=256, batch_docs=32))
+      rid = svc.submit(token_ids)          # auto-flushes at batch_docs
+      svc.drain()                          # force out partial batches
+      svc.result(rid).yhat
+
+    `models` is a chain-stacked `SLDAModel` ([M, ...] leaves, e.g. from
+    `train_chains`).  All dispatches run through the `ExecutionPlan`
+    layer; see the module docstring for the caching/exactness story.
+    """
+
+    def __init__(self, models: SLDAModel, cfg: SLDAConfig,
+                 svc: ServiceConfig, *, key=None, chain_weights=None,
+                 backend: str | None = None):
+        self.models = models
+        self.cfg = cfg
+        self.svc = svc
+        self.n_chains = int(models.eta.shape[0])
+        self.backend = backend if backend is not None \
+            else cfg.resolve_backend()
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+        self.chain_weights = (jnp.ones((self.n_chains,), jnp.float32)
+                              if chain_weights is None
+                              else jnp.asarray(chain_weights, jnp.float32))
+        self._plan_cache = {}                   # cache_key → jitted fn
+        self._trace_counts = collections.Counter()   # cache_key → traces
+        self._results = {}                      # req_id → Result
+        self._result_cache = collections.OrderedDict()  # hash → (zbar, yhat)
+        self._pending = collections.deque()     # (req_id, np tokens, t_sub)
+        self._next_id = 0
+        self._batches = 0
+        self._stats = collections.Counter()
+
+    # ------------------------------------------------------------ intake
+
+    def submit(self, tokens) -> int:
+        """Enqueue one ragged document (int token ids, 1-D).  Returns a
+        request id; auto-flushes whenever a full micro-batch is
+        pending.  A content-hash repeat is served straight from the
+        result cache (no slot), combined under the CURRENT weights."""
+        toks = np.asarray(tokens, np.int32).ravel()
+        if not 1 <= toks.size <= self.svc.max_doc_len:
+            raise ValueError(
+                f"doc length {toks.size} outside [1, "
+                f"{self.svc.max_doc_len}]")
+        if toks.min() < 0 or toks.max() >= self.cfg.vocab_size:
+            raise ValueError("token id outside the model's vocab")
+        rid = self._next_id
+        self._next_id += 1
+        t0 = time.perf_counter()
+        if self.svc.cache_results:
+            h = hashlib.blake2b(toks.tobytes(), digest_size=16).digest()
+            hit = self._result_cache.get(h)
+            if hit is not None:
+                self._result_cache.move_to_end(h)
+                zbar, yhat = hit
+                comb = float(_combine_yhat(
+                    self.svc.combine, jnp.asarray(yhat)[:, None],
+                    self.chain_weights, self.models.train_mse)[0])
+                self._results[rid] = Result(
+                    req_id=rid, yhat=comb, yhat_chains=yhat, zbar=zbar,
+                    latency_s=time.perf_counter() - t0, from_cache=True)
+                self._stats["cache_hits"] += 1
+                return rid
+        self._pending.append((rid, toks, t0))
+        while len(self._pending) >= self.svc.batch_docs:
+            self.flush()
+        return rid
+
+    # ----------------------------------------------------------- packing
+
+    def _pack(self):
+        """FIFO-pack pending docs into the fixed slot layout: each doc
+        takes a free slot of the smallest rung that fits it, escalating
+        to wider rungs when its own is full; docs that fit nowhere stay
+        pending for the next batch.  Returns (per-rung doc lists,
+        n_placed)."""
+        ladder, quota = self.svc.width_ladder, self.svc.slot_quota
+        free = list(quota)
+        placed = [[] for _ in ladder]
+        leftover = collections.deque()
+        n = 0
+        while self._pending:
+            item = self._pending.popleft()
+            L = item[1].size
+            rung = next(i for i, w in enumerate(ladder) if w >= L)
+            slot = next((i for i in range(rung, len(ladder))
+                         if free[i] > 0), None)
+            if slot is None:
+                leftover.append(item)
+                continue
+            free[slot] -= 1
+            placed[slot].append(item)
+            n += 1
+        self._pending = leftover
+        return placed, n
+
+    def _build_schedule(self, placed):
+        """Slot lists → (BucketedCorpus, slot_meta).  The micro-batch's
+        ORIGINAL doc order is the rung-major slot order (real docs
+        first, dummies after, per rung), so perm == identity and the
+        padded twin (`bucketed=False`) sees the exact same rows —
+        that's what makes the two layouts bit-comparable per slot.
+        slot_meta[d] is (req_id, t_submit) or None for a dummy."""
+        ladder, quota = self.svc.width_ladder, self.svc.slot_quota
+        S = self.svc.max_doc_len
+        meta, buckets = [], []
+        tok_rows, mask_rows = [], []
+        for w, q, docs in zip(ladder, quota, placed):
+            bt = np.zeros((q, w), np.int32)
+            bm = np.zeros((q, w), np.float32)
+            for i, (rid, toks, t0) in enumerate(docs):
+                bt[i, :toks.size] = toks
+                bm[i, :toks.size] = 1.0
+                meta.append((rid, t0))
+            meta.extend([None] * (q - len(docs)))
+            buckets.append(Corpus(tokens=jnp.asarray(bt),
+                                  mask=jnp.asarray(bm),
+                                  y=jnp.zeros((q,), jnp.float32)))
+            tok_rows.append(np.pad(bt, ((0, 0), (0, S - w))))
+            mask_rows.append(np.pad(bm, ((0, 0), (0, S - w))))
+        if self.svc.bucketed:
+            D = self.svc.batch_docs
+            perm = jnp.arange(D, dtype=jnp.int32)
+            bc = BucketedCorpus(buckets=tuple(buckets), perm=perm,
+                                inv_perm=perm, ctr_stride=S)
+        else:
+            bc = as_bucketed(Corpus(
+                tokens=jnp.asarray(np.concatenate(tok_rows)),
+                mask=jnp.asarray(np.concatenate(mask_rows)),
+                y=jnp.zeros((self.svc.batch_docs,), jnp.float32)))
+        return bc, meta
+
+    # ---------------------------------------------------------- dispatch
+
+    def _dispatch_fn(self, plan_key):
+        """The retrace-free plan cache: one DISTINCT jitted callable
+        per `ExecutionPlan.cache_key()`, created once and reused for
+        every micro-batch with that signature (jit identity — a fresh
+        `jax.jit` per batch would own a fresh trace cache and retrace
+        every dispatch).  The Python body increments the trace counter
+        — a side effect that fires per TRACE, never per compiled call —
+        so `stats()['traces']` growing under steady-state traffic is a
+        test failure, not a guess."""
+        fn = self._plan_cache.get(plan_key)
+        if fn is not None:
+            return fn
+        rule, counts = self.svc.combine, self._trace_counts
+
+        def dispatch(keys, models, plan, chain_weights):
+            counts[plan_key] += 1           # fires once per trace
+            zb = plan.predict_zbar(keys, models)      # [M, D, T]
+            yhat = jax.vmap(lambda z, e: z @ e)(zb, models.eta)
+            comb = _combine_yhat(rule, yhat, chain_weights,
+                                 models.train_mse)
+            return zb, yhat, comb
+
+        fn = jax.jit(dispatch)
+        self._plan_cache[plan_key] = fn
+        return fn
+
+    def flush(self):
+        """Dispatch one micro-batch from the pending queue (no-op when
+        empty).  Returns the req_ids completed by this batch."""
+        if not self._pending:
+            return []
+        placed, n = self._pack()
+        if n == 0:                      # cannot happen: ladder covers
+            return []                   # every admissible length
+        bc, meta = self._build_schedule(placed)
+        plan = build_plan(bc, self.cfg, self.backend)
+        fn = self._dispatch_fn(plan.cache_key())
+        keys = jax.random.split(
+            jax.random.fold_in(self.key, self._batches), self.n_chains)
+        self._batches += 1
+        zb, yhat, comb = fn(keys, self.models, plan, self.chain_weights)
+        jax.block_until_ready(comb)
+        t_done = time.perf_counter()
+        zb, yhat, comb = np.asarray(zb), np.asarray(yhat), np.asarray(comb)
+        done = []
+        for d, slot in enumerate(meta):
+            if slot is None:
+                self._stats["dummy_slots"] += 1
+                continue
+            rid, t0 = slot
+            self._results[rid] = Result(
+                req_id=rid, yhat=float(comb[d]), yhat_chains=yhat[:, d],
+                zbar=zb[:, d], latency_s=t_done - t0, from_cache=False)
+            done.append(rid)
+            if self.svc.cache_results:
+                h = hashlib.blake2b(
+                    np.ascontiguousarray(
+                        bc_tokens_row(bc, d)).tobytes(),
+                    digest_size=16).digest()
+                self._result_cache[h] = (zb[:, d], yhat[:, d])
+                while len(self._result_cache) > self.svc.max_cached_results:
+                    self._result_cache.popitem(last=False)
+        self._stats["dispatches"] += 1
+        self._stats["docs_dispatched"] += n
+        return done
+
+    def drain(self):
+        """Flush until the pending queue is empty (partial batches pad
+        with dummy slots)."""
+        done = []
+        while self._pending:
+            done.extend(self.flush())
+        return done
+
+    # ----------------------------------------------------------- results
+
+    def result(self, req_id: int) -> Result:
+        return self._results[req_id]
+
+    def combined(self, req_id: int) -> float:
+        """Re-derive the combined ŷ for a served request under the
+        CURRENT chain weights — exact under any drop/revive since the
+        per-chain values never depended on other chains."""
+        r = self._results[req_id]
+        return float(_combine_yhat(
+            self.svc.combine, jnp.asarray(r.yhat_chains)[:, None],
+            self.chain_weights, self.models.train_mse)[0])
+
+    # ---------------------------------------------- ensemble maintenance
+
+    def drop_chain(self, idx: int):
+        """Serving-time straggler/failure cut — zero the chain's weight.
+        Reaches every CACHED plan without retracing (weights are a jit
+        argument), and is exact: chains share nothing, so the surviving
+        combine equals an ensemble that never held the chain."""
+        self.chain_weights = self.chain_weights.at[idx].set(0.0)
+
+    def revive_chain(self, idx: int, weight: float = 1.0):
+        """Undo a drop — the replica came back.  Exact for the same
+        reason the drop is."""
+        self.chain_weights = self.chain_weights.at[idx].set(weight)
+
+    # ------------------------------------------------------------- stats
+
+    def stats(self) -> dict:
+        """Counters the benchmark/tests assert on — most importantly
+        `traces`: total times any cached dispatch was (re)traced.
+        Steady-state traffic must not grow it."""
+        sig_traces = {str(k[0]): v for k, v in self._trace_counts.items()}
+        slot_total = max(self._stats["dispatches"], 1) \
+            * self.svc.batch_docs
+        return {
+            "traces": int(sum(self._trace_counts.values())),
+            "compiled_plans": len(self._plan_cache),
+            "traces_by_signature": sig_traces,
+            "dispatches": int(self._stats["dispatches"]),
+            "docs_dispatched": int(self._stats["docs_dispatched"]),
+            "dummy_slots": int(self._stats["dummy_slots"]),
+            "dummy_slot_frac": round(
+                self._stats["dummy_slots"]
+                / (slot_total if self._stats["dispatches"] else 1), 4),
+            "result_cache_hits": int(self._stats["cache_hits"]),
+            "result_cache_size": len(self._result_cache),
+            "pending": len(self._pending),
+            "width_ladder": list(self.svc.width_ladder),
+            "slot_quota": list(self.svc.slot_quota),
+            "bucketed": self.svc.bucketed,
+            "backend": self.backend,
+        }
+
+    def describe(self) -> dict:
+        """The serving plan, human-readable — slot layout, signature,
+        and what a dispatch compiles to (`launch/dryrun.py
+        --slda-serve`)."""
+        dummy = [(0, np.zeros(1, np.int32), 0.0)]
+        placed = [[] for _ in self.svc.width_ladder]
+        placed[0] = dummy
+        bc, _ = self._build_schedule(placed)
+        plan = build_plan(bc, self.cfg, self.backend)
+        d = plan.describe()
+        d["cache_key_signature"] = str(plan.cache_key()[0])
+        d["width_ladder"] = list(self.svc.width_ladder)
+        d["slot_quota"] = list(self.svc.slot_quota)
+        d["combine"] = self.svc.combine
+        d["chains"] = self.n_chains
+        return d
+
+
+def bc_tokens_row(bc: BucketedCorpus, d: int) -> np.ndarray:
+    """Original-order row d of a schedule whose perm is the identity —
+    the service's content-hash source (un-padded to the TRUE length so
+    a repeat submission hashes equal regardless of its rung)."""
+    o = 0
+    for b in bc.buckets:
+        q = b.tokens.shape[0]
+        if d < o + q:
+            row = np.asarray(b.tokens[d - o])
+            m = np.asarray(b.mask[d - o]).astype(bool)
+            return row[: int(m.sum())]
+        o += q
+    raise IndexError(d)

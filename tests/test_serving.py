@@ -98,6 +98,93 @@ def test_drop_chain_reaches_compiled_decode_mid_stream():
     assert np.array_equal(out_cut, out_fresh)
 
 
+def test_combine_none_serves_first_alive_chain():
+    """combine='none' must serve the first ALIVE chain: after
+    drop_chain(0) the engine must reproduce the chain-1-only output,
+    not keep serving the dead chain 0's logits."""
+    params = init_params(jax.random.PRNGKey(0), CFG, 2)
+    eng = ServingEngine(CFG, params, n_chains=2, batch_slots=2, max_len=32,
+                        gen=GenerationConfig(max_new_tokens=5,
+                                             combine="none"))
+    eng.drop_chain(0)
+    out_cut = np.asarray(eng.generate(jnp.ones((2, 3), jnp.int32)))
+
+    solo_params = jax.tree.map(lambda x: x[1:], params)
+    solo = ServingEngine(CFG, solo_params, n_chains=1, batch_slots=2,
+                         max_len=32,
+                         gen=GenerationConfig(max_new_tokens=5,
+                                              combine="none"))
+    out_solo = np.asarray(solo.generate(jnp.ones((2, 3), jnp.int32)))
+    assert np.array_equal(out_cut, out_solo)
+
+
+def test_eos_freezes_slots_and_pads_output():
+    """A slot that emits eos_id is frozen: every later column is eos,
+    earlier columns are untouched, and slots that never emit eos are
+    bit-identical to the eos-off run (slots are independent)."""
+    prompts = jnp.arange(6, dtype=jnp.int32).reshape(3, 2) + 1
+    out0 = np.asarray(make_engine().generate(prompts))
+    eos = int(out0[0, 1])                       # slot 0's 2nd token
+    out = np.asarray(make_engine(eos_id=eos).generate(prompts))
+    assert out.shape == out0.shape
+    for b in range(out0.shape[0]):
+        hits = np.flatnonzero(out0[b] == eos)
+        if hits.size == 0:
+            assert np.array_equal(out[b], out0[b])
+        else:
+            j = hits[0]
+            assert np.array_equal(out[b, :j + 1], out0[b, :j + 1])
+            assert (out[b, j + 1:] == eos).all()
+
+
+def test_eos_stops_decoding_early():
+    """Once every slot has emitted eos the step loop must break — the
+    remaining columns are padded without paying for decode steps."""
+    eng = make_engine()
+    prompts = jnp.ones((3, 4), jnp.int32)
+    eos = int(np.asarray(eng.generate(prompts))[0, 0])  # same prompt all
+    # slots → all finish at step 1
+
+    def counted(eng):
+        calls = [0]
+        inner = eng._decode
+
+        def wrap(*a, **kw):
+            calls[0] += 1
+            return inner(*a, **kw)
+        eng._decode = wrap
+        return calls
+
+    eng_off = make_engine()
+    n_off = counted(eng_off)
+    eng_off.generate(prompts)
+    eng_on = make_engine(eos_id=eos)
+    n_on = counted(eng_on)
+    out = np.asarray(eng_on.generate(prompts))
+    assert (out == eos).all()
+    assert n_on[0] < n_off[0]                   # early stop saved steps
+
+
+def test_sample_token_topk_ties_keep_exactly_k():
+    """Ties at the k-th value must NOT widen the support: top_k=2 over
+    three tied maxima keeps exactly the 2 lowest-index candidates."""
+    logits = jnp.asarray([[5.0, 5.0, 5.0, 0.0, 0.0]])
+    seen = {int(sample_token(jax.random.fold_in(jax.random.PRNGKey(1), i),
+                             logits, temperature=1.0, top_k=2)[0])
+            for i in range(64)}
+    assert seen <= {0, 1}
+
+
+def test_sample_token_topk_overflow_clamps():
+    """top_k >= V used to raise out of jnp.sort indexing; it must clamp
+    and equal plain temperature sampling bitwise."""
+    key = jax.random.PRNGKey(3)
+    logits = jnp.asarray([[1.0, 3.0, 2.0, 0.5, -1.0]])
+    t_over = sample_token(key, logits, temperature=1.0, top_k=12)
+    t_plain = sample_token(key, logits, temperature=1.0, top_k=0)
+    assert int(t_over[0]) == int(t_plain[0])
+
+
 def test_sample_token_topk_respects_support():
     key = jax.random.PRNGKey(0)
     logits = jnp.asarray([[10.0, 9.0, -5.0, -5.0, -5.0]])

@@ -1,0 +1,263 @@
+"""Continuous-batching sLDA prediction service (serving/slda_service.py):
+retrace-free plan cache, bucketed-vs-padded bitwise parity through the
+service path, the theta/ŷ result cache, and exact mid-stream
+drop/revive — plus the `bucket_signature` cache-key surface."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SLDAConfig, bucket_corpus, bucket_signature,
+                        build_plan, partition, train_chains)
+from repro.core.plan import as_bucketed
+from repro.data import make_slda_corpus
+from repro.serving import ServiceConfig, SLDAPredictionService
+from repro.serving.slda_service import _combine_yhat, calibrate_slots
+
+CFG = SLDAConfig(n_topics=8, vocab_size=64, n_iters=3, n_pred_burnin=2,
+                 n_pred_samples=2)
+MAXLEN, M, BATCH = 48, 2, 16
+
+_corpus, _ = make_slda_corpus(jax.random.PRNGKey(0), 64, CFG.vocab_size,
+                              CFG.n_topics, MAXLEN,
+                              doc_len_dist="lognormal", len_sigma=1.0)
+MODELS = train_chains(jax.random.PRNGKey(1), partition(_corpus, M), CFG)
+LENS = np.asarray(_corpus.mask.sum(-1)).astype(int)
+TOKS = np.asarray(_corpus.tokens)
+DOCS = [TOKS[d, :LENS[d]] for d in range(_corpus.n_docs)]
+SVC = ServiceConfig.calibrated(LENS, max_doc_len=MAXLEN, batch_docs=BATCH,
+                               n_buckets=3)
+
+
+def make_service(**kw):
+    svc = dataclasses.replace(SVC, **kw) if kw else SVC
+    return SLDAPredictionService(MODELS, CFG, svc,
+                                 key=jax.random.PRNGKey(9))
+
+
+# --------------------------------------------------- retrace-free cache
+
+def test_steady_state_traffic_never_retraces():
+    """Recurring traffic has ONE bucket signature, hence one compiled
+    plan: the trace counter must stop growing after the first batch."""
+    svc = make_service(cache_results=False)   # every doc really dispatches
+    for d in DOCS[:BATCH]:
+        svc.submit(d)
+    warm = svc.stats()["traces"]
+    assert warm == 1 and svc.stats()["compiled_plans"] == 1
+    for rep in range(3):                      # steady state: reuse + drain
+        for d in DOCS[rep * 8: rep * 8 + 20]:
+            svc.submit(d)
+        svc.drain()
+    st = svc.stats()
+    assert st["traces"] == warm               # ZERO retraces after warmup
+    assert st["compiled_plans"] == 1
+    assert st["dispatches"] >= 4
+
+
+def test_dispatch_matches_uncached_plan_layer():
+    """The serving machinery (slot packing, plan cache, combine
+    plumbing) must add zero numerical deviation: a service whose
+    dispatch calls the plan layer through a FRESH jit every flush (the
+    retrace-every-batch anti-pattern the cache exists to fix) returns
+    bit-identical results."""
+    class OfflineService(SLDAPredictionService):
+        def _dispatch_fn(self, plan_key):
+            rule = self.svc.combine
+
+            def run(keys, models, plan, chain_weights):
+                zb = plan.predict_zbar(keys, models)
+                yhat = jax.vmap(lambda z, e: z @ e)(zb, models.eta)
+                return zb, yhat, _combine_yhat(rule, yhat, chain_weights,
+                                               models.train_mse)
+            return jax.jit(run)               # fresh cache → retraces
+
+    svc = make_service()
+    off = OfflineService(MODELS, CFG, SVC, key=jax.random.PRNGKey(9))
+    rids_a = [svc.submit(d) for d in DOCS[:24]]
+    rids_b = [off.submit(d) for d in DOCS[:24]]
+    svc.drain(), off.drain()
+    for ra, rb in zip(rids_a, rids_b):
+        a, b = svc.result(ra), off.result(rb)
+        assert a.yhat == b.yhat
+        np.testing.assert_array_equal(a.yhat_chains, b.yhat_chains)
+        np.testing.assert_array_equal(a.zbar, b.zbar)
+
+
+# ----------------------------------------------- bucketed/padded parity
+
+def test_bucketed_vs_padded_bitwise_parity():
+    """Identical traffic through the bucketed and the padded dispatch
+    layouts: per-document results must match BITWISE (the ctr_stride
+    pinning contract of DESIGN.md §Ragged-execution, now through the
+    service path; prediction is spl-free, the sampler runs sweep by
+    sweep)."""
+    bkt = make_service(bucketed=True)
+    pad = make_service(bucketed=False)
+    rids_a = [bkt.submit(d) for d in DOCS[:40]]
+    rids_b = [pad.submit(d) for d in DOCS[:40]]
+    bkt.drain(), pad.drain()
+    assert bkt.stats()["compiled_plans"] == 1
+    assert pad.stats()["compiled_plans"] == 1
+    for ra, rb in zip(rids_a, rids_b):
+        a, b = bkt.result(ra), pad.result(rb)
+        assert a.yhat == b.yhat
+        np.testing.assert_array_equal(a.yhat_chains, b.yhat_chains)
+        np.testing.assert_array_equal(a.zbar, b.zbar)
+
+
+# --------------------------------------------------------- result cache
+
+def test_repeat_documents_hit_result_cache():
+    svc = make_service()
+    rid0 = [svc.submit(d) for d in DOCS[:BATCH]]
+    svc.drain()
+    st0 = svc.stats()
+    assert st0["result_cache_hits"] == 0
+    rid1 = [svc.submit(d) for d in DOCS[:BATCH]]   # same content again
+    st = svc.stats()
+    assert st["result_cache_hits"] == BATCH
+    assert st["dispatches"] == st0["dispatches"]   # no new dispatch
+    for a, b in zip(rid0, rid1):
+        ra, rb = svc.result(a), svc.result(b)
+        assert rb.from_cache and not ra.from_cache
+        assert ra.yhat == rb.yhat
+        np.testing.assert_array_equal(ra.zbar, rb.zbar)
+
+
+def test_cache_hit_combines_under_current_weights():
+    """A cached document re-served after drop_chain must combine the
+    CACHED per-chain values under the NEW alive mask — with one of two
+    chains dropped, the combined ŷ equals the survivor's ŷ."""
+    svc = make_service()
+    rid0 = svc.submit(DOCS[0])
+    for d in DOCS[1:BATCH]:
+        svc.submit(d)
+    svc.drain()
+    svc.drop_chain(1)
+    rid1 = svc.submit(DOCS[0])                     # cache hit, new weights
+    r0, r1 = svc.result(rid0), svc.result(rid1)
+    assert r1.from_cache
+    np.testing.assert_array_equal(r0.yhat_chains, r1.yhat_chains)
+    assert r1.yhat == pytest.approx(float(r0.yhat_chains[0]))
+    assert svc.combined(rid0) == r1.yhat           # re-derive == re-serve
+
+
+# ----------------------------------------------- mid-stream drop/revive
+
+def test_drop_revive_mid_stream_without_retrace():
+    """chain_weights is a jit ARGUMENT of every cached plan: dropping a
+    chain between batches changes the served combine but must not
+    retrace, and reviving restores the original outputs exactly."""
+    svc = make_service(cache_results=False)
+    rids0 = [svc.submit(d) for d in DOCS[:BATCH]]
+    svc.drain()
+    traces = svc.stats()["traces"]
+
+    svc.drop_chain(1)
+    rids1 = [svc.submit(d) for d in DOCS[:BATCH]]  # same docs, same slots
+    svc.drain()
+    svc.revive_chain(1)
+    rids2 = [svc.submit(d) for d in DOCS[:BATCH]]
+    svc.drain()
+    assert svc.stats()["traces"] == traces         # no retrace on either
+
+    w_full = jnp.ones((M,), jnp.float32)
+    for r0, r1, r2 in zip(rids0, rids1, rids2):
+        a, b, c = svc.result(r0), svc.result(r1), svc.result(r2)
+        # dropped mask: the served combine IS the survivor's ŷ …
+        assert b.yhat == float(b.yhat_chains[0])
+        assert b.yhat != a.yhat
+        # … and after revive the full-ensemble combine is back (host
+        # re-derivation through the same core.combine rule matches the
+        # value combined inside the compiled dispatch bit-for-bit)
+        exp = float(_combine_yhat(
+            SVC.combine, jnp.asarray(c.yhat_chains)[:, None], w_full,
+            MODELS.train_mse)[0])
+        assert c.yhat == exp
+        assert a.yhat == float(_combine_yhat(
+            SVC.combine, jnp.asarray(a.yhat_chains)[:, None], w_full,
+            MODELS.train_mse)[0])
+
+
+# ------------------------------------------------ batching edge cases
+
+def test_partial_batch_drain_pads_with_dummies():
+    svc = make_service(cache_results=False)
+    rids = [svc.submit(d) for d in DOCS[:3]]
+    assert svc.stats()["dispatches"] == 0          # below batch_docs
+    done = svc.drain()
+    assert sorted(done) == sorted(rids)
+    st = svc.stats()
+    assert st["dispatches"] == 1
+    assert st["dummy_slots"] == BATCH - 3
+
+
+def test_rung_overflow_escalates_then_rolls_over():
+    """More max-length docs than the widest rung's slots: escalation
+    can't help (no wider rung), so the overflow rolls to further
+    micro-batches — everything still gets served."""
+    svc = make_service(cache_results=False)
+    long_doc = np.arange(MAXLEN, dtype=np.int32) % CFG.vocab_size
+    rids = [svc.submit(long_doc + i % 2) for i in range(BATCH)]
+    svc.drain()
+    assert svc.stats()["dispatches"] > 1
+    for rid in rids:
+        assert np.isfinite(svc.result(rid).yhat)
+
+
+def test_short_doc_escalates_into_wider_free_slot():
+    """When a narrow rung fills up, later short docs take wider slots
+    (masked to their true length) instead of waiting."""
+    svc = make_service(cache_results=False)
+    w0, q0 = SVC.width_ladder[0], SVC.slot_quota[0]
+    short = np.ones((max(1, w0 - 1),), np.int32)
+    rids = [svc.submit(short + i) for i in range(q0 + 2)]
+    done = svc.drain()
+    assert svc.stats()["dispatches"] == 1          # all fit one batch
+    assert sorted(done) == sorted(rids)
+
+
+def test_submit_validation():
+    svc = make_service()
+    with pytest.raises(ValueError):
+        svc.submit(np.ones((MAXLEN + 1,), np.int32))
+    with pytest.raises(ValueError):
+        svc.submit(np.asarray([], np.int32))
+    with pytest.raises(ValueError):
+        svc.submit(np.asarray([CFG.vocab_size], np.int32))
+
+
+# ------------------------------------- cache-key / calibration surface
+
+def test_bucket_signature_identifies_schedule_shape():
+    sig = bucket_signature(bucket_corpus(_corpus, 3))
+    sig2 = bucket_signature(bucket_corpus(_corpus, 3))
+    assert sig == sig2 and hash(sig) == hash(sig2)
+    assert sig != bucket_signature(as_bucketed(_corpus))
+    plan = build_plan(bucket_corpus(_corpus, 3), CFG)
+    assert plan.cache_key() == (sig, CFG, plan.backend)
+
+
+def test_calibrate_slots_layout_invariants():
+    widths, quota = calibrate_slots(LENS, BATCH, MAXLEN, n_buckets=3)
+    assert sum(quota) == BATCH and min(quota) >= 1
+    assert list(widths) == sorted(set(widths))
+    assert widths[-1] == MAXLEN
+    # degenerate: one giant rung
+    w1, q1 = calibrate_slots([5, 5, 5], 4, MAXLEN, n_buckets=1)
+    assert w1 == (MAXLEN,) and q1 == (4,)
+
+
+def test_service_config_validation():
+    with pytest.raises(ValueError):
+        ServiceConfig(max_doc_len=64, batch_docs=4,
+                      width_ladder=(32, 16, 64), slot_quota=(1, 1, 2))
+    with pytest.raises(ValueError):
+        ServiceConfig(max_doc_len=64, batch_docs=4,
+                      width_ladder=(16, 32), slot_quota=(2, 2))
+    with pytest.raises(ValueError):
+        ServiceConfig(max_doc_len=64, batch_docs=4,
+                      width_ladder=(16, 64), slot_quota=(2, 3))
