@@ -6,8 +6,8 @@ figure/table or perf artifact.
   kernels  per-kernel µs/call
   roofline  aggregated dry-run roofline table (if artifacts exist)
   opt-in extras (--only): ablation, slda_predict, slda_train,
-  slda_parallel, slda_ragged, slda_robust, slda_serving — the sLDA perf
-  suites (quick shapes
+  slda_parallel, slda_ragged, slda_robust, slda_serving,
+  slda_serving_robust — the sLDA perf suites (quick shapes
   unless --full; headline A/B rows printed; run each bench module's
   own __main__ to write the JSON artifacts).
 
@@ -115,6 +115,19 @@ def _bench_slda_serving(args):
           f"exact_match_ok={r['exact_match_ok']}")
 
 
+def _bench_slda_serving_robust(args):
+    from . import bench_slda_serving_robust
+    r = bench_slda_serving_robust.run(quick=not args.full)["results"]
+    print(f"slda_serving_robust_p99,"
+          f"{r['burst_with_admission']['latency_p99_s'] * 1e6:.0f},"
+          f"p99_bounded_ok={r['p99_bounded_ok']};"
+          f"shed_frac={r['burst_with_admission']['shed_frac']};"
+          f"checks_overhead={r['robust_checks_overhead']};"
+          f"checks_overhead_ok={r['checks_overhead_ok']};"
+          f"reload_retraces={r['reload_retraces']};"
+          f"degraded_exact_ok={r['degraded_exact_ok']}")
+
+
 def _bench_roofline(args):
     try:
         from . import roofline
@@ -140,6 +153,7 @@ BENCHES = {
     "slda_ragged": (_bench_slda_ragged, False),
     "slda_robust": (_bench_slda_robust, False),
     "slda_serving": (_bench_slda_serving, False),
+    "slda_serving_robust": (_bench_slda_serving_robust, False),
     "roofline": (_bench_roofline, True),
 }
 

@@ -1,8 +1,8 @@
 """Fault-tolerant checkpointing for communication-free chains."""
 from .store import (save_checkpoint, restore_checkpoint, restore_chain,
-                    latest_step, list_chains, restore_elastic,
-                    CheckpointManager)
+                    latest_step, list_chains, read_manifest,
+                    restore_elastic, CheckpointManager)
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "restore_chain",
-           "latest_step", "list_chains", "restore_elastic",
-           "CheckpointManager"]
+           "latest_step", "list_chains", "read_manifest",
+           "restore_elastic", "CheckpointManager"]

@@ -109,12 +109,28 @@ def _unflatten_into(template_chain, flat):
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def read_manifest(ckpt_dir: str, step: int) -> dict:
+    """Public validated-manifest read — what a serving-tier reload uses
+    to vet a checkpoint before paying to load any chain file.  Raises on
+    a missing/torn/mislabelled manifest (`_load_manifest` contract)."""
+    return _load_manifest(os.path.join(ckpt_dir, f"step_{step:08d}"), step)
+
+
 def restore_checkpoint(ckpt_dir: str, step: int, template):
     """Restore all chains recorded in the manifest; template is a pytree
-    with the target leading chain dim (its values are ignored)."""
+    with the target leading chain dim (its values are ignored).  The
+    manifest's chain count must MATCH the template's — a hot-reloading
+    service that silently changed ensemble size mid-stream would break
+    every [M]-shaped jit signature downstream; elastic rescale is the
+    explicit `restore_elastic` path."""
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
     manifest = _load_manifest(d, step)
     n = manifest["n_chains"]
+    target = jax.tree.leaves(template)[0].shape[0]
+    if n != target:
+        raise ValueError(
+            f"checkpoint at step {step} holds {n} chains, template "
+            f"expects {target} — use restore_elastic for rescale")
     chains = []
     tmpl0 = _chain_slice(template, 0)
     for i in range(n):

@@ -14,7 +14,8 @@ from .parallel import (ALGORITHMS, train_chains, predict_chains,
                        run_weighted_average)
 from .supervisor import (ChainSupervisor, EnsembleHealthError, HealthConfig,
                          RecoveryPolicy, SupervisorReport, chain_status,
-                         describe_status, supervised_run_average)
+                         describe_status, model_status,
+                         supervised_run_average)
 
 __all__ = [
     "BucketedCorpus", "Corpus", "GibbsState", "SLDAConfig", "SLDAModel",
@@ -29,5 +30,5 @@ __all__ = [
     "run_weighted_average",
     "ChainSupervisor", "EnsembleHealthError", "HealthConfig",
     "RecoveryPolicy", "SupervisorReport", "chain_status", "describe_status",
-    "supervised_run_average",
+    "model_status", "supervised_run_average",
 ]

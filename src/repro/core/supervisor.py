@@ -71,17 +71,29 @@ F_MSE_OUTLIER = 1 << 5   # train-MSE robust-z outlier (diverged)
 F_KILLED = 1 << 6        # dead worker (reported by the fault/runtime layer)
 F_STRAGGLER = 1 << 7     # late worker (flag only)
 
+# serve-time bits (model-table screening + dispatch health — the serving
+# tier's half of the taxonomy, DESIGN.md §Serving-robustness)
+F_NAN_PHI = 1 << 8       # non-finite topic-word table φ̂
+F_PHI_ROWSUM = 1 << 9    # φ̂ rows are not probability distributions
+F_NAN_MSE = 1 << 10      # non-finite/negative train MSE (breaks weighting)
+F_NAN_YHAT = 1 << 11     # non-finite served prediction at dispatch
+
 #: state-corrupting faults — restart-from-checkpoint is worth trying
 HARD_FAULTS = (F_NAN_ETA | F_NAN_NTW | F_NAN_NDT | F_NDT_SUM | F_NTW_NEG
                | F_KILLED)
 #: statistical faults — the lane is functional, quarantine is exact
 SOFT_FAULTS = F_MSE_OUTLIER
+#: model-table faults — a chain whose exported model trips one of these
+#: cannot serve; the prediction service quarantines it at (re)load
+MODEL_FAULTS = F_NAN_PHI | F_PHI_ROWSUM | F_NAN_ETA | F_NAN_MSE
 
 _BIT_NAMES = {
     F_NAN_ETA: "nan_eta", F_NAN_NTW: "nan_ntw", F_NAN_NDT: "nan_ndt",
     F_NDT_SUM: "ndt_sum", F_NTW_NEG: "ntw_neg",
     F_MSE_OUTLIER: "mse_outlier", F_KILLED: "killed",
     F_STRAGGLER: "straggler",
+    F_NAN_PHI: "nan_phi", F_PHI_ROWSUM: "phi_rowsum",
+    F_NAN_MSE: "nan_mse", F_NAN_YHAT: "nan_yhat",
 }
 
 _FRESH_SALT = 0x5EED      # fold_in salt of the fresh-init key lane
@@ -188,6 +200,37 @@ def chain_status(plan: ExecutionPlan, state: GibbsState,
         if it is not None:
             outlier = outlier & (jnp.asarray(it) >= health.mse_warmup)
         status |= _flag(outlier, F_MSE_OUTLIER)
+    return status
+
+
+def model_status(models, *, rowsum_tol: float = 1e-3) -> jnp.ndarray:
+    """Per-chain status bits [M] uint32 screening an exported
+    `SLDAModel` (chain-stacked leaves) — the serve-time twin of
+    `chain_status`, run by the prediction service at model (re)load.
+    Pure jnp, cheap (O(model) elementwise reductions):
+
+      * NaN/Inf in φ̂ or η̂ (`F_NAN_PHI` / `F_NAN_ETA`),
+      * φ̂ count invariants: every topic row is a probability
+        distribution — non-negative, Σ_w φ̂[t, w] ≈ 1 (`F_PHI_ROWSUM`;
+        a NaN-poisoned row also fails the comparison, same trick as the
+        in-scan count probes),
+      * non-finite or negative train MSE (`F_NAN_MSE` — it is the
+        Weighted Average weight, so corruption here skews every
+        combine, not just one chain's own prediction).
+
+    A chain with any `MODEL_FAULTS` bit cannot serve; quarantining it
+    at load is EXACT for the usual communication-free reason."""
+    m = models.eta.shape[0]
+    status = jnp.zeros((m,), jnp.uint32)
+    fin = lambda x: jnp.isfinite(x).reshape(m, -1).all(axis=-1)
+    status |= _flag(~fin(models.eta), F_NAN_ETA)
+    status |= _flag(~fin(models.phi), F_NAN_PHI)
+    rowsum = models.phi.sum(-1)                         # [M, T]
+    rows_ok = (jnp.abs(rowsum - 1.0) <= rowsum_tol).all(-1)
+    nonneg = (models.phi.reshape(m, -1).min(-1) >= -rowsum_tol)
+    status |= _flag(~(rows_ok & nonneg), F_PHI_ROWSUM)
+    mse_ok = jnp.isfinite(models.train_mse) & (models.train_mse >= 0.0)
+    status |= _flag(~mse_ok, F_NAN_MSE)
     return status
 
 

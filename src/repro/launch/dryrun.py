@@ -297,7 +297,8 @@ def slda_serve_report(args):
     twin of --slda-plan; DESIGN.md §Serving)."""
     from repro.core import SLDAConfig, partition, train_chains
     from repro.data import make_slda_corpus
-    from repro.serving import ServiceConfig, SLDAPredictionService
+    from repro.serving import (STATUS_SHED_QUEUE, ServiceConfig,
+                               SLDAPredictionService)
 
     cfg = SLDAConfig(n_topics=args.slda_topics, vocab_size=args.slda_vocab,
                      n_iters=1, use_pallas=args.slda_pallas)
@@ -309,7 +310,10 @@ def slda_serve_report(args):
     lens = corpus.mask.sum(-1).astype(int)
     svc_cfg = ServiceConfig.calibrated(
         lens, max_doc_len=args.slda_maxlen, batch_docs=args.slda_batch_docs,
-        n_buckets=args.slda_buckets)
+        n_buckets=args.slda_buckets,
+        max_pending=args.slda_max_pending,
+        default_deadline_s=args.slda_deadline_ms / 1e3,
+        rate_limit_per_s=args.slda_rate)
     # a 1-sweep trained ensemble is enough — the serving plan depends
     # only on the slot layout, the config, and the chain count
     models = train_chains(jax.random.PRNGKey(1),
@@ -332,6 +336,43 @@ def slda_serve_report(args):
         "chain_weights is a jit argument, so drop/revive of a chain "
         "mid-stream reweights the served combine without retracing",
     ]
+    # robustness policy (DESIGN.md §Serving-robustness): what the
+    # service will do under overload, model faults, and hot reload —
+    # printed here so the admission/deadline/reload contract is visible
+    # before the service is stood up
+    rb = d["robustness"]
+    why.append(
+        "admission: "
+        + (f"pending queue capped at {rb['max_pending']} docs "
+           f"(overflow -> typed '{STATUS_SHED_QUEUE}' Result)"
+           if rb["max_pending"] else "pending queue UNBOUNDED "
+           "(--slda-max-pending to cap; overload then grows latency, "
+           "never sheds)")
+        + (f"; token bucket {rb['rate_limit_per_s']}/s burst "
+           f"{rb['rate_burst']}" if rb["rate_limit_per_s"] else
+           "; no rate limit"))
+    why.append(
+        "deadlines: "
+        + (f"default {1e3 * rb['default_deadline_s']:.0f}ms per request"
+           if rb["default_deadline_s"] else "none by default "
+           "(per-request via submit(deadline_s=...))")
+        + f"; packing is {rb['scheduling']}, expired requests shed "
+        "BEFORE occupying a slot")
+    why.append(
+        "degraded mode: model tables screened at load/reload and "
+        "per-chain yhat screened at dispatch (robust_checks="
+        f"{rb['robust_checks']}); a faulty chain is quarantined by "
+        "zeroing its jit-argument weight — survivors' outputs are "
+        "bit-identical to a service built without the chain "
+        "(communication-free exactness), all-dead falls back to the "
+        "unmasked combine with a RuntimeWarning")
+    why.append(
+        "hot reload: reload_from_checkpoint swaps models atomically "
+        "(validate manifest -> screen tables -> swap), bumps "
+        f"model_epoch (now {rb['model_epoch']}) to invalidate the "
+        "result cache by key; torn/mislabelled checkpoints are "
+        "rejected with the old epoch still serving, and the swap "
+        "never retraces (models ride as jit arguments)")
     report["why"] = why
     print(json.dumps(report, indent=1))
     return report
@@ -359,6 +400,17 @@ def main():
                          "and exit")
     ap.add_argument("--slda-batch-docs", type=int, default=32,
                     help="--slda-serve: slots per micro-batch")
+    ap.add_argument("--slda-max-pending", type=int, default=128,
+                    help="--slda-serve: pending-queue bound (0 = "
+                         "unbounded; overflow sheds with a typed "
+                         "Result, never an exception)")
+    ap.add_argument("--slda-deadline-ms", type=float, default=0.0,
+                    help="--slda-serve: default per-request deadline "
+                         "(0 = none; expired requests shed before "
+                         "occupying a batch slot)")
+    ap.add_argument("--slda-rate", type=float, default=0.0,
+                    help="--slda-serve: token-bucket admission rate "
+                         "in docs/s (0 = no rate limit)")
     ap.add_argument("--slda-docs", type=int, default=512)
     ap.add_argument("--slda-maxlen", type=int, default=256)
     ap.add_argument("--slda-chains", type=int, default=8)

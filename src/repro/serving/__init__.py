@@ -1,9 +1,14 @@
 """Serving substrate: batched generation with chain-ensemble combination,
-plus the continuous-batching sLDA prediction service (ROADMAP item 1)."""
+plus the continuous-batching sLDA prediction service (ROADMAP item 1)
+with its robustness layer (DESIGN.md §Serving-robustness)."""
 from .engine import GenerationConfig, ServingEngine, sample_token
-from .slda_service import (Result, ServiceConfig, SLDAPredictionService,
-                           calibrate_slots)
+from .slda_service import (InvalidDocument, Result, ServiceConfig,
+                           SLDAPredictionService, calibrate_slots,
+                           SHED_STATUSES, STATUS_EXPIRED, STATUS_OK,
+                           STATUS_SHED_QUEUE, STATUS_SHED_RATE)
 
 __all__ = ["GenerationConfig", "ServingEngine", "sample_token",
-           "Result", "ServiceConfig", "SLDAPredictionService",
-           "calibrate_slots"]
+           "InvalidDocument", "Result", "ServiceConfig",
+           "SLDAPredictionService", "calibrate_slots",
+           "SHED_STATUSES", "STATUS_EXPIRED", "STATUS_OK",
+           "STATUS_SHED_QUEUE", "STATUS_SHED_RATE"]

@@ -87,10 +87,17 @@ class ServingEngine:
         probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
         if self.gen.combine == "simple":
             alive = (chain_weights > 0).astype(jnp.float32)
+            # all-dead → unmasked mean (core.combine's PR 6 fallback),
+            # traced-safe: a zero mask would otherwise mix to zeros and
+            # serve log(1e-30) garbage uniformly
+            alive = jnp.where(alive.sum() > 0, alive,
+                              jnp.ones_like(alive))
             mix = jnp.einsum("c,cbsv->bsv", alive, probs) \
                 / jnp.maximum(alive.sum(), 1.0)
         else:
-            w = chain_weights / jnp.maximum(chain_weights.sum(), 1e-9)
+            w = jnp.where(chain_weights.sum() > 0, chain_weights,
+                          jnp.ones_like(chain_weights))
+            w = w / jnp.maximum(w.sum(), 1e-9)
             mix = jnp.einsum("c,cbsv->bsv", w, probs)
         return jnp.log(jnp.maximum(mix[:, 0], 1e-30))
 

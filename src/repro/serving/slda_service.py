@@ -46,22 +46,78 @@ combine plumbing) adds ZERO deviation versus calling the plan layer
 directly, and the bucketed slot layout is bit-identical per document to
 the padded (`bucketed=False`) layout by the `ctr_stride` pinning of
 DESIGN.md §Ragged-execution (tests/test_slda_serving.py).
+
+Robustness layer (DESIGN.md §Serving-robustness): the service survives
+traffic and faults without ever giving up the contracts above —
+
+  * **admission control + deadlines** — the pending queue is bounded
+    (`max_pending`), a token bucket rate-limits intake
+    (`rate_limit_per_s`/`rate_burst`), and every request may carry a
+    deadline.  Over-limit requests are SHED with a typed `Result`
+    status (never an opaque exception), `_pack` orders pending work
+    earliest-deadline-first, and an expired request is shed BEFORE it
+    can occupy a slot.  `drain(deadline_s=...)` bounds how long a
+    shutdown/flush storm can run.
+  * **serve-time health + degraded mode** — model tables are screened
+    with `core.supervisor.model_status` at load and at every hot
+    reload, and per-chain ŷ is screened at dispatch
+    (`robust_checks`); an unhealthy chain is auto-quarantined through
+    the same `chain_weights`-as-jit-argument path as a manual
+    `drop_chain`, so degradation is EXACT (survivors bit-identical to
+    a clean service) and retrace-free.  An all-dead ensemble falls
+    back to the unmasked combine + RuntimeWarning (`core.combine`'s
+    PR 6 semantics) instead of dividing by zero.
+  * **hot checkpoint reload** — `reload_from_checkpoint` performs an
+    epoch-versioned atomic model swap: validate the manifest, load,
+    screen, THEN swap; a torn/`BadZipFile`/mislabelled/wrong-M
+    checkpoint is rejected with the old epoch kept serving.  The
+    result cache is keyed on (content hash, model epoch), so a swap
+    can never serve stale predictions, and because models ride as jit
+    ARGUMENTS a swap never retraces.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import hashlib
+import math
 import time
+import zipfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import latest_step, restore_checkpoint
 from repro.core.combine import median, simple_average, weighted_average
 from repro.core.plan import as_bucketed, build_plan
+from repro.core.supervisor import (MODEL_FAULTS, F_NAN_YHAT,
+                                   describe_status, model_status)
 from repro.core.types import (BucketedCorpus, Corpus, SLDAConfig, SLDAModel,
                               _dp_bucket_cuts)
+
+# ------------------------------------------------------- typed outcomes
+
+#: `Result.status` values — every submitted request id resolves to ONE
+#: of these (invalid documents are the exception: they raise
+#: `InvalidDocument` and never get an id).
+STATUS_OK = "ok"
+STATUS_SHED_QUEUE = "shed_queue_full"    # bounded queue at capacity
+STATUS_SHED_RATE = "shed_rate_limit"     # token bucket empty
+STATUS_EXPIRED = "expired"               # deadline passed before dispatch
+SHED_STATUSES = (STATUS_SHED_QUEUE, STATUS_SHED_RATE, STATUS_EXPIRED)
+
+
+class InvalidDocument(ValueError):
+    """Typed `submit()` rejection — the request can NEVER be served
+    (malformed payload), as opposed to the shed statuses (well-formed
+    but dropped by overload policy).  `reason` is one of "empty_doc",
+    "doc_too_long", "bad_token_id"; catching plain ValueError keeps
+    working."""
+
+    def __init__(self, reason: str, detail: str):
+        super().__init__(f"{reason}: {detail}")
+        self.reason = reason
 
 
 # ------------------------------------------------------------ calibration
@@ -138,6 +194,21 @@ class ServiceConfig:
     cache_results: bool = True    # theta/ŷ result cache on content hash
     max_cached_results: int = 4096
 
+    # ---- robustness policy (DESIGN.md §Serving-robustness)
+    max_pending: int = 0          # queue bound; 0 = unbounded.  New
+                                  # submissions shed (typed) at the cap
+    default_deadline_s: float = 0.0   # per-request deadline when the
+                                  # caller gives none; 0 = no deadline
+    rate_limit_per_s: float = 0.0     # token-bucket admission rate;
+                                  # 0 = off
+    rate_burst: int = 0           # bucket capacity; 0 = batch_docs
+    robust_checks: bool = True    # screen model tables at (re)load and
+                                  # per-chain ŷ at dispatch; False is
+                                  # the checks-off A/B baseline
+    auto_flush: bool = True       # False = caller-driven flush (open-
+                                  # loop serving; lets a dispatcher that
+                                  # fell behind exercise the queue bound)
+
     def __post_init__(self):
         ladder = self.width_ladder or (self.max_doc_len,)
         quota = self.slot_quota or (self.batch_docs,)
@@ -149,6 +220,13 @@ class ServiceConfig:
             raise ValueError("widest rung must equal max_doc_len")
         if sum(quota) != self.batch_docs or min(quota) < 1:
             raise ValueError("slot_quota must sum to batch_docs, each >=1")
+        if self.max_pending and self.max_pending < self.batch_docs:
+            raise ValueError("max_pending must be 0 (unbounded) or >= "
+                             "batch_docs — a bound below one micro-batch "
+                             "could never fill a dispatch")
+        if self.rate_limit_per_s < 0 or self.default_deadline_s < 0 \
+                or self.rate_burst < 0:
+            raise ValueError("rate/deadline knobs must be >= 0")
         object.__setattr__(self, "width_ladder", tuple(ladder))
         object.__setattr__(self, "slot_quota", tuple(quota))
 
@@ -168,14 +246,19 @@ class ServiceConfig:
 @dataclasses.dataclass
 class Result:
     """One served prediction.  Per-chain values are kept so the
-    combined scalar can be re-derived under any later alive mask."""
+    combined scalar can be re-derived under any later alive mask.
+    A shed/expired request resolves to a Result too (`status` in
+    `SHED_STATUSES`, `yhat` = NaN, per-chain fields None) — overload is
+    a typed outcome, never a KeyError."""
 
     req_id: int
     yhat: float              # combined ŷ under the weights AT SERVE TIME
-    yhat_chains: np.ndarray  # [M] per-chain ŷ
-    zbar: np.ndarray         # [M, T] per-chain posterior-mean θ
+    yhat_chains: np.ndarray  # [M] per-chain ŷ (None when shed)
+    zbar: np.ndarray         # [M, T] per-chain posterior-mean θ (None
+                             # when shed)
     latency_s: float
     from_cache: bool
+    status: str = STATUS_OK
 
 
 def _combine_yhat(rule: str, yhat, chain_weights, train_mse):
@@ -210,7 +293,7 @@ class SLDAPredictionService:
 
     def __init__(self, models: SLDAModel, cfg: SLDAConfig,
                  svc: ServiceConfig, *, key=None, chain_weights=None,
-                 backend: str | None = None):
+                 backend: str | None = None, clock=None):
         self.models = models
         self.cfg = cfg
         self.svc = svc
@@ -224,63 +307,171 @@ class SLDAPredictionService:
         self._plan_cache = {}                   # cache_key → jitted fn
         self._trace_counts = collections.Counter()   # cache_key → traces
         self._results = {}                      # req_id → Result
-        self._result_cache = collections.OrderedDict()  # hash → (zbar, yhat)
-        self._pending = collections.deque()     # (req_id, np tokens, t_sub)
+        # (content hash, model epoch) → (zbar, yhat): the epoch in the
+        # key is what keeps a hot reload from serving stale predictions
+        self._result_cache = collections.OrderedDict()
+        # (req_id, np tokens, t_submit, absolute deadline or +inf)
+        self._pending = collections.deque()
         self._next_id = 0
         self._batches = 0
         self._stats = collections.Counter()
+        # injectable clock (VirtualClock in the chaos suite) — every
+        # deadline/rate decision reads THIS, so overload behaviour is
+        # replayable deterministically
+        self._clock = clock if clock is not None else time.perf_counter
+        self._model_epoch = 0                   # bumps on every hot swap
+        self._ckpt_step = None                  # step of the live epoch
+        self._health = np.zeros(self.n_chains, np.uint32)  # latched flags
+        burst = svc.rate_burst or svc.batch_docs
+        self._tokens = float(burst)             # token bucket, full start
+        self._bucket_t = self._clock()
+        if svc.robust_checks:
+            self._screen_models(models, source="init")
+
+    @property
+    def chain_weights(self):
+        return self._chain_weights
+
+    @chain_weights.setter
+    def chain_weights(self, w):
+        """Keep a host-side mirror in sync — the dispatch-time health
+        screen reads weights EVERY flush, and a device→host transfer
+        per micro-batch is exactly the kind of overhead the <=5%
+        checks budget can't afford."""
+        self._chain_weights = w
+        self._w_host = np.asarray(w)
+
+    def _screen_models(self, models, *, source: str):
+        """Latch `model_status` flags and quarantine chains whose
+        TABLES are unhealthy (NaN/Inf φ̂ or η, broken φ̂ row sums,
+        unusable train MSE).  Quarantine multiplies the weight by the
+        alive mask, so operator-zeroed chains stay zeroed."""
+        status = np.array(model_status(models))
+        self._health = status
+        bad = (status & MODEL_FAULTS) != 0
+        if bad.any():
+            self._stats["load_quarantines"] += int(bad.sum())
+            self.chain_weights = self.chain_weights \
+                * jnp.asarray(~bad, jnp.float32)
+        return status
+
+    def _take_token(self) -> bool:
+        """Token-bucket admission: refill at `rate_limit_per_s` up to
+        the burst capacity, spend one per admitted request.  Always
+        True when rate limiting is off."""
+        rate = self.svc.rate_limit_per_s
+        if rate <= 0:
+            return True
+        now = self._clock()
+        burst = self.svc.rate_burst or self.svc.batch_docs
+        self._tokens = min(float(burst),
+                           self._tokens + (now - self._bucket_t) * rate)
+        self._bucket_t = now
+        if self._tokens < 1.0:
+            return False
+        self._tokens -= 1.0
+        return True
+
+    def _shed(self, rid: int, status: str, t0: float) -> int:
+        """Resolve a request to a typed shed Result (DESIGN.md
+        §Serving-robustness: overload is an outcome, not an
+        exception)."""
+        self._results[rid] = Result(
+            req_id=rid, yhat=float("nan"), yhat_chains=None, zbar=None,
+            latency_s=self._clock() - t0, from_cache=False, status=status)
+        self._stats[status] += 1
+        return rid
 
     # ------------------------------------------------------------ intake
 
-    def submit(self, tokens) -> int:
+    def submit(self, tokens, *, deadline_s: float | None = None) -> int:
         """Enqueue one ragged document (int token ids, 1-D).  Returns a
         request id; auto-flushes whenever a full micro-batch is
         pending.  A content-hash repeat is served straight from the
-        result cache (no slot), combined under the CURRENT weights."""
+        result cache (no slot), combined under the CURRENT weights.
+
+        Admission order: validate (raises `InvalidDocument` — malformed
+        payloads never consume a request id or a rate token), result
+        cache, rate limit, queue bound.  `deadline_s` is a per-request
+        latency budget from now (falls back to
+        `svc.default_deadline_s`; 0/None = no deadline); a request
+        whose deadline lapses before dispatch resolves to a typed
+        `STATUS_EXPIRED` Result instead of occupying a slot."""
         toks = np.asarray(tokens, np.int32).ravel()
-        if not 1 <= toks.size <= self.svc.max_doc_len:
-            raise ValueError(
-                f"doc length {toks.size} outside [1, "
-                f"{self.svc.max_doc_len}]")
+        if toks.size < 1:
+            self._stats["rejected_invalid"] += 1
+            raise InvalidDocument("empty_doc", "document has no tokens")
+        if toks.size > self.svc.max_doc_len:
+            self._stats["rejected_invalid"] += 1
+            raise InvalidDocument(
+                "doc_too_long",
+                f"doc length {toks.size} > max_doc_len "
+                f"{self.svc.max_doc_len}")
         if toks.min() < 0 or toks.max() >= self.cfg.vocab_size:
-            raise ValueError("token id outside the model's vocab")
+            self._stats["rejected_invalid"] += 1
+            raise InvalidDocument(
+                "bad_token_id",
+                f"token ids must lie in [0, {self.cfg.vocab_size}) "
+                f"(got min {int(toks.min())}, max {int(toks.max())})")
         rid = self._next_id
         self._next_id += 1
-        t0 = time.perf_counter()
+        t0 = self._clock()
         if self.svc.cache_results:
             h = hashlib.blake2b(toks.tobytes(), digest_size=16).digest()
-            hit = self._result_cache.get(h)
+            hit = self._result_cache.get((h, self._model_epoch))
             if hit is not None:
-                self._result_cache.move_to_end(h)
+                self._result_cache.move_to_end((h, self._model_epoch))
                 zbar, yhat = hit
                 comb = float(_combine_yhat(
                     self.svc.combine, jnp.asarray(yhat)[:, None],
                     self.chain_weights, self.models.train_mse)[0])
                 self._results[rid] = Result(
                     req_id=rid, yhat=comb, yhat_chains=yhat, zbar=zbar,
-                    latency_s=time.perf_counter() - t0, from_cache=True)
+                    latency_s=self._clock() - t0, from_cache=True)
                 self._stats["cache_hits"] += 1
                 return rid
-        self._pending.append((rid, toks, t0))
-        while len(self._pending) >= self.svc.batch_docs:
-            self.flush()
+        if not self._take_token():
+            return self._shed(rid, STATUS_SHED_RATE, t0)
+        if self.svc.max_pending \
+                and len(self._pending) >= self.svc.max_pending:
+            return self._shed(rid, STATUS_SHED_QUEUE, t0)
+        if deadline_s is None:
+            deadline_s = self.svc.default_deadline_s
+        deadline = t0 + deadline_s if deadline_s else math.inf
+        self._pending.append((rid, toks, t0, deadline))
+        if self.svc.auto_flush:
+            while len(self._pending) >= self.svc.batch_docs:
+                self.flush()
         return rid
 
     # ----------------------------------------------------------- packing
 
     def _pack(self):
-        """FIFO-pack pending docs into the fixed slot layout: each doc
-        takes a free slot of the smallest rung that fits it, escalating
-        to wider rungs when its own is full; docs that fit nowhere stay
-        pending for the next batch.  Returns (per-rung doc lists,
-        n_placed)."""
+        """Pack pending docs into the fixed slot layout.  Two
+        robustness steps run FIRST: requests whose deadline already
+        lapsed are shed (`STATUS_EXPIRED`) before they can waste a
+        slot, and survivors are ordered earliest-deadline-first
+        (ties broken by request id, so deadline-free traffic — every
+        deadline +inf — reduces to the original FIFO order).  Each doc
+        then takes a free slot of the smallest rung that fits it,
+        escalating to wider rungs when its own is full; docs that fit
+        nowhere stay pending for the next batch.  Returns (per-rung
+        doc lists, n_placed)."""
         ladder, quota = self.svc.width_ladder, self.svc.slot_quota
+        now = self._clock()
+        live = []
+        while self._pending:
+            item = self._pending.popleft()
+            if item[3] < now:
+                self._shed(item[0], STATUS_EXPIRED, item[2])
+                continue
+            live.append(item)
+        live.sort(key=lambda it: (it[3], it[0]))    # EDF, FIFO fallback
         free = list(quota)
         placed = [[] for _ in ladder]
         leftover = collections.deque()
         n = 0
-        while self._pending:
-            item = self._pending.popleft()
+        for item in live:
             L = item[1].size
             rung = next(i for i, w in enumerate(ladder) if w >= L)
             slot = next((i for i in range(rung, len(ladder))
@@ -308,7 +499,7 @@ class SLDAPredictionService:
         for w, q, docs in zip(ladder, quota, placed):
             bt = np.zeros((q, w), np.int32)
             bm = np.zeros((q, w), np.float32)
-            for i, (rid, toks, t0) in enumerate(docs):
+            for i, (rid, toks, t0, _deadline) in enumerate(docs):
                 bt[i, :toks.size] = toks
                 bm[i, :toks.size] = 1.0
                 meta.append((rid, t0))
@@ -360,12 +551,13 @@ class SLDAPredictionService:
 
     def flush(self):
         """Dispatch one micro-batch from the pending queue (no-op when
-        empty).  Returns the req_ids completed by this batch."""
+        empty).  Returns the req_ids completed by this batch (shed ids
+        resolve through `result()`, not this list)."""
         if not self._pending:
             return []
         placed, n = self._pack()
-        if n == 0:                      # cannot happen: ladder covers
-            return []                   # every admissible length
+        if n == 0:      # every pending request expired — nothing to run
+            return []
         bc, meta = self._build_schedule(placed)
         plan = build_plan(bc, self.cfg, self.backend)
         fn = self._dispatch_fn(plan.cache_key())
@@ -374,8 +566,11 @@ class SLDAPredictionService:
         self._batches += 1
         zb, yhat, comb = fn(keys, self.models, plan, self.chain_weights)
         jax.block_until_ready(comb)
-        t_done = time.perf_counter()
+        t_done = self._clock()
         zb, yhat, comb = np.asarray(zb), np.asarray(yhat), np.asarray(comb)
+        real = [d for d, slot in enumerate(meta) if slot is not None]
+        if self.svc.robust_checks and real:
+            comb = self._screen_dispatch(yhat, comb, real)
         done = []
         for d, slot in enumerate(meta):
             if slot is None:
@@ -391,18 +586,45 @@ class SLDAPredictionService:
                     np.ascontiguousarray(
                         bc_tokens_row(bc, d)).tobytes(),
                     digest_size=16).digest()
-                self._result_cache[h] = (zb[:, d], yhat[:, d])
+                self._result_cache[(h, self._model_epoch)] = \
+                    (zb[:, d], yhat[:, d])
                 while len(self._result_cache) > self.svc.max_cached_results:
                     self._result_cache.popitem(last=False)
         self._stats["dispatches"] += 1
         self._stats["docs_dispatched"] += n
         return done
 
-    def drain(self):
+    def _screen_dispatch(self, yhat, comb, real):
+        """Per-chain ŷ health screen at dispatch: a chain producing a
+        non-finite prediction on any REAL slot (dummies are masked
+        noise) is quarantined through the same weights path as a
+        manual `drop_chain` — exact and retrace-free — and the batch
+        is recombined host-side under the corrected mask, so the
+        poison never reaches a caller."""
+        w = self._w_host
+        bad = ~np.isfinite(yhat[:, real]).all(axis=1) & (w > 0)
+        if not bad.any():
+            return comb
+        for c in np.flatnonzero(bad):
+            self._health[c] |= F_NAN_YHAT
+            self.drop_chain(int(c))
+            self._stats["dispatch_quarantines"] += 1
+        return np.asarray(_combine_yhat(
+            self.svc.combine, jnp.asarray(yhat), self.chain_weights,
+            self.models.train_mse))
+
+    def drain(self, deadline_s: float | None = None):
         """Flush until the pending queue is empty (partial batches pad
-        with dummy slots)."""
+        with dummy slots).  `deadline_s` bounds the wall time spent
+        draining — on timeout the remaining requests STAY pending
+        (they are not shed; a later flush/drain can still serve them),
+        so a shutdown storm cannot hang the caller."""
+        t0 = self._clock()
         done = []
         while self._pending:
+            if deadline_s is not None and self._clock() - t0 > deadline_s:
+                self._stats["drain_timeouts"] += 1
+                break
             done.extend(self.flush())
         return done
 
@@ -414,8 +636,15 @@ class SLDAPredictionService:
     def combined(self, req_id: int) -> float:
         """Re-derive the combined ŷ for a served request under the
         CURRENT chain weights — exact under any drop/revive since the
-        per-chain values never depended on other chains."""
+        per-chain values never depended on other chains.  When every
+        chain is dead this inherits `core.combine`'s all-dead
+        fallback: unmasked combine + RuntimeWarning, never a NaN from
+        a 0/0."""
         r = self._results[req_id]
+        if r.status != STATUS_OK:
+            raise ValueError(
+                f"request {req_id} was not served (status {r.status!r})"
+                " — no per-chain values to combine")
         return float(_combine_yhat(
             self.svc.combine, jnp.asarray(r.yhat_chains)[:, None],
             self.chain_weights, self.models.train_mse)[0])
@@ -431,8 +660,70 @@ class SLDAPredictionService:
 
     def revive_chain(self, idx: int, weight: float = 1.0):
         """Undo a drop — the replica came back.  Exact for the same
-        reason the drop is."""
+        reason the drop is.  Also clears the chain's latched health
+        flags (an operator revive is an assertion the replica is
+        healthy again; the next dispatch re-screens anyway)."""
         self.chain_weights = self.chain_weights.at[idx].set(weight)
+        self._health[idx] = 0
+
+    def reload_from_checkpoint(self, ckpt_dir: str,
+                               step: int | None = None) -> dict:
+        """Hot model swap — epoch-versioned and atomic from the
+        caller's view (DESIGN.md §Serving-robustness reload protocol):
+
+          validate manifest → load all chains → screen tables → swap.
+
+        Any failure before the swap (missing/torn/`BadZipFile`
+        checkpoint, mislabelled manifest, chain-count mismatch, or a
+        checkpoint with NO healthy chain) REJECTS the reload: the old
+        models keep serving under the old epoch, and the report says
+        why.  On success the model epoch bumps — which invalidates
+        every result-cache entry by key, no scan needed — healthy
+        chains (re)enter the ensemble and unhealthy ones are
+        quarantined.  Models ride as jit ARGUMENTS with unchanged
+        shapes, so a swap can never retrace."""
+        t0 = self._clock()
+
+        def _reject(reason: str) -> dict:
+            self._stats["reloads_rejected"] += 1
+            return {"ok": False, "reason": reason,
+                    "epoch": self._model_epoch,
+                    "ckpt_step": self._ckpt_step,
+                    "wall_s": self._clock() - t0}
+
+        if step is None:
+            step = latest_step(ckpt_dir)
+            if step is None:
+                return _reject(f"no checkpoint under {ckpt_dir!r}")
+        try:
+            models, manifest = restore_checkpoint(
+                ckpt_dir, step, self.models)
+        except (FileNotFoundError, KeyError, ValueError, OSError,
+                zipfile.BadZipFile) as e:   # truncated .npz = torn write
+            return _reject(f"{type(e).__name__}: {e}")
+        quarantined = []
+        if self.svc.robust_checks:
+            status = np.array(model_status(models))
+            bad = (status & MODEL_FAULTS) != 0
+            if bad.all():
+                return _reject("all_chains_unhealthy")
+            quarantined = [int(c) for c in np.flatnonzero(bad)]
+            self._health = status
+            alive = (~bad).astype(np.float32)
+        else:
+            alive = np.ones(self.n_chains, np.float32)
+        # point of no return — everything below is pure assignment
+        self.models = models
+        self._model_epoch += 1
+        self._ckpt_step = int(manifest["step"])
+        self.chain_weights = jnp.asarray(alive, jnp.float32)
+        self._stats["reloads_ok"] += 1
+        if quarantined:
+            self._stats["load_quarantines"] += len(quarantined)
+        return {"ok": True, "epoch": self._model_epoch,
+                "ckpt_step": self._ckpt_step,
+                "quarantined_chains": quarantined,
+                "wall_s": self._clock() - t0}
 
     # ------------------------------------------------------------- stats
 
@@ -443,6 +734,7 @@ class SLDAPredictionService:
         sig_traces = {str(k[0]): v for k, v in self._trace_counts.items()}
         slot_total = max(self._stats["dispatches"], 1) \
             * self.svc.batch_docs
+        alive = np.asarray(self.chain_weights) > 0
         return {
             "traces": int(sum(self._trace_counts.values())),
             "compiled_plans": len(self._plan_cache),
@@ -460,13 +752,31 @@ class SLDAPredictionService:
             "slot_quota": list(self.svc.slot_quota),
             "bucketed": self.svc.bucketed,
             "backend": self.backend,
+            # robustness observability (ISSUE 8: queue depth, shed/
+            # reject counters, model epoch, per-chain health)
+            "queue_depth": len(self._pending),
+            "shed_queue_full": int(self._stats[STATUS_SHED_QUEUE]),
+            "shed_rate_limit": int(self._stats[STATUS_SHED_RATE]),
+            "expired": int(self._stats[STATUS_EXPIRED]),
+            "rejected_invalid": int(self._stats["rejected_invalid"]),
+            "drain_timeouts": int(self._stats["drain_timeouts"]),
+            "dispatch_quarantines": int(
+                self._stats["dispatch_quarantines"]),
+            "load_quarantines": int(self._stats["load_quarantines"]),
+            "reloads_ok": int(self._stats["reloads_ok"]),
+            "reloads_rejected": int(self._stats["reloads_rejected"]),
+            "model_epoch": self._model_epoch,
+            "ckpt_step": self._ckpt_step,
+            "alive_chains": int(alive.sum()),
+            "chain_health": [describe_status(int(s))
+                             for s in self._health],
         }
 
     def describe(self) -> dict:
         """The serving plan, human-readable — slot layout, signature,
         and what a dispatch compiles to (`launch/dryrun.py
         --slda-serve`)."""
-        dummy = [(0, np.zeros(1, np.int32), 0.0)]
+        dummy = [(0, np.zeros(1, np.int32), 0.0, math.inf)]
         placed = [[] for _ in self.svc.width_ladder]
         placed[0] = dummy
         bc, _ = self._build_schedule(placed)
@@ -477,6 +787,18 @@ class SLDAPredictionService:
         d["slot_quota"] = list(self.svc.slot_quota)
         d["combine"] = self.svc.combine
         d["chains"] = self.n_chains
+        d["robustness"] = {
+            "max_pending": self.svc.max_pending,
+            "default_deadline_s": self.svc.default_deadline_s,
+            "rate_limit_per_s": self.svc.rate_limit_per_s,
+            "rate_burst": self.svc.rate_burst or self.svc.batch_docs,
+            "robust_checks": self.svc.robust_checks,
+            "auto_flush": self.svc.auto_flush,
+            "scheduling": "earliest-deadline-first (FIFO when no "
+                          "deadlines)",
+            "shed_statuses": list(SHED_STATUSES),
+            "model_epoch": self._model_epoch,
+        }
         return d
 
 

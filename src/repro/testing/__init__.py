@@ -1,6 +1,10 @@
 """Deterministic chaos-engineering harness for the chain ensemble."""
-from .faults import (FaultPlan, inject, no_faults, poison,
-                     random_fault_plan, truncate_chain_file)
+from .faults import (FaultPlan, VirtualClock, burst_trace, inject,
+                     inject_dispatch_delay, mislabel_manifest, no_faults,
+                     poison, poison_model_table, random_fault_plan,
+                     replay_open_loop, truncate_chain_file)
 
-__all__ = ["FaultPlan", "inject", "no_faults", "poison",
-           "random_fault_plan", "truncate_chain_file"]
+__all__ = ["FaultPlan", "VirtualClock", "burst_trace", "inject",
+           "inject_dispatch_delay", "mislabel_manifest", "no_faults",
+           "poison", "poison_model_table", "random_fault_plan",
+           "replay_open_loop", "truncate_chain_file"]

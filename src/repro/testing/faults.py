@@ -140,3 +140,159 @@ def truncate_chain_file(ckpt_dir: str, step: int, chain: int,
     with open(path, "r+b") as f:
         f.truncate(min(keep_bytes, size))
     return path
+
+
+def mislabel_manifest(ckpt_dir: str, step: int, wrong_step: int) -> str:
+    """Rewrite a published checkpoint's manifest to record the WRONG
+    step — a hand-copied / torn checkpoint directory.  The serving
+    reload path must reject it via `read_manifest`'s step validation
+    rather than hot-swap a model trained to an unknown point."""
+    import json
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", "manifest.json")
+    with open(path) as f:
+        manifest = json.load(f)
+    manifest["step"] = wrong_step
+    with open(path, "w") as f:
+        json.dump(manifest, f)
+    return path
+
+
+# -------------------------------------------------------- serve-time faults
+#
+# The serving chaos suite (tests/test_serving_robust.py, DESIGN.md
+# §Serving-robustness) needs the same determinism contract as the
+# training faults above, but its failure classes live OUTSIDE the EM
+# scan: poisoned model tables, slow dispatches, bursty arrivals.  Time
+# itself is therefore injectable — `VirtualClock` + `replay_open_loop`
+# make an overload scenario a pure function of (seed, trace), so a p99
+# regression reproduces bit-for-bit with no real sleeping.
+
+class VirtualClock:
+    """Deterministic monotonic-ish clock for overload simulation.
+    Plugs into `SLDAPredictionService(clock=...)`; every deadline,
+    rate-limit and latency decision then reads simulated seconds."""
+
+    def __init__(self, t0: float = 0.0):
+        self._t = float(t0)
+
+    def __call__(self) -> float:
+        return self._t
+
+    def now(self) -> float:
+        return self._t
+
+    def set(self, t: float):
+        self._t = float(t)
+
+    def advance(self, dt: float):
+        self._t += float(dt)
+
+
+def poison_model_table(models, chain: int, kind: str = "nan_phi"):
+    """Corrupt ONE chain's serving tables (host-side — these are model
+    EXPORTS, not in-scan state).  Kinds map 1:1 to the
+    `core.supervisor.model_status` probes that must catch them:
+
+      * "nan_phi"    — NaN in the topic-word table φ̂   → F_NAN_PHI
+      * "nan_eta"    — NaN in the regression weights η  → F_NAN_ETA
+      * "bad_rowsum" — φ̂ row no longer sums to 1       → F_PHI_ROWSUM
+      * "nan_mse"    — non-finite train MSE (breaks
+                       weighted combine)                → F_NAN_MSE
+    """
+    phi, eta = models.phi, models.eta
+    mse = models.train_mse
+    if kind == "nan_phi":
+        phi = phi.at[chain, 0, 0].set(jnp.nan)
+    elif kind == "nan_eta":
+        eta = eta.at[chain, 0].set(jnp.nan)
+    elif kind == "bad_rowsum":
+        phi = phi.at[chain, 0, :].set(phi[chain, 0, :] * 3.0)
+    elif kind == "nan_mse":
+        mse = mse.at[chain].set(jnp.inf)
+    else:
+        raise ValueError(
+            "kind must be one of ('nan_phi', 'nan_eta', 'bad_rowsum', "
+            f"'nan_mse'), got {kind!r}")
+    import dataclasses
+    return dataclasses.replace(models, phi=phi, eta=eta, train_mse=mse)
+
+
+def inject_dispatch_delay(service, delay_s: float):
+    """Make every dispatch of `service` take `delay_s` extra seconds —
+    a straggling accelerator.  Wraps the PLAN-CACHE lookup, not the
+    jitted callables themselves, so the compiled fns (and the
+    no-retrace property) are untouched; with a `VirtualClock` the
+    delay advances simulated time and costs zero wall clock.  Returns
+    an undo callable."""
+    orig = service._dispatch_fn
+    clock = service._clock
+
+    def delayed(plan_key):
+        fn = orig(plan_key)
+
+        def run(*args):
+            out = fn(*args)
+            jax.block_until_ready(out)
+            if isinstance(clock, VirtualClock):
+                clock.advance(delay_s)
+            else:
+                import time
+                time.sleep(delay_s)
+            return out
+
+        return run
+
+    service._dispatch_fn = delayed
+
+    def undo():
+        service._dispatch_fn = orig
+
+    return undo
+
+
+def burst_trace(seed: int, vocab: int, max_len: int, *,
+                base_rate: float, burst_rate: float, n_steady: int,
+                n_burst: int, n_tail: int, len_lam: float = 12.0):
+    """Deterministic open-loop arrival trace: steady Poisson-ish
+    traffic at `base_rate` req/s, a burst at `burst_rate`, then a
+    steady tail — the canonical overload shape.  Returns a list of
+    (arrival_time_s, token_array) sorted by time.  Same seed → same
+    trace, bit-for-bit."""
+    rng = np.random.default_rng(seed)
+    t, out = 0.0, []
+    for n, rate in ((n_steady, base_rate), (n_burst, burst_rate),
+                    (n_tail, base_rate)):
+        for _ in range(n):
+            t += rng.exponential(1.0 / rate)
+            L = int(np.clip(rng.poisson(len_lam), 1, max_len))
+            out.append((t, rng.integers(0, vocab, L).astype(np.int32)))
+    return out
+
+
+def replay_open_loop(service, trace, clock: VirtualClock):
+    """Replay an arrival `trace` through `service` open-loop under a
+    `VirtualClock` (discrete-event simulation — the service MUST be
+    built with `auto_flush=False` and `clock=clock`).  The dispatcher
+    drains full micro-batches whenever it is free; arrivals keep
+    landing while a dispatch is in flight, which is what fills the
+    bounded queue and expires deadlines under a burst.  Returns
+    {req_id: arrival_time_s} for latency accounting."""
+    if service.svc.auto_flush:
+        raise ValueError("replay_open_loop needs auto_flush=False — "
+                         "auto-flush serves synchronously at submit "
+                         "time and no queueing can ever build up")
+    batch = service.svc.batch_docs
+    free_at = 0.0
+    arrivals = {}
+    for t_arr, doc in trace:
+        # dispatcher catches up on everything it could run before t_arr
+        while free_at <= t_arr and len(service._pending) >= batch:
+            clock.set(free_at)
+            service.flush()
+            free_at = clock.now()
+        clock.set(t_arr)
+        rid = service.submit(doc)
+        arrivals[rid] = t_arr
+    clock.set(max(free_at, clock.now()))
+    service.drain()
+    return arrivals

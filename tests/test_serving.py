@@ -81,6 +81,21 @@ def test_straggler_cut_simple_rule_masks_dead_chains():
     assert np.array_equal(out_cut, out_solo)
 
 
+def test_all_chains_dropped_falls_back_to_unmasked_combine():
+    """Dropping EVERY chain must serve the unmasked combine
+    (core.combine's all-dead fallback) rather than mixing to zeros and
+    emitting log(1e-30) garbage — for both combine rules the output
+    equals a healthy engine's."""
+    for combine in ("simple", "weighted"):
+        healthy = make_engine(combine=combine)
+        out_ok = np.asarray(healthy.generate(jnp.ones((3, 4), jnp.int32)))
+        dead = make_engine(combine=combine)
+        dead.drop_chain(0)
+        dead.drop_chain(1)
+        out_dead = np.asarray(dead.generate(jnp.ones((3, 4), jnp.int32)))
+        assert np.array_equal(out_ok, out_dead)
+
+
 def test_drop_chain_reaches_compiled_decode_mid_stream():
     """chain_weights is a jit argument, not a trace-time constant: a
     drop_chain AFTER the first compiled decode still changes the mix."""

@@ -1,0 +1,460 @@
+"""Serving robustness chaos suite (DESIGN.md §Serving-robustness):
+admission control + deadlines, serve-time health screening with exact
+degraded mode, hot checkpoint reload, and deterministic overload
+replay.  Companion to tests/test_slda_serving.py (happy path) and
+tests/test_faults.py (training-time chaos): under every fault below the
+service must never crash, must shed deterministically with TYPED
+outcomes, and must keep surviving chains bit-identical to a clean
+service."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import save_checkpoint
+from repro.core import SLDAConfig, partition, train_chains
+from repro.data import make_slda_corpus
+from repro.serving import (InvalidDocument, ServiceConfig,
+                           SLDAPredictionService, STATUS_EXPIRED,
+                           STATUS_OK, STATUS_SHED_QUEUE, STATUS_SHED_RATE)
+from repro.serving.slda_service import _combine_yhat
+from repro.testing import (VirtualClock, burst_trace, inject_dispatch_delay,
+                           mislabel_manifest, poison_model_table,
+                           replay_open_loop, truncate_chain_file)
+
+CFG = SLDAConfig(n_topics=8, vocab_size=64, n_iters=3, n_pred_burnin=2,
+                 n_pred_samples=2)
+MAXLEN, M, BATCH = 48, 4, 16
+
+_corpus, _ = make_slda_corpus(jax.random.PRNGKey(0), 64, CFG.vocab_size,
+                              CFG.n_topics, MAXLEN,
+                              doc_len_dist="lognormal", len_sigma=1.0)
+MODELS = train_chains(jax.random.PRNGKey(1), partition(_corpus, M), CFG)
+MODELS_B = train_chains(jax.random.PRNGKey(7), partition(_corpus, M), CFG)
+LENS = np.asarray(_corpus.mask.sum(-1)).astype(int)
+TOKS = np.asarray(_corpus.tokens)
+DOCS = [TOKS[d, :LENS[d]] for d in range(_corpus.n_docs)]
+SVC = ServiceConfig.calibrated(LENS, max_doc_len=MAXLEN, batch_docs=BATCH,
+                               n_buckets=3)
+
+
+def make_service(models=MODELS, **kw):
+    clock = kw.pop("clock", None)
+    svc = dataclasses.replace(SVC, **kw) if kw else SVC
+    return SLDAPredictionService(models, CFG, svc,
+                                 key=jax.random.PRNGKey(9), clock=clock)
+
+
+# ------------------------------------------- admission control + deadlines
+
+def test_queue_bound_sheds_typed():
+    """At the `max_pending` cap a new submission resolves to a typed
+    STATUS_SHED_QUEUE Result — never an exception, never a silent
+    drop — and the queued requests are untouched."""
+    svc = make_service(max_pending=BATCH, auto_flush=False,
+                       cache_results=False)
+    kept = [svc.submit(DOCS[i]) for i in range(BATCH)]
+    shed = [svc.submit(DOCS[BATCH + i]) for i in range(3)]
+    st = svc.stats()
+    assert st["queue_depth"] == BATCH
+    assert st["shed_queue_full"] == 3
+    for rid in shed:
+        r = svc.result(rid)
+        assert r.status == STATUS_SHED_QUEUE
+        assert np.isnan(r.yhat) and r.yhat_chains is None
+        with pytest.raises(ValueError):
+            svc.combined(rid)
+    svc.drain()
+    for rid in kept:
+        assert svc.result(rid).status == STATUS_OK
+
+
+def test_rate_limiter_token_bucket():
+    """Token bucket: `rate_burst` requests pass instantly, further ones
+    shed STATUS_SHED_RATE until simulated time refills tokens at
+    `rate_limit_per_s`."""
+    clock = VirtualClock()
+    svc = make_service(rate_limit_per_s=1.0, rate_burst=2,
+                       auto_flush=False, cache_results=False, clock=clock)
+    r0 = svc.submit(DOCS[0])
+    r1 = svc.submit(DOCS[1])
+    r2 = svc.submit(DOCS[2])                    # bucket empty
+    assert svc.result(r2).status == STATUS_SHED_RATE
+    assert r0 not in svc._results and r1 not in svc._results  # queued
+    clock.advance(1.0)                          # one token refills
+    r3 = svc.submit(DOCS[3])
+    r4 = svc.submit(DOCS[4])
+    assert r3 not in svc._results               # admitted
+    assert svc.result(r4).status == STATUS_SHED_RATE
+    assert svc.stats()["shed_rate_limit"] == 2
+
+
+def test_deadline_expiry_sheds_before_dispatch():
+    """A request whose deadline lapsed is shed at pack time, BEFORE it
+    can occupy a slot: with every request expired the flush runs no
+    dispatch at all."""
+    clock = VirtualClock()
+    svc = make_service(auto_flush=False, cache_results=False, clock=clock)
+    rids = [svc.submit(DOCS[i], deadline_s=1.0) for i in range(4)]
+    clock.advance(2.0)                          # all deadlines lapse
+    svc.flush()
+    st = svc.stats()
+    assert st["dispatches"] == 0
+    assert st["expired"] == 4
+    for rid in rids:
+        assert svc.result(rid).status == STATUS_EXPIRED
+
+
+def test_mixed_expired_and_live_flush():
+    clock = VirtualClock()
+    svc = make_service(auto_flush=False, cache_results=False, clock=clock)
+    dead = [svc.submit(DOCS[i], deadline_s=0.5) for i in range(3)]
+    live = [svc.submit(DOCS[3 + i]) for i in range(3)]   # no deadline
+    clock.advance(1.0)
+    svc.flush()
+    assert all(svc.result(r).status == STATUS_EXPIRED for r in dead)
+    assert all(svc.result(r).status == STATUS_OK for r in live)
+    assert svc.stats()["dispatches"] == 1
+
+
+def test_earliest_deadline_first_packing():
+    """When the widest rung oversubscribes, the request with the
+    EARLIEST deadline gets a slot even though it was submitted last;
+    a deadline-free (FIFO) request rolls over instead."""
+    q_last = SVC.slot_quota[-1]
+    svc = make_service(auto_flush=False, cache_results=False)
+    long_doc = np.arange(MAXLEN, dtype=np.int32) % CFG.vocab_size
+    fifo = [svc.submit((long_doc + i) % CFG.vocab_size)
+            for i in range(q_last)]
+    urgent = svc.submit((long_doc + 63) % CFG.vocab_size, deadline_s=100.0)
+    done = svc.flush()
+    assert urgent in done                       # EDF won the last slot
+    assert fifo[-1] not in done                 # latest FIFO doc rolled
+    assert svc.stats()["queue_depth"] == 1
+    svc.drain()
+    assert svc.result(fifo[-1]).status == STATUS_OK
+
+
+def test_no_deadlines_reduces_to_fifo():
+    """EDF with every deadline +inf must reproduce the original FIFO
+    packing — same docs through a robust and a deadline-free service
+    give bitwise-identical results."""
+    a = make_service(cache_results=False)
+    b = make_service(cache_results=False, max_pending=64,
+                     default_deadline_s=1e6)
+    rids_a = [a.submit(d) for d in DOCS[:24]]
+    rids_b = [b.submit(d) for d in DOCS[:24]]
+    a.drain(), b.drain()
+    for ra, rb in zip(rids_a, rids_b):
+        assert a.result(ra).yhat == b.result(rb).yhat
+        np.testing.assert_array_equal(a.result(ra).yhat_chains,
+                                      b.result(rb).yhat_chains)
+
+
+def test_drain_deadline_bounds_wall_time():
+    """`drain(deadline_s=...)` stops flushing at the bound; the
+    remainder STAYS pending (not shed) and a later drain serves it."""
+    clock = VirtualClock()
+    svc = make_service(auto_flush=False, cache_results=False, clock=clock)
+    undo = inject_dispatch_delay(svc, 1.0)      # 1 s per micro-batch
+    rids = [svc.submit(DOCS[i % len(DOCS)][: 1 + i % MAXLEN] + 0)
+            for i in range(3 * BATCH)]
+    svc.drain(deadline_s=1.5)                   # time for 2 flushes only
+    st = svc.stats()
+    assert st["drain_timeouts"] == 1
+    assert st["queue_depth"] == BATCH
+    undo()
+    svc.drain()
+    assert svc.stats()["queue_depth"] == 0
+    assert all(svc.result(r).status == STATUS_OK for r in rids)
+
+
+def test_invalid_document_typed_rejections():
+    svc = make_service()
+    cases = [
+        (np.asarray([], np.int32), "empty_doc"),
+        (np.ones((MAXLEN + 1,), np.int32), "doc_too_long"),
+        (np.asarray([CFG.vocab_size], np.int32), "bad_token_id"),
+        (np.asarray([-1], np.int32), "bad_token_id"),
+    ]
+    for doc, reason in cases:
+        with pytest.raises(InvalidDocument) as ei:
+            svc.submit(doc)
+        assert ei.value.reason == reason
+        assert isinstance(ei.value, ValueError)   # old handlers still work
+    assert svc.stats()["rejected_invalid"] == len(cases)
+    assert svc.stats()["queue_depth"] == 0        # nothing half-admitted
+
+
+# --------------------------------------- health screening + degraded mode
+
+def test_poisoned_table_quarantined_at_load_degraded_exact():
+    """A chain whose φ̂ table is NaN-poisoned is quarantined when the
+    service loads — and the degraded service is EXACT: survivors'
+    per-chain values and the combined ŷ are bit-identical to a clean
+    service with the same chain manually dropped."""
+    bad = make_service(poison_model_table(MODELS, 1, "nan_phi"),
+                       cache_results=False)
+    st = bad.stats()
+    assert st["alive_chains"] == M - 1
+    assert st["load_quarantines"] == 1
+    assert "nan_phi" in st["chain_health"][1]
+    clean = make_service(cache_results=False)
+    clean.drop_chain(1)
+    rids_a = [bad.submit(d) for d in DOCS[:BATCH]]
+    rids_b = [clean.submit(d) for d in DOCS[:BATCH]]
+    bad.drain(), clean.drain()
+    survivors = [c for c in range(M) if c != 1]
+    for ra, rb in zip(rids_a, rids_b):
+        a, b = bad.result(ra), clean.result(rb)
+        assert a.yhat == b.yhat
+        np.testing.assert_array_equal(a.yhat_chains[survivors],
+                                      b.yhat_chains[survivors])
+
+
+@pytest.mark.parametrize("kind", ["nan_eta", "bad_rowsum", "nan_mse"])
+def test_model_screen_catches_every_table_fault(kind):
+    svc = make_service(poison_model_table(MODELS, 2, kind))
+    st = svc.stats()
+    assert st["alive_chains"] == M - 1
+    assert float(np.asarray(svc.chain_weights)[2]) == 0.0
+
+
+def test_checks_off_serves_unscreened():
+    """robust_checks=False is the A/B baseline: the poisoned chain is
+    NOT quarantined (its weight stays 1)."""
+    svc = make_service(poison_model_table(MODELS, 1, "nan_phi"),
+                       robust_checks=False)
+    assert svc.stats()["alive_chains"] == M
+
+
+def test_dispatch_nan_quarantine_recombines():
+    """Silent corruption AFTER load (poison injected past the init
+    screen): the first dispatch that produces a non-finite per-chain ŷ
+    quarantines the chain and recombines, so the caller sees a finite
+    prediction identical to a pre-dropped clean service."""
+    svc = make_service(cache_results=False)
+    svc.models = poison_model_table(MODELS, 3, "nan_eta")  # post-screen
+    clean = make_service(cache_results=False)
+    clean.drop_chain(3)
+    rids_a = [svc.submit(d) for d in DOCS[:BATCH]]
+    rids_b = [clean.submit(d) for d in DOCS[:BATCH]]
+    svc.drain(), clean.drain()
+    st = svc.stats()
+    assert st["dispatch_quarantines"] == 1
+    assert "nan_yhat" in st["chain_health"][3]
+    assert float(np.asarray(svc.chain_weights)[3]) == 0.0
+    for ra, rb in zip(rids_a, rids_b):
+        a, b = svc.result(ra), clean.result(rb)
+        assert np.isfinite(a.yhat)
+        assert a.yhat == b.yhat
+
+
+def test_all_chains_dead_warns_and_serves_fallback():
+    """Every chain dropped: `combined()` follows core.combine's PR 6
+    all-dead semantics — unmasked combine + RuntimeWarning — and a
+    fresh dispatch under the all-dead mask still serves finite numbers
+    instead of crashing or emitting 0/0 NaNs."""
+    svc = make_service(cache_results=False)
+    rids = [svc.submit(d) for d in DOCS[:BATCH]]
+    svc.drain()
+    for c in range(M):
+        svc.drop_chain(c)
+    r = svc.result(rids[0])
+    with pytest.warns(RuntimeWarning, match="all-dead"):
+        got = svc.combined(rids[0])
+    exp = float(_combine_yhat(SVC.combine,
+                              jnp.asarray(r.yhat_chains)[:, None],
+                              jnp.ones((M,), jnp.float32),
+                              MODELS.train_mse)[0])
+    assert got == exp
+    rids2 = [svc.submit(d) for d in DOCS[BATCH:2 * BATCH]]
+    svc.drain()
+    for rid in rids2:
+        assert np.isfinite(svc.result(rid).yhat)
+
+
+# ----------------------------------------------------- hot model reload
+
+def test_hot_reload_bumps_epoch_invalidates_cache_no_retrace(tmp_path):
+    """The reload protocol end-to-end: swap to a checkpointed model,
+    epoch bumps, the (hash, epoch) cache key invalidates every cached
+    result WITHOUT a scan, results under the new epoch are bit-equal
+    to a fresh service on the new models — and nothing retraces."""
+    save_checkpoint(str(tmp_path), 5, MODELS_B)
+    svc = make_service()
+    [svc.submit(d) for d in DOCS[:BATCH]]
+    svc.drain()
+    hit = svc.submit(DOCS[0])
+    assert svc.result(hit).from_cache            # cache warm, epoch 0
+    traces = svc.stats()["traces"]
+    rep = svc.reload_from_checkpoint(str(tmp_path))
+    assert rep["ok"] and rep["epoch"] == 1 and rep["ckpt_step"] == 5
+    miss = svc.submit(DOCS[0])                   # same bytes, new epoch
+    svc.drain()
+    r = svc.result(miss)
+    assert not r.from_cache                      # stale epoch never served
+    fresh = make_service(MODELS_B)
+    fresh._batches = svc._batches - 1            # align the PRNG stream
+    rid = fresh.submit(DOCS[0])
+    fresh.drain()
+    assert r.yhat == fresh.result(rid).yhat
+    st = svc.stats()
+    assert st["traces"] == traces                # swap never retraces
+    assert st["model_epoch"] == 1 and st["reloads_ok"] == 1
+
+
+def test_torn_reload_rejected_old_epoch_keeps_serving(tmp_path):
+    """A torn checkpoint (truncated chain file) must REJECT the reload:
+    old models keep serving under the old epoch, the warm cache stays
+    valid, and repeat traffic is bit-identical to before the attempt."""
+    save_checkpoint(str(tmp_path), 3, MODELS_B)
+    truncate_chain_file(str(tmp_path), 3, 1)
+    svc = make_service()
+    rid0 = [svc.submit(d) for d in DOCS[:BATCH]][0]
+    y0 = svc.result(rid0).yhat
+    rep = svc.reload_from_checkpoint(str(tmp_path))
+    assert not rep["ok"] and rep["epoch"] == 0
+    st = svc.stats()
+    assert st["reloads_rejected"] == 1 and st["model_epoch"] == 0
+    again = svc.submit(DOCS[0])
+    assert svc.result(again).from_cache          # cache NOT invalidated
+    assert svc.result(again).yhat == y0
+
+
+def test_mislabelled_manifest_rejected(tmp_path):
+    save_checkpoint(str(tmp_path), 4, MODELS_B)
+    mislabel_manifest(str(tmp_path), 4, 99)
+    svc = make_service()
+    rep = svc.reload_from_checkpoint(str(tmp_path), step=4)
+    assert not rep["ok"] and "mislabelled" in rep["reason"]
+
+
+def test_chain_count_mismatch_rejected(tmp_path):
+    half = jax.tree.map(lambda x: x[: M // 2], MODELS_B)
+    save_checkpoint(str(tmp_path), 1, half)
+    svc = make_service()
+    rep = svc.reload_from_checkpoint(str(tmp_path))
+    assert not rep["ok"] and "chains" in rep["reason"]
+    assert svc.stats()["model_epoch"] == 0
+
+
+def test_missing_checkpoint_rejected(tmp_path):
+    svc = make_service()
+    rep = svc.reload_from_checkpoint(str(tmp_path))
+    assert not rep["ok"] and "no checkpoint" in rep["reason"]
+
+
+def test_reload_quarantines_unhealthy_chains(tmp_path):
+    """A checkpoint with one poisoned chain still swaps in — degraded:
+    the bad chain is quarantined at screen time, survivors serve."""
+    save_checkpoint(str(tmp_path), 2,
+                    poison_model_table(MODELS_B, 0, "bad_rowsum"))
+    svc = make_service()
+    rep = svc.reload_from_checkpoint(str(tmp_path))
+    assert rep["ok"] and rep["quarantined_chains"] == [0]
+    st = svc.stats()
+    assert st["alive_chains"] == M - 1
+    rid = svc.submit(DOCS[0])
+    svc.drain()
+    assert np.isfinite(svc.result(rid).yhat)
+
+
+def test_reload_all_chains_unhealthy_rejected(tmp_path):
+    bad = MODELS_B
+    for c in range(M):
+        bad = poison_model_table(bad, c, "nan_phi")
+    save_checkpoint(str(tmp_path), 6, bad)
+    svc = make_service()
+    rep = svc.reload_from_checkpoint(str(tmp_path))
+    assert not rep["ok"] and rep["reason"] == "all_chains_unhealthy"
+    rid = svc.submit(DOCS[0])
+    svc.drain()
+    assert np.isfinite(svc.result(rid).yhat)     # old model still serves
+
+
+# ------------------------------------------------ deterministic overload
+
+def test_burst_overload_admission_bounds_latency():
+    """Open-loop burst replay under a virtual clock (zero real
+    sleeping, bit-reproducible): WITH admission control + deadlines
+    the served p99 stays bounded near the deadline and overload is
+    shed; WITHOUT, every request is eventually served but tail latency
+    blows past the bound."""
+    d = 0.5                                      # seconds per dispatch
+    deadline = 2.0
+    trace = burst_trace(0, CFG.vocab_size, MAXLEN, base_rate=16.0,
+                        burst_rate=320.0, n_steady=24, n_burst=128,
+                        n_tail=24)
+
+    def run(**kw):
+        clock = VirtualClock()
+        svc = make_service(auto_flush=False, cache_results=False,
+                           clock=clock, **kw)
+        inject_dispatch_delay(svc, d)
+        replay_open_loop(svc, trace, clock)
+        lat = [r.latency_s for r in svc._results.values()
+               if r.status == STATUS_OK]
+        shed = sum(1 for r in svc._results.values()
+                   if r.status != STATUS_OK)
+        return np.percentile(lat, 99), shed / len(svc._results), svc
+
+    p99_admit, shed_admit, svc_a = run(max_pending=2 * BATCH,
+                                       default_deadline_s=deadline)
+    p99_open, shed_open, _ = run()
+    assert shed_open == 0.0                      # baseline serves all …
+    assert p99_open > p99_admit                  # … but with a worse tail
+    assert p99_admit <= deadline + 2 * d         # bounded by policy
+    assert shed_admit > 0.0                      # overload went somewhere
+    st = svc_a.stats()
+    assert st["expired"] + st["shed_queue_full"] > 0
+
+
+def test_burst_replay_is_deterministic():
+    trace = burst_trace(3, CFG.vocab_size, MAXLEN, base_rate=8.0,
+                        burst_rate=64.0, n_steady=8, n_burst=32, n_tail=8)
+    outs = []
+    for _ in range(2):
+        clock = VirtualClock()
+        svc = make_service(auto_flush=False, cache_results=False,
+                           clock=clock, max_pending=BATCH,
+                           default_deadline_s=1.0)
+        inject_dispatch_delay(svc, 0.25)
+        replay_open_loop(svc, trace, clock)
+        outs.append({rid: (r.status, r.yhat) for rid, r in
+                     svc._results.items()})
+    assert outs[0].keys() == outs[1].keys()
+    for rid in outs[0]:
+        s0, y0 = outs[0][rid]
+        s1, y1 = outs[1][rid]
+        assert s0 == s1
+        assert (y0 == y1) or (np.isnan(y0) and np.isnan(y1))
+
+
+# ------------------------------------------------------- observability
+
+def test_stats_surface_robustness_counters():
+    svc = make_service()
+    st = svc.stats()
+    for key in ("queue_depth", "shed_queue_full", "shed_rate_limit",
+                "expired", "rejected_invalid", "dispatch_quarantines",
+                "load_quarantines", "reloads_ok", "reloads_rejected",
+                "model_epoch", "ckpt_step", "alive_chains",
+                "chain_health", "drain_timeouts"):
+        assert key in st
+    assert st["model_epoch"] == 0 and st["alive_chains"] == M
+    assert len(st["chain_health"]) == M
+    assert all(h == [] for h in st["chain_health"])
+
+
+def test_describe_reports_robustness_policy():
+    svc = make_service(max_pending=32, default_deadline_s=0.5,
+                       rate_limit_per_s=100.0)
+    rob = svc.describe()["robustness"]
+    assert rob["max_pending"] == 32
+    assert rob["default_deadline_s"] == 0.5
+    assert rob["rate_limit_per_s"] == 100.0
+    assert rob["robust_checks"] is True
+    assert "earliest-deadline" in rob["scheduling"]
