@@ -6,7 +6,7 @@ figure/table or perf artifact.
   kernels  per-kernel µs/call
   roofline  aggregated dry-run roofline table (if artifacts exist)
   opt-in extras (--only): ablation, slda_predict, slda_train,
-  slda_parallel, slda_ragged, slda_robust, slda_serving,
+  slda_parallel, slda_ragged, slda_robust, slda_elastic, slda_serving,
   slda_serving_robust — the sLDA perf suites (quick shapes
   unless --full; headline A/B rows printed; run each bench module's
   own __main__ to write the JSON artifacts).
@@ -104,6 +104,19 @@ def _bench_slda_robust(args):
           f"degraded_mse_guard_ok={r['degraded_mse_guard_ok']}")
 
 
+def _bench_slda_elastic(args):
+    from . import bench_slda_elastic
+    r = bench_slda_elastic.run(quick=not args.full)["results"]
+    print(f"slda_elastic_async_ckpt,{r['async_ckpt_s'] * 1e6:.0f},"
+          f"async_vs_sync={r['async_vs_sync_frac']};"
+          f"async_ok={r['async_ckpt_overhead_ok']};"
+          f"kill_bitwise_ok={r['kill_device_survivors_bitwise_ok']};"
+          f"retrace0_ok={r['zero_retraces_across_repack_ok']};"
+          f"resume_bitwise_ok={r['preempt_resume_bitwise_ok']};"
+          f"rounds_lost={r['preempt_rounds_lost']};"
+          f"degraded_mse_guard_ok={r['degraded_mse_guard_ok']}")
+
+
 def _bench_slda_serving(args):
     from . import bench_slda_serving
     r = bench_slda_serving.run(quick=not args.full)["results"]
@@ -152,6 +165,7 @@ BENCHES = {
     "slda_parallel": (_bench_slda_parallel, False),
     "slda_ragged": (_bench_slda_ragged, False),
     "slda_robust": (_bench_slda_robust, False),
+    "slda_elastic": (_bench_slda_elastic, False),
     "slda_serving": (_bench_slda_serving, False),
     "slda_serving_robust": (_bench_slda_serving_robust, False),
     "roofline": (_bench_roofline, True),

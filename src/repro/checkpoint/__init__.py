@@ -1,8 +1,10 @@
 """Fault-tolerant checkpointing for communication-free chains."""
 from .store import (save_checkpoint, restore_checkpoint, restore_chain,
                     latest_step, list_chains, read_manifest,
-                    restore_elastic, CheckpointManager)
+                    restore_elastic, sweep_stale, CheckpointManager,
+                    AsyncCheckpointManager, CheckpointNotFoundError)
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "restore_chain",
            "latest_step", "list_chains", "read_manifest",
-           "restore_elastic", "CheckpointManager"]
+           "restore_elastic", "sweep_stale", "CheckpointManager",
+           "AsyncCheckpointManager", "CheckpointNotFoundError"]

@@ -290,10 +290,17 @@ class ChainSupervisor:
         self._fault_hook = fault_hook
         self._init = jax.jit(lambda p, k: p.init_states(k))
         self._run_round = jax.jit(self._round_fn)
+        #: times the round function was TRACED (not called) — a Python
+        #: side effect inside the traced body, so steady-state rounds
+        #: leave it untouched and an elastic repack can assert "zero
+        #: retraces" by watching this stay constant (the same trick the
+        #: serving plan cache uses)
+        self.round_traces = 0
 
     # ---- one compiled round: EM scan with the composed hook inside
     def _round_fn(self, plan, keys, state, alive, it0):
         health, fault_hook = self.health, self._fault_hook
+        self.round_traces += 1          # trace-time only — see __init__
 
         def hook(st, it, status):
             bits = jnp.zeros_like(status)
@@ -312,9 +319,18 @@ class ChainSupervisor:
         """Per-round per-chain keys: fold the chain's RESTART EPOCH in
         first, then the round index — a restarted chain's lane moves to
         a distinct counter stream and never deterministically replays
-        the sweeps that led to the failure."""
-        return jax.vmap(lambda k, e: jax.random.fold_in(
-            jax.random.fold_in(k, e), rnd))(base, jnp.asarray(epoch))
+        the sweeps that led to the failure.
+
+        `rnd` may be a scalar (every chain at the same logical round —
+        the supervisor's wall-aligned loop) or an [M] array of PER-CHAIN
+        round indices — the elastic runner's catch-up path, where a
+        chain restored after device loss replays ITS OWN round-r stream
+        while the survivors advance; fold_in(k, r) bits are identical
+        either way, so the two cases are bitwise-interchangeable."""
+        m = base.shape[0]
+        rnd_arr = jnp.broadcast_to(jnp.asarray(rnd, jnp.int32), (m,))
+        return jax.vmap(lambda k, e, r: jax.random.fold_in(
+            jax.random.fold_in(k, e), r))(base, jnp.asarray(epoch), rnd_arr)
 
     def _restart_chain(self, state, c, base, epoch, events):
         """Restore chain c alone from the latest checkpoint; a corrupt or
@@ -341,6 +357,65 @@ class ChainSupervisor:
         return jax.tree.map(lambda x, xc: x.at[c].set(xc), state,
                             chain_state)
 
+    # ---- reusable pieces (the elastic runtime drives these directly) --
+
+    def make_round_plan(self, r_iters: int) -> ExecutionPlan:
+        """A plan for one round of `r_iters` EM iterations.  Same corpus
+        and backend → same jit cache entry for every same-sized round."""
+        return ExecutionPlan(
+            corpus=self.plan.corpus,
+            cfg=dataclasses.replace(self.cfg, n_iters=r_iters),
+            backend=self.plan.backend)
+
+    def run_round(self, round_plan, keys, state, alive, boundary_off):
+        """One compiled round; returns (state, status [M] uint32 on
+        host).  The ONLY host sync per round is the status read."""
+        state, status = self._run_round(
+            round_plan, keys, state, jnp.asarray(alive, jnp.float32),
+            boundary_off)
+        return state, np.asarray(jax.device_get(status), np.uint32)
+
+    def _apply_recovery(self, state, status_np, *, alive, epoch, restarts,
+                        grace, base, events):
+        """Apply the recovery policy to one round's status vector.
+        Mutates the host-side bookkeeping arrays (alive/epoch/restarts/
+        grace) in place and returns the possibly-patched state; the
+        caller owns the per-round grace decrement."""
+        recovery = self.recovery
+        for c in range(len(status_np)):
+            bits = int(status_np[c])
+            if grace[c] > 0:
+                # a chain restarted from a checkpoint lags the
+                # ensemble by up to one round — its worse-but-
+                # converging MSE is expected, not divergence
+                bits &= ~SOFT_FAULTS
+            if not alive[c] or bits == 0 or not (bits & ~F_STRAGGLER):
+                continue
+            restartable = (bool(bits & HARD_FAULTS)
+                           and restarts[c] < recovery.max_restarts
+                           and self._manager is not None)
+            if restartable:
+                wait = recovery.backoff_s(int(restarts[c]))
+                if wait > 0:
+                    time.sleep(wait)
+                state = self._restart_chain(state, c, base, epoch, events)
+                restarts[c] += 1
+                epoch[c] += 1
+                grace[c] = 2    # caller decrements → one full round
+            else:
+                alive[c] = False
+                events.append({"chain": c, "action": "quarantine",
+                               "status": describe_status(bits)})
+        return state
+
+    def _check_min_alive(self, alive, latched):
+        if alive.mean() < self.recovery.min_alive_frac:
+            raise EnsembleHealthError(
+                f"only {int(alive.sum())}/{len(alive)} chains alive "
+                f"(min_alive_frac={self.recovery.min_alive_frac}); "
+                f"latched status: "
+                f"{[describe_status(int(s)) for s in latched]}")
+
     def train(self, keys):
         """Supervised chain-batched training from per-chain keys [M].
         Returns (GibbsState, SLDAModel, SupervisorReport) — state/models
@@ -364,51 +439,20 @@ class ChainSupervisor:
         for rnd, r_iters in enumerate(self._round_sizes):
             if self._manager is not None:
                 self._manager.maybe_save(it_done, state)
-            round_plan = ExecutionPlan(
-                corpus=plan.corpus,
-                cfg=dataclasses.replace(self.cfg, n_iters=r_iters),
-                backend=plan.backend)
-            state, status = self._run_round(
+            round_plan = self.make_round_plan(r_iters)
+            state, status_np = self.run_round(
                 round_plan, self._fold_keys(base, epoch, rnd), state,
-                jnp.asarray(alive, jnp.float32), boundary_off)
-            status_np = np.asarray(jax.device_get(status), np.uint32)
+                alive, boundary_off)
             events = []
-            for c in range(m):
-                bits = int(status_np[c])
-                if grace[c] > 0:
-                    # a chain restarted from a checkpoint lags the
-                    # ensemble by up to one round — its worse-but-
-                    # converging MSE is expected, not divergence
-                    bits &= ~SOFT_FAULTS
-                if not alive[c] or bits == 0 or not (bits & ~F_STRAGGLER):
-                    continue
-                restartable = (bool(bits & HARD_FAULTS)
-                               and restarts[c] < recovery.max_restarts
-                               and self._manager is not None)
-                if restartable:
-                    wait = recovery.backoff_s(int(restarts[c]))
-                    if wait > 0:
-                        time.sleep(wait)
-                    state = self._restart_chain(state, c, base, epoch,
-                                                events)
-                    restarts[c] += 1
-                    epoch[c] += 1
-                    grace[c] = 2    # decremented below → one full round
-                else:
-                    alive[c] = False
-                    events.append({"chain": c, "action": "quarantine",
-                                   "status": describe_status(bits)})
+            state = self._apply_recovery(
+                state, status_np, alive=alive, epoch=epoch,
+                restarts=restarts, grace=grace, base=base, events=events)
             grace = np.maximum(grace - 1, 0)
             latched |= status_np
             history.append({"round": rnd, "em_iters_done": it_done + r_iters,
                             "status": [int(s) for s in status_np],
                             "events": events})
-            if alive.mean() < recovery.min_alive_frac:
-                raise EnsembleHealthError(
-                    f"only {int(alive.sum())}/{m} chains alive "
-                    f"(min_alive_frac={recovery.min_alive_frac}); "
-                    f"latched status: "
-                    f"{[describe_status(int(s)) for s in latched]}")
+            self._check_min_alive(alive, latched)
             boundary_off += round_plan.n_boundaries()
             it_done += r_iters
         models = plan._export(state)

@@ -378,6 +378,91 @@ def slda_serve_report(args):
     return report
 
 
+def slda_elastic_report(args):
+    """Print what the elastic ensemble runtime would do for an M-chain
+    run over the given device pool — the initial chain placement, the
+    round/deadline policy, and the checkpoint/staleness contract — so
+    the membership protocol is visible before paying for a run (the
+    elastic twin of --slda-plan; DESIGN.md §Elastic-training).  Pure
+    bookkeeping: nothing is trained or compiled here."""
+    from repro.core import SLDAConfig
+    from repro.launch.elastic import ElasticConfig, compute_placement
+
+    cfg = SLDAConfig(n_topics=args.slda_topics, vocab_size=args.slda_vocab,
+                     length_buckets=args.slda_buckets,
+                     sweeps_per_launch=args.slda_spl,
+                     use_pallas=args.slda_pallas)
+    el = ElasticConfig(
+        round_iters=args.slda_round_iters,
+        async_ckpt=not args.slda_sync_ckpt,
+        ckpt_every=args.slda_ckpt_every,
+        deadline_s=args.slda_elastic_deadline_s or None,
+        straggle_rounds=args.slda_straggle_rounds,
+        speculative_replace=args.slda_speculative)
+    if cfg.n_iters % el.round_iters:
+        raise SystemExit(f"--slda-round-iters {el.round_iters} must "
+                         f"divide n_iters {cfg.n_iters}")
+    m, ndev = args.slda_chains, args.slda_devices
+    n_rounds = cfg.n_iters // el.round_iters
+    placement = compute_placement(range(m), range(ndev))
+    report = {
+        "chains": m,
+        "devices": ndev,
+        "placement": {str(d): list(cs) for d, cs in placement.items()},
+        "rounds": {"n_rounds": n_rounds,
+                   "round_iters": el.round_iters,
+                   "deadline_s": el.deadline_s,
+                   "straggle_rounds": el.straggle_rounds,
+                   "speculative_replace": el.speculative_replace},
+        "checkpointing": {"mode": "async" if el.async_ckpt else "sync",
+                          "ckpt_every_rounds": el.ckpt_every,
+                          "keep_checkpoints": el.keep_checkpoints,
+                          "max_resume_rewind_rounds": el.ckpt_every,
+                          "catch_up": el.catch_up},
+    }
+    why = [
+        f"placement: {m} chains balanced over {ndev} devices "
+        f"({[len(v) for v in placement.values()]} per device); chains "
+        "never communicate, so placement is pure bookkeeping — the "
+        "compiled [M]-wide round is placement-blind and repack after "
+        "device loss/join NEVER retraces",
+        f"rounds: n_iters={cfg.n_iters} split into {n_rounds} EM rounds "
+        f"of {el.round_iters} iters; membership changes, deadline "
+        "checks, and checkpoints all land on round boundaries — inside "
+        "a round the schedule is exactly the single-run schedule, so "
+        "per-chain streams are bit-identical to a fresh run with the "
+        "surviving layout",
+        "deadlines: "
+        + (f"round deadline {el.deadline_s}s on the virtual clock; a "
+           f"device that misses it has its chains flagged F_STRAGGLER "
+           f"(latched in the status word), and {el.straggle_rounds} "
+           "consecutive misses evict the device from the pool"
+           if el.deadline_s else
+           "no round deadline (--slda-elastic-deadline-s to set one; "
+           "stragglers then only stretch the round)")
+        + ("; speculative_replace ON — a flagged device's chains move "
+           "to the least-loaded on-time device at the next boundary, "
+           "state untouched" if el.speculative_replace else ""),
+        f"checkpointing: {'ASYNC double-buffered' if el.async_ckpt else 'synchronous'} "
+        f"writer every {el.ckpt_every} round(s), keep last "
+        f"{el.keep_checkpoints}; a new snapshot is not accepted until "
+        "the previous one is durable, so resume after preempt/crash "
+        f"rewinds at most {el.ckpt_every} round(s) (bounded staleness); "
+        "SIGTERM drains with one final synchronous save",
+        "recovery: device loss restores victims from the newest durable "
+        "step (in-flight write flushed first so all victims see the "
+        "same step)"
+        + (" and replays them forward per-chain to the surviving "
+           "chains' round — catch-up keys fold (chain, epoch, round), "
+           "so the replayed stream is bitwise the original"
+           if el.catch_up else "; catch_up OFF — victims quarantine "
+           "instead of replaying"),
+    ]
+    report["why"] = why
+    print(json.dumps(report, indent=1))
+    return report
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -398,6 +483,37 @@ def main():
                          "service's slot layout + cached plan for the "
                          "given traffic shape (see slda_serve_report) "
                          "and exit")
+    ap.add_argument("--slda-elastic", action="store_true",
+                    help="print the elastic ensemble runtime's chain "
+                         "placement, round-deadline policy, and "
+                         "checkpoint/staleness contract (see "
+                         "slda_elastic_report) and exit")
+    ap.add_argument("--slda-devices", type=int, default=4,
+                    help="--slda-elastic: size of the initial device "
+                         "pool")
+    ap.add_argument("--slda-round-iters", type=int, default=2,
+                    help="--slda-elastic: Gibbs iters per EM round "
+                         "(must divide n_iters; membership changes, "
+                         "deadlines, and checkpoints land on round "
+                         "boundaries)")
+    ap.add_argument("--slda-ckpt-every", type=int, default=1,
+                    help="--slda-elastic: checkpoint cadence in rounds "
+                         "(= the resume-rewind bound)")
+    ap.add_argument("--slda-sync-ckpt", action="store_true",
+                    help="--slda-elastic: block the round loop on "
+                         "checkpoint writes instead of the async "
+                         "double-buffered writer")
+    ap.add_argument("--slda-elastic-deadline-s", type=float, default=0.0,
+                    help="--slda-elastic: round deadline on the "
+                         "virtual clock (0 = none; misses flag "
+                         "F_STRAGGLER, repeats evict the device)")
+    ap.add_argument("--slda-straggle-rounds", type=int, default=2,
+                    help="--slda-elastic: consecutive deadline misses "
+                         "before a device is evicted from the pool")
+    ap.add_argument("--slda-speculative", action="store_true",
+                    help="--slda-elastic: move a flagged device's "
+                         "chains to the least-loaded on-time device "
+                         "at the next boundary")
     ap.add_argument("--slda-batch-docs", type=int, default=32,
                     help="--slda-serve: slots per micro-batch")
     ap.add_argument("--slda-max-pending", type=int, default=128,
@@ -431,6 +547,9 @@ def main():
         return
     if args.slda_serve:
         slda_serve_report(args)
+        return
+    if args.slda_elastic:
+        slda_elastic_report(args)
         return
 
     if args.all:

@@ -1,10 +1,12 @@
 """Deterministic chaos-engineering harness for the chain ensemble."""
-from .faults import (FaultPlan, VirtualClock, burst_trace, inject,
-                     inject_dispatch_delay, mislabel_manifest, no_faults,
-                     poison, poison_model_table, random_fault_plan,
+from .faults import (ElasticEvent, FaultPlan, VirtualClock, burst_trace,
+                     inject, inject_dispatch_delay, mislabel_manifest,
+                     no_faults, poison, poison_model_table,
+                     random_elastic_events, random_fault_plan,
                      replay_open_loop, truncate_chain_file)
 
-__all__ = ["FaultPlan", "VirtualClock", "burst_trace", "inject",
-           "inject_dispatch_delay", "mislabel_manifest", "no_faults",
-           "poison", "poison_model_table", "random_fault_plan",
+__all__ = ["ElasticEvent", "FaultPlan", "VirtualClock", "burst_trace",
+           "inject", "inject_dispatch_delay", "mislabel_manifest",
+           "no_faults", "poison", "poison_model_table",
+           "random_elastic_events", "random_fault_plan",
            "replay_open_loop", "truncate_chain_file"]

@@ -269,6 +269,73 @@ def burst_trace(seed: int, vocab: int, max_len: int, *,
     return out
 
 
+# ------------------------------------------------------- elastic-pool faults
+#
+# The elastic runtime (launch/elastic.py, DESIGN.md §Elastic-training)
+# schedules chains onto a DYNAMIC device pool; its failure classes are
+# environment events at round granularity — a device vanishing, a
+# preemption notice, a device running slow — not state corruption (the
+# chains themselves stay healthy; that is the whole point of
+# communication-free elasticity).  Events are plain data on the round
+# timeline, applied host-side at round boundaries, so a chaos run is a
+# pure function of (seed, event list) and replays byte-identically.
+
+class ElasticEvent(NamedTuple):
+    """One environment event for the elastic runner's chaos timeline.
+
+    kind      — "device_loss" (device leaves the pool; its chains
+                restore from the last durable checkpoint, or are
+                quarantined when no checkpoint dir exists),
+                "preempt"     (SIGTERM-equivalent: drain checkpoints
+                and exit resumable at the NEXT round boundary),
+                "straggle"    (the device runs `delay_s` slow for
+                `rounds` consecutive rounds — correct, merely late),
+                "device_join" (a device joins the pool; chains repack
+                over the grown pool at the boundary).
+    at_round  — 0-based wall round at whose START the event applies.
+    device    — pool index it targets (ignored for "preempt").
+    delay_s   — extra simulated seconds per round ("straggle" only).
+    rounds    — how many consecutive rounds the straggle lasts.
+    """
+
+    kind: str
+    at_round: int
+    device: int = 0
+    delay_s: float = 0.0
+    rounds: int = 1
+
+
+_ELASTIC_KINDS = ("device_loss", "preempt", "straggle", "device_join")
+
+
+def random_elastic_events(seed: int, *, n_rounds: int, n_devices: int,
+                          n_events: int = 2,
+                          kinds=("device_loss", "straggle")) -> list:
+    """Seed-driven elastic chaos: `n_events` events drawn over the round
+    timeline.  Same seed → same event list (numpy Philox), so a chaos
+    failure names a seed that replays it exactly.  Device-loss events
+    never drain the pool below one device."""
+    for k in kinds:
+        if k not in _ELASTIC_KINDS:
+            raise ValueError(
+                f"kinds must be among {_ELASTIC_KINDS}, got {k!r}")
+    rng = np.random.default_rng(seed)
+    events, losses = [], 0
+    for _ in range(n_events):
+        kind = kinds[int(rng.integers(0, len(kinds)))]
+        if kind == "device_loss" and losses >= n_devices - 1:
+            kind = "straggle"       # keep ≥1 device alive
+        if kind == "device_loss":
+            losses += 1
+        events.append(ElasticEvent(
+            kind=kind,
+            at_round=int(rng.integers(1, max(n_rounds, 2))),
+            device=int(rng.integers(0, n_devices)),
+            delay_s=float(rng.uniform(0.5, 3.0)),
+            rounds=int(rng.integers(1, 4))))
+    return sorted(events, key=lambda e: e.at_round)
+
+
 def replay_open_loop(service, trace, clock: VirtualClock):
     """Replay an arrival `trace` through `service` open-loop under a
     `VirtualClock` (discrete-event simulation — the service MUST be

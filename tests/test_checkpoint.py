@@ -7,9 +7,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import (CheckpointManager, latest_step, list_chains,
-                              restore_chain, restore_checkpoint,
-                              restore_elastic, save_checkpoint)
+from repro.checkpoint import (AsyncCheckpointManager, CheckpointManager,
+                              CheckpointNotFoundError, latest_step,
+                              list_chains, read_manifest, restore_chain,
+                              restore_checkpoint, restore_elastic,
+                              save_checkpoint, sweep_stale)
 
 
 def make_state(key, chains=4, d=8):
@@ -188,3 +190,197 @@ def test_manager_gc_keeps_last_k(tmp_path):
         mgr.maybe_save(step, state)
     steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
     assert steps == ["step_00000004", "step_00000005"]
+
+
+# ---------------------------------------------------------------------------
+# stale-garbage sweep (satellite: kill-mid-save leaves no orphans forever)
+# ---------------------------------------------------------------------------
+
+def test_kill_mid_save_garbage_swept_by_next_save(tmp_path):
+    """A kill -9 mid-save (simulated by planting the tmp dir a dead
+    writer would leave) must be reclaimed by the next manager GC — the
+    old behaviour left `.tmp_*` dirs forever."""
+    state = make_state(jax.random.PRNGKey(20), chains=2)
+    # a dead process's orphan: not in this process's _ACTIVE_TMP registry
+    orphan = os.path.join(str(tmp_path), ".tmp_deadwriter")
+    os.makedirs(orphan)
+    with open(os.path.join(orphan, "chain_000.npz"), "wb") as f:
+        f.write(b"half-written")
+
+    mgr = CheckpointManager(str(tmp_path), interval=1, keep=2)
+    assert not os.path.exists(orphan)       # swept on init
+    os.makedirs(orphan)                      # dies again mid-run
+    mgr.maybe_save(1, state)                 # next save's GC sweeps it
+    assert not os.path.exists(orphan)
+    assert not any(d.startswith(".tmp_") for d in os.listdir(tmp_path))
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_sweep_recovers_aside_when_publish_never_happened(tmp_path):
+    """Crash in the rename-aside → publish window: the aside dir holds
+    the only complete copy of that step; the sweep must rename it BACK
+    so the old checkpoint survives."""
+    state = make_state(jax.random.PRNGKey(21), chains=2)
+    save_checkpoint(str(tmp_path), 3, state)
+    final = os.path.join(str(tmp_path), "step_00000003")
+    aside = os.path.join(str(tmp_path), ".prev_step_00000003")
+    os.replace(final, aside)                # simulate crash mid-window
+    assert latest_step(str(tmp_path)) is None
+    out = sweep_stale(str(tmp_path))
+    assert out["recovered"] == [3]
+    assert latest_step(str(tmp_path)) == 3
+    restored, _ = restore_checkpoint(str(tmp_path), 3, state)
+    assert trees_equal(state, restored)
+
+
+def test_crash_during_overwrite_keeps_old_version(tmp_path, monkeypatch):
+    """Regression for the overwrite crash window: the old code did
+    `rmtree(final)` then `os.replace(tmp, final)` — a crash between the
+    two lost BOTH versions of the step.  Now a crash at any point in the
+    publish leaves either the old or the new version restorable."""
+    import repro.checkpoint.store as store
+    old = make_state(jax.random.PRNGKey(22), chains=2)
+    new = make_state(jax.random.PRNGKey(23), chains=2)
+    save_checkpoint(str(tmp_path), 7, old)
+
+    # crash exactly at the publish rename (after old moved aside)
+    real_replace = os.replace
+
+    def dying_replace(src, dst):
+        if os.path.basename(src).startswith(".tmp_"):
+            raise OSError("killed at publish")
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(store.os, "replace", dying_replace)
+    with pytest.raises(OSError, match="killed at publish"):
+        save_checkpoint(str(tmp_path), 7, new)
+    monkeypatch.undo()
+
+    # the step is momentarily invisible, but the sweep restores the OLD
+    # version — nothing is lost
+    sweep_stale(str(tmp_path))
+    assert latest_step(str(tmp_path)) == 7
+    restored, _ = restore_checkpoint(str(tmp_path), 7, old)
+    assert trees_equal(old, restored)
+
+    # and an undisturbed overwrite publishes the NEW version cleanly
+    save_checkpoint(str(tmp_path), 7, new)
+    restored, _ = restore_checkpoint(str(tmp_path), 7, new)
+    assert trees_equal(new, restored)
+    assert not any(d.startswith((".tmp_", ".prev_"))
+                   for d in os.listdir(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# typed missing-step error (satellite: no more bare FileNotFoundError)
+# ---------------------------------------------------------------------------
+
+def test_missing_step_raises_typed_error_naming_available(tmp_path):
+    state = make_state(jax.random.PRNGKey(24), chains=2)
+    save_checkpoint(str(tmp_path), 10, state)
+    save_checkpoint(str(tmp_path), 20, state)
+    for fn in (lambda: list_chains(str(tmp_path), 15),
+               lambda: read_manifest(str(tmp_path), 15),
+               lambda: restore_checkpoint(str(tmp_path), 15, state),
+               lambda: restore_elastic(str(tmp_path), 15, state,
+                                       lambda i: None)):
+        with pytest.raises(CheckpointNotFoundError) as ei:
+            fn()
+        assert ei.value.step == 15
+        assert ei.value.available_steps == [10, 20]
+        assert "15" in str(ei.value) and "[10, 20]" in str(ei.value)
+    # still a FileNotFoundError for legacy except clauses
+    with pytest.raises(FileNotFoundError):
+        read_manifest(str(tmp_path), 15)
+
+
+def test_missing_manifest_raises_typed_error(tmp_path):
+    """A step dir whose manifest vanished (partial rmtree) is as good as
+    missing — readers get the same typed error, not a bare ENOENT."""
+    state = make_state(jax.random.PRNGKey(25), chains=2)
+    save_checkpoint(str(tmp_path), 5, state)
+    os.remove(os.path.join(str(tmp_path), "step_00000005", "manifest.json"))
+    with pytest.raises(CheckpointNotFoundError):
+        read_manifest(str(tmp_path), 5)
+
+
+# ---------------------------------------------------------------------------
+# AsyncCheckpointManager (tentpole: background writer, bounded staleness)
+# ---------------------------------------------------------------------------
+
+def test_async_manager_publishes_identical_bits_to_sync(tmp_path):
+    state = make_state(jax.random.PRNGKey(26), chains=3)
+    sync_dir, async_dir = str(tmp_path / "sync"), str(tmp_path / "async")
+    sm = CheckpointManager(sync_dir, interval=1, keep=3)
+    am = AsyncCheckpointManager(async_dir, interval=1, keep=3)
+    for step in (1, 2, 3):
+        sm.maybe_save(step, state)
+        am.maybe_save(step, state)
+    am.close()
+    assert latest_step(async_dir) == latest_step(sync_dir) == 3
+    a, _ = restore_checkpoint(async_dir, 3, state)
+    s, _ = restore_checkpoint(sync_dir, 3, state)
+    assert trees_equal(a, s)
+
+
+def test_async_manager_bounded_staleness(tmp_path, monkeypatch):
+    """With the writer artificially slow, `maybe_save(r)` must block
+    until step r-1 is DURABLE before accepting step r — so the published
+    frontier never lags the loop by more than one save."""
+    import time
+    import repro.checkpoint.store as store
+    state = make_state(jax.random.PRNGKey(27), chains=2)
+    real_save = store.save_checkpoint
+
+    def slow_save(*a, **kw):
+        time.sleep(0.15)
+        return real_save(*a, **kw)
+
+    am = AsyncCheckpointManager(str(tmp_path), interval=1, keep=5)
+    monkeypatch.setattr(store, "save_checkpoint", slow_save)
+    try:
+        for step in (1, 2, 3, 4):
+            am.maybe_save(step, state)
+            durable = latest_step(str(tmp_path)) or 0
+            assert durable >= step - 1, (
+                f"staleness bound violated: accepted step {step} with "
+                f"durable frontier at {durable}")
+        am.flush()
+        assert latest_step(str(tmp_path)) == 4
+        assert am.stats["waits"] >= 1       # the bound actually bit
+    finally:
+        am.close()
+
+
+def test_async_manager_snapshot_isolated_from_later_mutation(tmp_path):
+    """The host snapshot taken at maybe_save time is what gets written,
+    even if the caller's buffers are donated/overwritten immediately
+    after — the double-buffer contract."""
+    state = {"x": np.arange(8, dtype=np.float32).reshape(2, 4)}
+    am = AsyncCheckpointManager(str(tmp_path), interval=1, keep=3)
+    am.maybe_save(1, state)
+    state["x"] += 100.0                     # mutate AFTER enqueue
+    am.close()
+    tmpl = {"x": jnp.zeros((2, 4), jnp.float32)}
+    restored, _ = restore_checkpoint(str(tmp_path), 1, tmpl)
+    assert np.array_equal(np.asarray(restored["x"]),
+                          np.arange(8, dtype=np.float32).reshape(2, 4))
+
+
+def test_async_manager_writer_error_surfaces(tmp_path, monkeypatch):
+    import repro.checkpoint.store as store
+    state = make_state(jax.random.PRNGKey(28), chains=2)
+    am = AsyncCheckpointManager(str(tmp_path), interval=1, keep=3)
+
+    def boom(*a, **kw):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(store, "save_checkpoint", boom)
+    am.maybe_save(1, state)
+    with pytest.raises(OSError, match="disk full"):
+        am.flush()
+    monkeypatch.undo()
+    # after the error is surfaced once, the manager is usable again
+    am.maybe_save(2, state)
+    am.close()
+    assert latest_step(str(tmp_path)) == 2

@@ -1,0 +1,463 @@
+"""Elastic runtime tests: dynamic placement, device loss, stragglers,
+preemption/resume, async checkpointing (DESIGN.md §Elastic-training).
+
+The load-bearing claims are all BITWISE, not approximate — the paper's
+communication-free design makes elasticity exact, and these tests hold
+it to that:
+
+  * survivors of a device loss == the same lanes of an undisturbed run,
+  * restored victims, after catch-up, == the undisturbed run entirely,
+  * resume after preemption == the undisturbed run entirely,
+  * async checkpointing == sync checkpointing, bit for bit,
+  * and a repack never retraces the compiled round (placement is host
+    metadata outside every jit cache key).
+"""
+import os
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.supervisor import F_KILLED, F_STRAGGLER
+from repro.core.types import SLDAConfig, partition
+from repro.core.plan import build_schedule
+from repro.checkpoint import (latest_step, read_manifest,
+                              restore_checkpoint, sweep_stale)
+from repro.data import make_slda_corpus, train_test_split
+from repro.launch.elastic import (DevicePool, ElasticConfig, ElasticRunner,
+                                  PreemptionSignal, compute_placement,
+                                  elastic_run_average)
+from repro.testing import ElasticEvent, VirtualClock, random_elastic_events
+
+M = 4
+EL = ElasticConfig(round_iters=2)       # 6 iters → R = 3 logical rounds
+ROOT = jax.random.PRNGKey(7)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    c, _ = make_slda_corpus(jax.random.PRNGKey(0), 48, 32, 4, 8)
+    return train_test_split(c, 32)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return SLDAConfig(n_topics=4, vocab_size=32, n_iters=6,
+                      n_pred_burnin=2, n_pred_samples=2)
+
+
+@pytest.fixture(scope="module")
+def shards(corpus, cfg):
+    train, _ = corpus
+    return build_schedule(partition(train, M), cfg)
+
+
+@pytest.fixture(scope="module")
+def undisturbed(shards, cfg):
+    """Reference run: no events, no checkpoints — what every elastic
+    scenario must be bitwise-equal (or lane-equal) to."""
+    r = ElasticRunner(shards, cfg, devices=2, elastic=EL)
+    state, models, rep = r.train(ROOT)
+    assert rep.alive.all() and (rep.progress == rep.logical_rounds).all()
+    return state, models, rep
+
+
+def leaves_equal(a, b, idx=None):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        x, y = np.asarray(x), np.asarray(y)
+        if idx is not None:
+            x, y = x[idx], y[idx]
+        if not np.array_equal(x, y):
+            return False
+    return True
+
+
+# ----------------------------------------------------- placement / membership
+
+def test_compute_placement_balanced_and_deterministic():
+    p = compute_placement(range(7), ["a", "b", "c"])
+    assert p == {"a": (0, 1, 2), "b": (3, 4), "c": (5, 6)}
+    assert p == compute_placement([6, 5, 4, 3, 2, 1, 0], ["a", "b", "c"])
+    sizes = [len(v) for v in p.values()]
+    assert max(sizes) - min(sizes) <= 1
+    with pytest.raises(ValueError):
+        compute_placement([0, 1], [])
+
+
+def test_device_pool_membership_and_epoch():
+    pool = DevicePool(3)
+    assert pool.ids == (0, 1, 2) and pool.epoch == 0
+    assert pool.lose(1) and pool.ids == (0, 2) and pool.epoch == 1
+    assert not pool.lose(1)                  # already gone → no-op
+    assert pool.join(5) and pool.ids == (0, 2, 5) and pool.epoch == 2
+    assert not pool.join(5)
+    pool.lose(0), pool.lose(2)
+    with pytest.raises(RuntimeError, match="last pool member"):
+        pool.lose(5)
+
+
+def test_preemption_signal_latches_sigterm():
+    sig = PreemptionSignal().install()
+    try:
+        assert not sig.triggered
+        os.kill(os.getpid(), signal.SIGTERM)
+        assert sig.triggered
+        sig.clear()
+        assert not sig.triggered
+    finally:
+        sig.uninstall()
+
+
+# ------------------------------------------------------------- determinism
+
+def test_clean_run_is_deterministic_and_traces_once(shards, cfg,
+                                                    undisturbed):
+    state0, _, rep0 = undisturbed
+    r = ElasticRunner(shards, cfg, devices=2, elastic=EL)
+    state, _, rep = r.train(ROOT)
+    assert leaves_equal(state, state0)
+    assert rep.round_traces == 1
+    assert rep.wall_rounds == rep.logical_rounds == 3
+
+
+def test_placement_is_bitwise_irrelevant(shards, cfg, undisturbed):
+    """The same ensemble on 1, 2, or 4 devices produces identical bits —
+    chain streams depend on chain ids, never on layout."""
+    state0, _, _ = undisturbed
+    for ndev in (1, 4):
+        r = ElasticRunner(shards, cfg, devices=ndev, elastic=EL)
+        state, _, _ = r.train(ROOT)
+        assert leaves_equal(state, state0), f"devices={ndev} changed bits"
+
+
+# ------------------------------------------------------------- device loss
+
+def test_device_loss_without_ckpt_quarantines_exactly(shards, cfg,
+                                                      undisturbed):
+    state0, _, _ = undisturbed
+    ev = [ElasticEvent("device_loss", at_round=2, device=1)]
+    r = ElasticRunner(shards, cfg, devices=2, elastic=EL, events=ev)
+    state, _, rep = r.train(ROOT)
+    victims = np.nonzero(~rep.alive)[0]
+    assert len(victims) == 2                 # device 1 held chains 2, 3
+    assert all(rep.status[v] & F_KILLED for v in victims)
+    survivors = np.nonzero(rep.alive)[0]
+    # the exactness dividend: surviving lanes are bit-identical to the
+    # run in which the loss never happened
+    assert leaves_equal(state, state0, idx=survivors)
+    assert rep.round_traces == 1             # repack never retraced
+
+
+def test_device_loss_at_boundary_restores_with_zero_rewind(shards, cfg,
+                                                           tmp_path,
+                                                           undisturbed):
+    """With the default save-every-round cadence, a boundary device loss
+    restores its victims from the round that JUST published — no rewind,
+    no catch-up rounds, and the result is still bitwise-undisturbed."""
+    state0, _, _ = undisturbed
+    ev = [ElasticEvent("device_loss", at_round=2, device=1)]
+    r = ElasticRunner(shards, cfg, devices=2, elastic=EL, events=ev,
+                      ckpt_dir=str(tmp_path))
+    state, _, rep = r.train(ROOT)
+    assert rep.alive.all()
+    assert (rep.progress == rep.logical_rounds).all()
+    assert rep.wall_rounds == rep.logical_rounds     # zero rounds lost
+    assert leaves_equal(state, state0)
+    assert rep.round_traces == 1
+
+
+def test_device_loss_with_sparse_ckpt_catches_up_bitwise(corpus, shards,
+                                                         cfg, tmp_path):
+    """With checkpoints every 2 rounds, a loss at an unsaved boundary
+    rewinds the victims to the last durable round; per-chain round keys
+    replay the lost rounds exactly, so after catch-up the whole ensemble
+    is bitwise-equal to the undisturbed run."""
+    import dataclasses
+    cfg8 = dataclasses.replace(cfg, n_iters=8)       # R = 4
+    ref = ElasticRunner(shards, cfg8, devices=2, elastic=EL)
+    state0, _, rep0 = ref.train(ROOT)
+    assert rep0.wall_rounds == 4
+
+    el = ElasticConfig(round_iters=2, ckpt_every=2)
+    ev = [ElasticEvent("device_loss", at_round=3, device=1)]
+    r = ElasticRunner(shards, cfg8, devices=2, elastic=el, events=ev,
+                      ckpt_dir=str(tmp_path))
+    state, _, rep = r.train(ROOT)
+    assert rep.alive.all()
+    assert (rep.progress == rep.logical_rounds).all()
+    # victims rewound 3 → 2 (last durable), so one catch-up round
+    assert rep.wall_rounds == 5
+    # full bitwise equality, victims included
+    assert leaves_equal(state, state0)
+    assert rep.round_traces == 1             # catch-up reuses the round fn
+
+
+def test_device_join_repacks_without_retrace(shards, cfg, undisturbed):
+    state0, _, _ = undisturbed
+    ev = [ElasticEvent("device_join", at_round=1, device=9)]
+    r = ElasticRunner(shards, cfg, devices=2, elastic=EL, events=ev)
+    state, _, rep = r.train(ROOT)
+    assert 9 in r.pool
+    assert leaves_equal(state, state0)
+    assert rep.round_traces == 1
+
+
+# ------------------------------------ property: random elastic scenarios
+
+@pytest.mark.parametrize("seed,ndev,cpd", [(0, 2, 1), (1, 2, 2),
+                                           (2, 4, 2)])
+def test_repack_property_random_scenarios(corpus, cfg, seed, ndev, cpd):
+    """Seed-driven form of the repack property (runs without
+    hypothesis): for random (loss round, pool size, chains/device), the
+    survivors of a device loss are bitwise-equal to the undisturbed
+    run's same lanes."""
+    train, _ = corpus
+    m = ndev * cpd
+    shards = build_schedule(partition(train, m), cfg)
+    ref = ElasticRunner(shards, cfg, devices=ndev, elastic=EL)
+    state0, _, _ = ref.train(ROOT)
+
+    rng = np.random.default_rng(seed)
+    ev = [ElasticEvent("device_loss",
+                       at_round=int(rng.integers(1, 3)),
+                       device=int(rng.integers(0, ndev)))]
+    r = ElasticRunner(shards, cfg, devices=ndev, elastic=EL, events=ev)
+    state, _, rep = r.train(ROOT)
+    survivors = np.nonzero(rep.alive)[0]
+    assert 0 < len(survivors) < m
+    assert leaves_equal(state, state0, idx=survivors)
+    assert rep.round_traces == 1
+
+
+try:  # the rest of this module must still run without hypothesis
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+    given = settings = lambda *a, **k: (lambda f: f)
+
+    class st:  # noqa: N801 — placeholder so the decorators below parse
+        sampled_from = integers = data = staticmethod(lambda *a, **k: None)
+
+
+@pytest.mark.slow
+@pytest.mark.skipif(not _HAVE_HYPOTHESIS, reason=(
+    "property tests need hypothesis (pip install -r requirements-dev.txt)"))
+@settings(max_examples=8, deadline=None)
+@given(ndev=st.sampled_from([2, 4]), cpd=st.sampled_from([1, 2]),
+       data=st.data())
+def test_repack_property_hypothesis(ndev, cpd, data):
+    """Hypothesis form of the repack property over (device-loss round,
+    pool size, M, chains_per_device)."""
+    c, _ = make_slda_corpus(jax.random.PRNGKey(0), 48, 32, 4, 8)
+    train, _ = train_test_split(c, 32)
+    cfg = SLDAConfig(n_topics=4, vocab_size=32, n_iters=6,
+                     n_pred_burnin=2, n_pred_samples=2)
+    m = ndev * cpd
+    shards = build_schedule(partition(train, m), cfg)
+    ref = ElasticRunner(shards, cfg, devices=ndev, elastic=EL)
+    state0, _, _ = ref.train(ROOT)
+    ev = [ElasticEvent("device_loss",
+                       at_round=data.draw(st.integers(1, 2)),
+                       device=data.draw(st.integers(0, ndev - 1)))]
+    r = ElasticRunner(shards, cfg, devices=ndev, elastic=EL, events=ev)
+    state, _, rep = r.train(ROOT)
+    survivors = np.nonzero(rep.alive)[0]
+    assert leaves_equal(state, state0, idx=survivors)
+    assert rep.round_traces == 1
+
+
+# ------------------------------------------------------- preempt / resume
+
+def test_preempt_then_resume_is_bitwise_transparent(shards, cfg, tmp_path,
+                                                    undisturbed):
+    state0, _, _ = undisturbed
+    ev = [ElasticEvent("preempt", at_round=2)]
+    r1 = ElasticRunner(shards, cfg, devices=2, elastic=EL, events=ev,
+                       ckpt_dir=str(tmp_path))
+    _, _, rep1 = r1.train(ROOT)
+    assert rep1.preempted
+    # ≤1 round lost: the drain published everything completed so far
+    assert latest_step(str(tmp_path)) >= rep1.wall_rounds - 1
+
+    r2 = ElasticRunner(shards, cfg, devices=2, elastic=EL,
+                       ckpt_dir=str(tmp_path))
+    state2, _, rep2 = r2.train(ROOT, resume=True)
+    assert rep2.resume_round == rep1.wall_rounds
+    # resume re-ran only the remaining rounds...
+    assert rep2.wall_rounds == rep2.logical_rounds
+    # ...and the result is indistinguishable from never preempting
+    assert leaves_equal(state2, state0)
+
+
+def test_preempt_during_flush_leaves_zero_corrupt_steps(shards, cfg,
+                                                        tmp_path,
+                                                        monkeypatch,
+                                                        undisturbed):
+    """Chaos: the preemption notice lands while the async writer is
+    mid-flush AND the writer dies partway through a later write.  Every
+    step the store publishes must still restore cleanly (atomic publish
+    is untouched by the async path) and the run must resume bitwise."""
+    import repro.checkpoint.store as store
+    state0, _, _ = undisturbed
+    calls = {"n": 0}
+    real_savez = store.np.savez
+
+    def flaky_savez(f, **kw):
+        calls["n"] += 1
+        if calls["n"] == 6:                 # die inside a later write
+            raise OSError("killed mid-flush")
+        return real_savez(f, **kw)
+
+    monkeypatch.setattr(store.np, "savez", flaky_savez)
+    ev = [ElasticEvent("preempt", at_round=2)]
+    r1 = ElasticRunner(shards, cfg, devices=2, elastic=EL, events=ev,
+                       ckpt_dir=str(tmp_path))
+    try:
+        r1.train(ROOT)
+    except OSError:
+        pass                                # the writer's death surfaced
+    monkeypatch.undo()
+
+    # zero corrupt steps: whatever got published is whole
+    sweep_stale(str(tmp_path))
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path)
+                   if d.startswith("step_"))
+    assert steps, "nothing durable survived the chaos"
+    helper = ElasticRunner(shards, cfg, devices=2, elastic=EL)
+    ks = jax.vmap(jax.random.split)(jax.vmap(
+        lambda c: jax.random.fold_in(ROOT, c))(jnp.arange(M)))
+    tmpl, _ = helper.sup._init(helper.sup.plan, ks[:, 0])
+    for s in steps:
+        read_manifest(str(tmp_path), s)     # validates, raises if torn
+        restore_checkpoint(str(tmp_path), s, tmpl)
+    assert not any(d.startswith(".tmp_") for d in os.listdir(tmp_path))
+
+    # and the run still resumes to the undisturbed answer
+    r2 = ElasticRunner(shards, cfg, devices=2, elastic=EL,
+                       ckpt_dir=str(tmp_path))
+    state2, _, _ = r2.train(ROOT, resume=True)
+    assert leaves_equal(state2, state0)
+
+
+# ------------------------------------------------------------- stragglers
+
+def test_straggler_flag_then_escalate_to_eviction(shards, cfg,
+                                                  undisturbed):
+    state0, _, _ = undisturbed
+    clock = VirtualClock()
+    ev = [ElasticEvent("straggle", at_round=1, device=1, delay_s=5.0,
+                       rounds=3)]
+    el = ElasticConfig(round_iters=2, device_round_s=1.0, deadline_s=2.0,
+                       straggle_rounds=2)
+    r = ElasticRunner(shards, cfg, devices=2, elastic=el, events=ev,
+                      clock=clock)
+    state, _, rep = r.train(ROOT)
+    # flag on the slow device's chains only — and flag ONLY: slow is not
+    # dead, nothing restores, nothing quarantines, bits don't move
+    assert [bool(s & F_STRAGGLER) for s in rep.status] == [False, False,
+                                                           True, True]
+    assert rep.alive.all()
+    assert leaves_equal(state, state0)
+    # escalation after straggle_rounds consecutive misses evicts the
+    # DEVICE; its chains repack onto the survivor
+    assert r.pool.ids == (0,)
+    acts = [e["action"] for h in rep.history for e in h["events"]]
+    assert acts.count("deadline_miss") == 2
+    assert "straggler_evicted" in acts
+    assert rep.round_traces == 1
+    # the virtual clock accumulated the straggler's delay
+    assert rep.sim_seconds > rep.wall_rounds * el.device_round_s
+
+
+def test_speculative_replace_moves_slowest_devices_chains(shards, cfg):
+    clock = VirtualClock()
+    ev = [ElasticEvent("straggle", at_round=1, device=0, delay_s=9.0,
+                       rounds=3)]
+    el = ElasticConfig(round_iters=2, device_round_s=1.0, deadline_s=2.0,
+                       straggle_rounds=5, speculative_replace=True)
+    r = ElasticRunner(shards, cfg, devices=2, elastic=el, events=ev,
+                      clock=clock)
+    _, _, rep = r.train(ROOT)
+    spec = [e for h in rep.history for e in h["events"]
+            if e["action"] == "speculative_replace"]
+    assert spec and spec[0]["device"] == 0 and spec[0]["target"] == 1
+    assert r.pool.ids == (0, 1)             # nothing evicted
+    assert r.placement[1] == (0, 1, 2, 3)   # all chains moved off dev 0
+
+
+def test_random_elastic_events_deterministic():
+    a = random_elastic_events(5, n_rounds=6, n_devices=3, n_events=4)
+    b = random_elastic_events(5, n_rounds=6, n_devices=3, n_events=4)
+    assert a == b
+    losses = sum(e.kind == "device_loss" for e in a)
+    assert losses <= 2                      # never drains the pool
+    with pytest.raises(ValueError):
+        random_elastic_events(0, n_rounds=4, n_devices=2,
+                              kinds=("nope",))
+
+
+# --------------------------------------------------- async checkpointing
+
+def test_async_and_sync_checkpointing_identical_bits(shards, cfg,
+                                                     tmp_path):
+    rs = ElasticRunner(shards, cfg, devices=2,
+                       elastic=ElasticConfig(round_iters=2,
+                                             async_ckpt=False),
+                       ckpt_dir=str(tmp_path / "sync"))
+    ra = ElasticRunner(shards, cfg, devices=2,
+                       elastic=ElasticConfig(round_iters=2,
+                                             async_ckpt=True),
+                       ckpt_dir=str(tmp_path / "async"))
+    state_s, _, _ = rs.train(ROOT)
+    state_a, _, _ = ra.train(ROOT)
+    assert leaves_equal(state_a, state_s)
+    s_steps = latest_step(str(tmp_path / "sync"))
+    a_steps = latest_step(str(tmp_path / "async"))
+    assert s_steps == a_steps == 3
+    # the published checkpoints are byte-equivalent too: same manifests,
+    # same arrays in every chain file
+    for step in (2, 3):
+        ms = read_manifest(str(tmp_path / "sync"), step)
+        ma = read_manifest(str(tmp_path / "async"), step)
+        assert ms == ma
+        for chain in range(M):
+            name = f"step_{step:08d}/chain_{chain:03d}.npz"
+            with np.load(tmp_path / "sync" / name) as a, \
+                    np.load(tmp_path / "async" / name) as b:
+                assert sorted(a.files) == sorted(b.files)
+                for k in a.files:
+                    assert np.array_equal(a[k], b[k]), (step, chain, k)
+
+
+def test_manifest_extra_carries_resume_bookkeeping(shards, cfg, tmp_path):
+    r = ElasticRunner(shards, cfg, devices=2, elastic=EL,
+                      ckpt_dir=str(tmp_path))
+    r.train(ROOT)
+    extra = read_manifest(str(tmp_path), 3)["extra"]
+    assert extra["progress"] == [3, 3, 3, 3]
+    assert extra["alive"] == [True] * 4
+    assert extra["wall_round"] == 3
+    assert extra["pool"] == [0, 1]
+
+
+# ----------------------------------------------------------- end-to-end
+
+def test_elastic_run_average_end_to_end(corpus, cfg, tmp_path):
+    train, test = corpus
+    ev = [ElasticEvent("device_loss", at_round=2, device=0)]
+    yhat, rep = elastic_run_average(
+        jax.random.PRNGKey(3), train, test, cfg, M, devices=2,
+        rule="simple", elastic=EL, events=ev, ckpt_dir=str(tmp_path))
+    assert np.isfinite(np.asarray(yhat)).all()
+    assert np.asarray(yhat).shape == (test.n_docs,)
+    assert rep.alive.all()                  # restored + caught up
+    assert (rep.progress == rep.logical_rounds).all()
+
+
+def test_round_iters_must_divide_n_iters(shards, cfg):
+    with pytest.raises(ValueError, match="must divide"):
+        ElasticRunner(shards, cfg, devices=2,
+                      elastic=ElasticConfig(round_iters=4))
