@@ -1,0 +1,255 @@
+"""Dense vs sparse two-stage sampler A/B across topic counts (ISSUE 10).
+
+The dense per-token draw is one [DB, T] x [T, T] prefix matmul —
+O(T^2) MACs per token-block — so its cost explodes with T while the
+number of topics a WORD actually occupies stays small on peaked
+corpora.  The sparse two-stage draw (DESIGN.md §Sparse-sampler) spends
+cap^2 + T*blk + nb^2 MACs instead: ~10K at T=512/cap=32 vs ~262K dense.
+
+This bench measures `train_chain` end-to-end (the full fused stochastic-
+EM loop, both modes plan-routed via `SLDAConfig.sampler_mode`) at
+T ∈ {32, 128, 512} on a PEAKED-φ corpus (`phi_concentration` < 1: each
+topic's mass on a handful of words — the published regime of sparse
+LDA samplers).  Both modes run back-to-back interleaved in one process;
+a 3-seed mean train-MSE guard asserts the sparse draw costs no model
+quality (it is distributionally exact — any gap is seed noise, bounded
+here).
+
+It reports TWO speedup columns, because the backend it runs on is not
+the backend the sparse draw targets:
+
+  * `sparse_speedup` — measured wall-clock on this machine's jnp path.
+    XLA-CPU strength-reduces the dense `p @ triu(T)` draw into a
+    linear-cost running sum (profiled: the whole dense draw is ~5% of a
+    T=512 launch, and dense launch time scales ~linearly in T), so the
+    O(T²) contraction the sparse mode eliminates DOES NOT EXIST on this
+    backend and dense wins at every T measured here.
+  * `modeled_speedup` — the fig6/fig7 `modeled_s` idiom applied to the
+    draw: per-token cycles on an explicit-contraction accelerator (MXU
+    prefix matmuls + VPU element-wise pipeline, the cost model of the
+    pallas kernel path).  THIS is the asymptotic shape the mode was
+    built for — sparse >= 1.5x at T=512, >= 1.2x at T=128, and dense
+    WINS at T=32 (a 32x32 contraction is already cheap; the bucketing
+    overhead only amortizes at large T) — and why dense remains the
+    default mode on every backend until the explicit-contraction path
+    is the one running.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_slda_sparse [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import platform
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (SLDAConfig, counts_from_assignments, init_state,
+                        topic_occupancy, train_chain)
+from repro.data import make_slda_corpus
+
+
+MXU_MACS = 128 * 128   # systolic MACs/cycle (pallas guide: 128x128 MXU)
+VPU_LANES = 8 * 128    # element-wise lanes/cycle (8x128 VPU)
+VEC_PASSES = 10        # [DB, T] element-wise passes per token in the
+                       # fused weight pipeline (count gather + own-token
+                       # fixup + alpha/beta/nt normalisers + supervised
+                       # exp factor + product), IDENTICAL in both modes
+
+
+def modeled_cell(n_topics: int, cap: int):
+    """Per-token draw cost on an explicit-contraction accelerator.
+
+    Dense draw = one T² -MAC triu contraction per token; sparse draw =
+    cap² (bucket prefix) + T·blk (fine residual prefixes) + nb² (coarse
+    residual prefix) MACs, plus a T-lane residual mask and 2·cap bucket
+    gathers on the VPU.  Modeled cycles = vector-lanes/VPU + MACs/MXU —
+    the cost model of the pallas kernel path, where the contraction is
+    explicit instead of strength-reduced away (see module docstring)."""
+    from repro.kernels.sparse import residual_blocks
+    cap = min(cap, n_topics)
+    blk, nb = residual_blocks(n_topics)
+    d_macs = n_topics * n_topics
+    s_macs = cap * cap + n_topics * blk + nb * nb
+    d_cyc = VEC_PASSES * n_topics / VPU_LANES + d_macs / MXU_MACS
+    s_cyc = ((VEC_PASSES * n_topics + n_topics + 2 * cap) / VPU_LANES
+             + s_macs / MXU_MACS)
+    return {"draw_macs_dense": d_macs, "draw_macs_sparse": s_macs,
+            "modeled_speedup": round(d_cyc / s_cyc, 2)}
+
+
+def _timed_round_robin(fns, argsets, reps):
+    """Min-of-`reps`, INTERLEAVED round-robin (see bench_slda_train.py:
+    this container shows ~2x wall-clock interference drift on the scale
+    of minutes; interleaving exposes every config to the same load and
+    the min discards the spikes).  argsets is per-fn here — each T cell
+    owns its corpus."""
+    outs = []
+    for fn, args in zip(fns, argsets):     # warm-up (compile excluded)
+        outs.append(fn(*args))
+        jax.block_until_ready(outs[-1])
+    best = [float("inf")] * len(fns)
+    for _ in range(reps):
+        for i, (fn, args) in enumerate(zip(fns, argsets)):
+            t0 = time.time()
+            out = fn(*args)
+            jax.block_until_ready(out)
+            best[i] = min(best[i], time.time() - t0)
+    return best, outs
+
+
+def run(quick: bool = False, reps: int = 3):
+    if quick:   # harness smoke for CI — tiny shapes, one rep
+        topic_grid, d, n, w, n_iters, reps = [8, 16], 16, 12, 200, 4, 1
+        seeds = (7,)
+    else:
+        topic_grid, d, n, w, n_iters = [32, 128, 512], 64, 48, 1000, 8
+        seeds = (7, 17, 18)
+
+    base = SLDAConfig(vocab_size=w, rho=0.25, n_iters=n_iters,
+                      sweeps_per_launch=4)
+    jit_train = jax.jit(train_chain, static_argnums=(2,))
+    cells, fns, argsets = [], [], []
+    for T in topic_grid:
+        # peaked phi: most words live in FEW topics — the regime the
+        # per-word topic index exploits
+        corpus, _ = make_slda_corpus(jax.random.PRNGKey(0), d, w, T, n,
+                                     rho=0.25, phi_concentration=0.15)
+        cfg_d = dataclasses.replace(base, n_topics=T, sampler_mode="dense")
+        cfg_s = dataclasses.replace(base, n_topics=T,
+                                    sampler_mode="sparse")
+        # converged-state occupancy estimate for the report: one short
+        # dense run, then count occupied topics per word
+        st = init_state(jax.random.PRNGKey(1), corpus, cfg_d)
+        occ = topic_occupancy(jnp.swapaxes(st.ntw, -1, -2))
+        cells.append({"n_topics": T,
+                      "word_topic_occ_init_mean": round(
+                          float(occ.mean()), 1),
+                      "sparse_topic_cap": min(base.sparse_topic_cap, T),
+                      **modeled_cell(T, base.sparse_topic_cap)})
+        for cfg in (cfg_d, cfg_s):
+            fns.append((lambda c: lambda k, corp: jit_train(k, corp, c))(
+                cfg))
+            argsets.append((jax.random.PRNGKey(seeds[0]), corpus))
+
+    times, outs = _timed_round_robin(fns, argsets, reps=reps)
+
+    def mean_mse(fn, corpus, first):
+        mses = [first] + [
+            float(fn(jax.random.PRNGKey(s), corpus)[1].train_mse)
+            for s in seeds[1:]]
+        return sum(mses) / len(mses)
+
+    grid, guard_ok = [], True
+    for i, cell in enumerate(cells):
+        t_dense, t_sparse = times[2 * i], times[2 * i + 1]
+        mse_d = mean_mse(fns[2 * i], argsets[2 * i][1],
+                         float(outs[2 * i][1].train_mse))
+        mse_s = mean_mse(fns[2 * i + 1], argsets[2 * i + 1][1],
+                         float(outs[2 * i + 1][1].train_mse))
+        # the sparse draw is distributionally exact: its mean fit must
+        # stay within seed noise of dense (3-seed spread is ~20%)
+        cell_ok = mse_s <= 1.25 * mse_d
+        guard_ok = guard_ok and cell_ok
+        grid.append({**cell,
+                     "dense_s": round(t_dense, 4),
+                     "sparse_s": round(t_sparse, 4),
+                     "sparse_speedup": round(t_dense / t_sparse, 2),
+                     "train_mse_dense": round(mse_d, 4),
+                     "train_mse_sparse": round(mse_s, 4),
+                     "mse_guard_ok": cell_ok})
+
+    results = {
+        "speedup_by_topics": {str(g["n_topics"]): g["sparse_speedup"]
+                              for g in grid},
+        "modeled_speedup_by_topics": {
+            str(g["n_topics"]): g["modeled_speedup"] for g in grid},
+        "mse_guard_ok": guard_ok,
+        "dense_wins_small_t": grid[0]["sparse_speedup"] < 1.0,
+        "routing_note": (
+            "dense stays the default sampler_mode: it is bit-frozen to "
+            "every prior release, wins at small T on every cost model, "
+            "and wins at ALL T on this machine's XLA-CPU jnp path (the "
+            "backend strength-reduces the dense triu draw to linear "
+            "cost — see methodology).  The sparse mode targets the "
+            "explicit per-token contraction of the pallas kernel path "
+            "at large T (modeled_speedup_by_topics); opt in via "
+            "SLDAConfig.sampler_mode"),
+    }
+    if not quick:
+        # the acceptance shape, on the cost model the mode targets
+        m = results["modeled_speedup_by_topics"]
+        t_lo, t_mid, t_hi = (str(t) for t in topic_grid)
+        results["modeled_shape_ok"] = bool(
+            m[t_hi] >= 1.5 and m[t_mid] >= 1.2 and m[t_lo] < 1.0)
+
+    return {
+        "benchmark": "slda sparse two-stage sampler A/B (ISSUE 10)",
+        "methodology": (
+            f"train_chain ({n_iters} EM sweeps, sweeps_per_launch=4, "
+            f"supervised) on synthetic PEAKED-phi sLDA corpora "
+            f"[D={d}, W={w}, N={n}, phi_concentration=0.15] at "
+            f"T in {topic_grid}; dense vs sparse differ ONLY in "
+            "SLDAConfig.sampler_mode (both plan-routed through the same "
+            "fused launches; sparse adds the launch-frozen per-word "
+            "topic index + two-stage draw, DESIGN.md §Sparse-sampler).  "
+            f"MIN of {reps} INTERLEAVED round-robin reps in ONE process, "
+            "jit-compiled per distinct static cfg, warm-up excluded.  "
+            f"MSE guard: mean train MSE over {len(seeds)} seeds; sparse "
+            "must stay within 25% of dense per cell (the draw is "
+            "distributionally exact, so any gap is seed noise).  jnp "
+            f"fast path (use_pallas=False) on {jax.default_backend()}.  "
+            "CAVEAT on the measured column: profiling shows XLA-CPU "
+            "strength-reduces the dense p@triu(T) draw to a linear-cost "
+            "running sum (dense launch time scales ~linearly in T; the "
+            "draw is ~5% of a T=512 launch), so the O(T^2) contraction "
+            "the sparse mode removes is absent on this backend and its "
+            "index-gather overhead makes dense win every measured cell. "
+            " The modeled_speedup column prices the same per-token work "
+            "on an explicit-contraction accelerator (MXU 128x128 MACs + "
+            "VPU 8x128 lanes per cycle, the pallas-kernel cost model): "
+            "cycles = vector_lanes/1024 + draw_MACs/16384 per token, "
+            f"with VEC_PASSES={VEC_PASSES} shared weight-pipeline "
+            "passes in both modes — the fig6/fig7 modeled_s idiom."),
+        "platform": {"backend": jax.default_backend(),
+                     "machine": platform.machine(),
+                     "jax": jax.__version__},
+        "shapes": {"d": d, "vocab": w, "doc_len": n, "n_iters": n_iters,
+                   "topic_grid": topic_grid, "phi_concentration": 0.15,
+                   "sparse_topic_cap": base.sparse_topic_cap},
+        "grid": grid,
+        "results": results,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny harness smoke for CI (does not overwrite "
+                         "the committed artifact)")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--out", default=None,
+                    help="output path (default BENCH_slda_sparse.json, "
+                         "or /tmp/BENCH_slda_sparse_quick.json with "
+                         "--quick)")
+    args = ap.parse_args(argv)
+    out = args.out or ("/tmp/BENCH_slda_sparse_quick.json" if args.quick
+                       else "BENCH_slda_sparse.json")
+    payload = run(quick=args.quick, reps=args.reps)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    r = payload["results"]
+    print(f"measured speedup by T: {r['speedup_by_topics']}; "
+          f"modeled (contraction path): {r['modeled_speedup_by_topics']} "
+          f"(mse guard {'ok' if r['mse_guard_ok'] else 'FAILED'}, "
+          f"dense wins small T: {r['dense_wins_small_t']}, "
+          f"modeled shape ok: {r.get('modeled_shape_ok', 'n/a')}); "
+          f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,7 +11,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import SLDAConfig, init_state, phi_hat
+from repro.core import SLDAConfig, init_state, phi_hat, topic_occupancy
 from repro.data import make_slda_corpus
 from repro.kernels import ops
 
@@ -35,6 +35,16 @@ def _tok_rates(us, slot_tokens, real_tokens):
             f"(pad={1 - real_tokens / slot_tokens:.0%})")
 
 
+def _occ_col(ntw):
+    """Per-word topic occupancy of a count table [T, W] — the mean number
+    of topics with N_tw > 0, i.e. the support width the sparse two-stage
+    sampler exploits (DESIGN.md §Sparse-sampler).  Reported on every sLDA
+    perf row so the dense/sparse crossover regime stays visible."""
+    occ = topic_occupancy(jnp.swapaxes(ntw, -1, -2))        # [W]
+    return (f" wocc={float(occ.mean()):.1f}/{ntw.shape[0]}"
+            f"(max={int(occ.max())})")
+
+
 def run():
     rows = []
     key = jax.random.PRNGKey(0)
@@ -55,7 +65,7 @@ def run():
         *a, alpha=cfg.alpha, beta=cfg.beta, rho=cfg.rho, use_pallas=False))
     us = _time(sweep_jnp, *args)
     rows.append(("slda_gibbs_sweep_jnp_64x64", us,
-                 _tok_rates(us, slot_tok, real_tok)))
+                 _tok_rates(us, slot_tok, real_tok) + _occ_col(state.ntw)))
 
     # slda prediction sweeps — fused jnp fast path vs the seed-style
     # per-document vmap (all 25 test-time sweeps, the Weighted Average
@@ -73,7 +83,7 @@ def run():
     rows.append((f"slda_predict_{n_sweeps}sweeps_fused_jnp_64x64",
                  us_fused,
                  _tok_rates(us_fused, slot_tok * n_sweeps,
-                            real_tok * n_sweeps)))
+                            real_tok * n_sweeps) + _occ_col(state.ntw)))
 
     # the same fused sweeps over a HEAVY-TAILED (log-normal) corpus,
     # padded path vs PER-BUCKET launches on the length-bucketed schedule
@@ -98,7 +108,7 @@ def run():
     rows.append((f"slda_predict_{n_sweeps}sweeps_fused_jnp_lognormal"
                  f"_256x128", us_rpad,
                  _tok_rates(us_rpad, float(rag.tokens.size) * n_sweeps,
-                            rreal * n_sweeps)))
+                            rreal * n_sweeps) + _occ_col(rstate.ntw)))
 
     bc = bucket_corpus(rag, 4)
     z0_b = bc.split_padded(rstate.z)

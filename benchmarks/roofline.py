@@ -45,6 +45,10 @@ def load(art_dir="artifacts/dryrun"):
         frac = d.get("real_token_frac", 1.0)
         d["slot_tok_s"] = toks / bound_s if bound_s else 0.0
         d["eff_tok_s"] = d["slot_tok_s"] * frac
+        # per-word topic occupancy (sLDA dryruns report it; blank for the
+        # transformer archs) — the support width that picks dense vs the
+        # sparse two-stage sampler (DESIGN.md §Sparse-sampler)
+        d["word_topic_occ"] = d.get("word_topic_occ", "")
         rows.append(d)
     return rows
 
@@ -52,7 +56,7 @@ def load(art_dir="artifacts/dryrun"):
 def table(rows, keys=("arch", "shape", "multi_pod", "n_chains", "dominant",
                       "t_compute_s", "t_memory_s", "t_memory_lb_s",
                       "t_collective_s", "useful_flop_ratio",
-                      "slot_tok_s", "eff_tok_s",
+                      "slot_tok_s", "eff_tok_s", "word_topic_occ",
                       "roofline_frac", "roofline_frac_fused",
                       "collective_bytes_cross_pod")):
     fmt = lambda v: (f"{v:.3g}" if isinstance(v, float) else str(v))

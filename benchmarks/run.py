@@ -141,6 +141,18 @@ def _bench_slda_serving_robust(args):
           f"degraded_exact_ok={r['degraded_exact_ok']}")
 
 
+def _bench_slda_sparse(args):
+    from . import bench_slda_sparse
+    r = bench_slda_sparse.run(quick=not args.full)["results"]
+    speed = ";".join(f"T{t}={s}x"
+                     for t, s in r["speedup_by_topics"].items())
+    modeled = ";".join(f"T{t}={s}x"
+                       for t, s in r["modeled_speedup_by_topics"].items())
+    print(f"slda_sparse,0,measured:{speed};modeled:{modeled};"
+          f"mse_guard_ok={r['mse_guard_ok']};"
+          f"dense_wins_small_t={r['dense_wins_small_t']}")
+
+
 def _bench_roofline(args):
     try:
         from . import roofline
@@ -168,6 +180,7 @@ BENCHES = {
     "slda_elastic": (_bench_slda_elastic, False),
     "slda_serving": (_bench_slda_serving, False),
     "slda_serving_robust": (_bench_slda_serving_robust, False),
+    "slda_sparse": (_bench_slda_sparse, False),
     "roofline": (_bench_roofline, True),
 }
 

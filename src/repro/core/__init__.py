@@ -2,7 +2,8 @@
 from .types import (BucketedCorpus, Corpus, GibbsState, SLDAConfig,
                     SLDAModel, apply_count_deltas, bucket_corpus,
                     bucket_signature, counts_from_assignments,
-                    devices_support_pallas, partition)
+                    devices_support_pallas, partition, topic_occupancy,
+                    topic_occupancy_index)
 from .gibbs import init_state, sweep, train_chain, zbar, phi_hat
 from .regression import solve_eta, solve_eta_ols
 from .plan import ExecutionPlan, as_bucketed, build_plan, build_schedule
@@ -22,6 +23,7 @@ __all__ = [
     "apply_count_deltas", "bucket_corpus", "bucket_signature",
     "counts_from_assignments",
     "devices_support_pallas", "init_state", "sweep", "train_chain",
+    "topic_occupancy", "topic_occupancy_index",
     "zbar", "phi_hat", "solve_eta", "solve_eta_ols",
     "ExecutionPlan", "as_bucketed", "build_plan", "build_schedule",
     "predict", "simple_average", "weighted_average", "median", "all_dead",

@@ -94,12 +94,18 @@ def sweep(key: jax.Array, corpus: Corpus, state: GibbsState,
     """
     uniforms = jax.random.uniform(key, corpus.tokens.shape)
     inv_len = 1.0 / jnp.maximum(corpus.lengths(), 1.0)
-    if cfg.use_pallas:
+    if cfg.use_pallas or cfg.sampler_mode == "sparse":
+        # sparse mode lives in the kernels layer for BOTH backends: the
+        # two-stage draw against the sweep-frozen topic index is shared
+        # by kernel, jnp twin and oracle (the vmap path below is the
+        # dense-only seed sweep and stays bit-frozen).
         from repro.kernels import ops  # local import: kernels are optional
         z, ndt = ops.slda_gibbs_sweep(
             corpus.tokens, corpus.mask, uniforms, state.z, state.ndt,
             corpus.y, inv_len, state.ntw, state.nt, state.eta,
-            alpha=cfg.alpha, beta=cfg.beta, rho=cfg.rho, supervised=supervised)
+            alpha=cfg.alpha, beta=cfg.beta, rho=cfg.rho, supervised=supervised,
+            use_pallas=cfg.use_pallas, sampler_mode=cfg.sampler_mode,
+            sparse_topic_cap=cfg.sparse_topic_cap)
     else:
         z, ndt = jax.vmap(
             _doc_sweep,

@@ -215,6 +215,8 @@ class ExecutionPlan:
             "real_tokens_per_sweep": int(real),
             "padded_slot_frac": round(1.0 - real / max(src_slots, 1), 4),
             "slot_vs_effective_tok_ratio": round(slot / max(real, 1.0), 3),
+            "sampler_mode": cfg.sampler_mode,
+            "sparse_topic_cap": min(cfg.sparse_topic_cap, cfg.n_topics),
         }
 
     # ---- the ONE chain-batched EM loop -----------------------------
@@ -308,7 +310,8 @@ class ExecutionPlan:
                 b.tokens, b.mask, ub, zb, ndb, b.y, ilb, state.ntw,
                 state.nt, state.eta, alpha=cfg.alpha, beta=cfg.beta,
                 rho=cfg.rho, supervised=True, use_pallas=self.use_pallas,
-                chain_axis=True)
+                chain_axis=True, sampler_mode=cfg.sampler_mode,
+                sparse_topic_cap=cfg.sparse_topic_cap)
             z_new_b.append(z2)
             pieces.append(nd2)
         return z_new_b, bc.merge_docs(pieces)
@@ -333,7 +336,8 @@ class ExecutionPlan:
                 doc_block=self.train_doc_block(b.tokens.shape[1]),
                 use_pallas=self.use_pallas,
                 product_form=cfg.product_form_sweeps, chain_axis=True,
-                ctr_stride=S)
+                ctr_stride=S, sampler_mode=cfg.sampler_mode,
+                sparse_topic_cap=cfg.sparse_topic_cap)
             z_new_b.append(z2)
             pieces.append(nd2)
         rebuild_now = self._rebuild_now(it)
@@ -392,7 +396,9 @@ class ExecutionPlan:
             jnp.swapaxes(state.ntw, 1, 2).reshape(M * W, T), state.nt,
             state.eta, st["chain_of_row"], alpha=cfg.alpha, beta=cfg.beta,
             rho=cfg.rho, vocab_size=W, ctr_stride=S, supervised=True,
-            n_sweeps=n_sweeps, product_form=cfg.product_form_sweeps)
+            n_sweeps=n_sweeps, product_form=cfg.product_form_sweeps,
+            sampler_mode=cfg.sampler_mode,
+            sparse_topic_cap=cfg.sparse_topic_cap)
         z_new_b = _unstair_segments(bc, [unfold(z) for z in z_segs_f])
         ndt = unsort(unfold(ndt_f))
         return self._refresh_and_solve(z_new_b, ndt, state,
@@ -536,7 +542,9 @@ class ExecutionPlan:
                 alpha=cfg.alpha, n_burnin=cfg.n_pred_burnin,
                 n_samples=cfg.n_pred_samples,
                 doc_block=cfg.pred_doc_block,
-                use_pallas=self.use_pallas, chain_axis=True, ctr_stride=S)
+                use_pallas=self.use_pallas, chain_axis=True, ctr_stride=S,
+                sampler_mode=cfg.sampler_mode,
+                sparse_topic_cap=cfg.sparse_topic_cap)
             avgs.append(avg)
         return bc.merge_docs(avgs, d_axis=1)         # [M, D, T] original
 
@@ -580,7 +588,9 @@ class ExecutionPlan:
         avg_f = slda_predict_stair_jnp(
             seg_tok, seg_mask, seg_z0, seg_r0, seg_n0, seeds_f, ndt0_f,
             phi_t, alpha=cfg.alpha, n_burnin=cfg.n_pred_burnin,
-            n_samples=cfg.n_pred_samples, ctr_stride=S)
+            n_samples=cfg.n_pred_samples, ctr_stride=S,
+            sampler_mode=cfg.sampler_mode,
+            sparse_topic_cap=cfg.sparse_topic_cap)
         avg_sorted = jnp.swapaxes(avg_f.reshape(D, M, T), 0, 1)
         return _take_docs(avg_sorted, bc.inv_perm, 1)   # [M, D, T] orig
 

@@ -132,6 +132,28 @@ class SLDAConfig:
                              # decouples the paper's M from the device
                              # count (still zero collectives until the
                              # final prediction gather).
+    sampler_mode: str = "dense"  # per-token categorical draw strategy
+                             # (DESIGN.md §Sparse-sampler): "dense" —
+                             # the seed draw, O(T²) matmul prefix sum
+                             # per token, bit-identical to every prior
+                             # PR; "sparse" — the two-stage draw: a
+                             # sparse bucket over the word's occupied
+                             # topics (per-word index built at launch /
+                             # refresh boundaries, `sparse_topic_cap`
+                             # wide) plus a blocked hierarchical draw
+                             # over the residual mass, distributionally
+                             # exact for ANY index content and
+                             # bitwise-reproducible within the mode
+                             # (kernel ≡ twin ≡ oracle).  One uniform
+                             # per token either way, so `ctr_stride`
+                             # accounting and bucketed/padded parity
+                             # carry over unchanged.
+    sparse_topic_cap: int = 32  # width of the per-word topic index the
+                             # sparse sampler gathers through (top-cap
+                             # occupied topics per word).  Exactness
+                             # never depends on it — overflow mass is
+                             # simply drawn through the residual stage —
+                             # so it is perf-only; clamped to n_topics.
 
     def resolve_backend(self, devices=None) -> str:
         """The ONE backend-routing decision (DESIGN.md §Execution-plan).
@@ -621,3 +643,47 @@ def apply_count_deltas(ntw: Array, nt: Array, tokens: Array, mask: Array,
         return ntw2, nt2
 
     return jax.lax.cond(n_changed <= cap, sparse, dense, None)
+
+
+def topic_occupancy_index(table_t: Array, cap: int):
+    """Per-word top-`cap` occupied-topic index for the sparse sampler.
+
+    `table_t` is any `[..., W, T]` word-major table — `ntw` transposed for
+    training, `phi_t` (or a chain-stacked `[M·W, T]` stair table) for
+    prediction.  Returns `(idx, vmask, occm)`:
+
+      * ``idx``   int32 `[..., W, cap]` — the word's top-`cap` topics by
+        mass (argsort keeps the entries DISTINCT, which is what makes the
+        support split below an identity);
+      * ``vmask`` f32 `[..., W, cap]` — 1 where the indexed entry carries
+        positive mass, 0 for slots past the word's true occupancy;
+      * ``occm``  f32 `[..., W, T]` — the dense 0/1 membership mask of the
+        valid indexed topics.
+
+    The sparse draw splits the exact dense weights p as
+    ``sv = take_along(p, idx)·vmask`` (sparse bucket) and
+    ``rv = p·(1−occm)`` (residual); scatter(sv)+rv == p holds exactly in
+    float32 for ANY index content, so a stale index (built from the
+    launch-frozen table while counts evolve in-launch) changes WHICH
+    bucket serves a topic, never the distribution.  `cap` is perf-only
+    and clamped to T.
+    """
+    *lead, w_dim, t_dim = table_t.shape
+    cap = int(min(cap, t_dim))
+    flat = table_t.reshape((-1, w_dim, t_dim))
+    idx = jnp.argsort(-flat, axis=-1)[..., :cap].astype(jnp.int32)
+    vals = jnp.take_along_axis(flat, idx, axis=-1)
+    vmask = (vals > 0).astype(jnp.float32)
+    b = jnp.arange(flat.shape[0])[:, None, None]
+    w = jnp.arange(w_dim)[None, :, None]
+    # idx entries are distinct per word, so add == set on the zero init
+    occm = jnp.zeros(flat.shape, jnp.float32).at[b, w, idx].add(vmask)
+    shape = tuple(lead) + (w_dim,)
+    return (idx.reshape(shape + (cap,)), vmask.reshape(shape + (cap,)),
+            occm.reshape(shape + (t_dim,)))
+
+
+def topic_occupancy(table_t: Array) -> Array:
+    """Number of positive-mass topics per word (`[..., W]`), for the
+    bench occupancy column and the dry-run why-lines."""
+    return jnp.sum((table_t > 0).astype(jnp.int32), axis=-1)

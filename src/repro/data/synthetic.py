@@ -19,6 +19,7 @@ from repro.core.types import Corpus
 def make_slda_corpus(key: jax.Array, n_docs: int, vocab_size: int,
                      n_topics: int, doc_len: int, *,
                      alpha: float = 0.1, beta: float = 0.01,
+                     phi_concentration: float = 1.0,
                      rho: float = 0.25, eta_scale: float = 2.0,
                      label_type: str = "continuous",
                      var_len: bool = True,
@@ -30,6 +31,14 @@ def make_slda_corpus(key: jax.Array, n_docs: int, vocab_size: int,
     Returns (corpus, true_eta).  Binary labels follow the paper's note: the
     latent continuous response is thresholded at its median (the paper
     models the logit of the label as Gaussian).
+
+    phi_concentration scales the Dirichlet concentration of the topic-word
+    distributions: φ_t ~ Dir(beta · phi_concentration).  1.0 (default) is
+    bit-identical to the historical draw; < 1 gives PEAKED topics — each
+    topic's mass on a handful of words, so each word occurs in few topics
+    (low per-word topic occupancy, the regime where the sparse two-stage
+    sampler wins, DESIGN.md §Sparse-sampler); > 1 flattens toward uniform
+    (high occupancy — dense territory).
 
     doc_len_dist picks the length distribution over [.., doc_len]:
       * "uniform"   — uniform in [doc_len//2, doc_len] when var_len
@@ -43,7 +52,8 @@ def make_slda_corpus(key: jax.Array, n_docs: int, vocab_size: int,
                       (DESIGN.md §Ragged-execution).
     """
     ks = jax.random.split(key, 6)
-    phi = jax.random.dirichlet(ks[0], jnp.full((vocab_size,), beta), (n_topics,))
+    phi = jax.random.dirichlet(
+        ks[0], jnp.full((vocab_size,), beta * phi_concentration), (n_topics,))
     eta = jax.random.normal(ks[1], (n_topics,)) * eta_scale
     theta = jax.random.dirichlet(ks[2], jnp.full((n_topics,), alpha), (n_docs,))
 

@@ -24,6 +24,8 @@ from .slda_train import (slda_train_sweeps_chains_jnp,
                          slda_train_sweeps_chains_pallas,
                          slda_train_sweeps_jnp,
                          slda_train_sweeps_pallas)
+from .sparse import (build_topic_index,  # noqa: F401 (re-export)
+                     sparse_two_stage_draw)
 from .ssd_scan import ssd_scan, ssd_decode_step  # noqa: F401 (re-export)
 
 
@@ -60,7 +62,8 @@ OPT = {
 
 def slda_gibbs_sweep(tokens, mask, uniforms, z, ndt, y, inv_len, ntw, nt,
                      eta, *, alpha, beta, rho, supervised=True,
-                     doc_block=8, use_pallas=True, chain_axis=False):
+                     doc_block=8, use_pallas=True, chain_axis=False,
+                     sampler_mode="dense", sparse_topic_cap=32):
     """Document-parallel sLDA Gibbs sweep. ntw: [T, W] (un-transposed —
     the row-gather [W, T] layout is an internal kernel detail).
 
@@ -74,14 +77,16 @@ def slda_gibbs_sweep(tokens, mask, uniforms, z, ndt, y, inv_len, ntw, nt,
         fn = functools.partial(
             slda_gibbs_sweep, alpha=alpha, beta=beta, rho=rho,
             supervised=supervised, doc_block=doc_block,
-            use_pallas=use_pallas)
+            use_pallas=use_pallas, sampler_mode=sampler_mode,
+            sparse_topic_cap=sparse_topic_cap)
         return jax.vmap(fn)(tokens, mask, uniforms, z, ndt, y, inv_len,
                             ntw, nt, eta)
     ntw_t = ntw.T
     if not use_pallas:
         z2, ndt2 = ref.ref_slda_gibbs_sweep(
             tokens, mask, uniforms, z, ndt, y, inv_len, ntw_t, nt, eta,
-            alpha, beta, rho, supervised)
+            alpha, beta, rho, supervised, sampler_mode=sampler_mode,
+            sparse_topic_cap=sparse_topic_cap)
         return z2, ndt2
     D = tokens.shape[0]
     pad = (-D) % doc_block
@@ -92,7 +97,8 @@ def slda_gibbs_sweep(tokens, mask, uniforms, z, ndt, y, inv_len, ntw, nt,
     z2, ndt2 = slda_gibbs_sweep_pallas(
         tokens, mask, uniforms, z, ndt, y, inv_len, ntw_t, nt, eta,
         alpha=alpha, beta=beta, rho=rho, supervised=supervised,
-        doc_block=doc_block, interpret=_interpret())
+        doc_block=doc_block, interpret=_interpret(),
+        sampler_mode=sampler_mode, sparse_topic_cap=sparse_topic_cap)
     if pad:
         z2, ndt2 = z2[:D], ndt2[:D]
     return z2, ndt2
@@ -104,7 +110,8 @@ def slda_train_sweeps(tokens, mask, z0, ndt0, y, inv_len, ntw, nt, eta,
                       seeds, *, alpha, beta, rho, n_sweeps, supervised=True,
                       doc_block=8, use_pallas=True, tpu_prng=False,
                       unroll=8, product_form=False, chain_axis=False,
-                      ctr_stride=None):
+                      ctr_stride=None, sampler_mode="dense",
+                      sparse_topic_cap=32):
     """`n_sweeps` training Gibbs sweeps in one fused launch per doc block.
 
     ntw: [T, W] (un-transposed — the row-gather [W, T] layout is an
@@ -155,7 +162,8 @@ def slda_train_sweeps(tokens, mask, z0, ndt0, y, inv_len, ntw, nt, eta,
             pad2, (tokens, mask, z0, ndt0, y, inv_len, seeds))
     kw = dict(alpha=alpha, beta=beta, rho=rho, supervised=supervised,
               n_sweeps=n_sweeps, doc_block=doc_block,
-              product_form=product_form, ctr_stride=ctr_stride)
+              product_form=product_form, ctr_stride=ctr_stride,
+              sampler_mode=sampler_mode, sparse_topic_cap=sparse_topic_cap)
     if use_pallas:
         fn = (slda_train_sweeps_chains_pallas if chain_axis
               else slda_train_sweeps_pallas)
@@ -177,7 +185,8 @@ def slda_train_sweeps(tokens, mask, z0, ndt0, y, inv_len, ntw, nt, eta,
 
 def slda_predict_sweeps(tokens, mask, z0, ndt0, phi, seeds, *, alpha,
                         n_burnin, n_samples, doc_block=8, use_pallas=True,
-                        tpu_prng=False, chain_axis=False, ctr_stride=None):
+                        tpu_prng=False, chain_axis=False, ctr_stride=None,
+                        sampler_mode="dense", sparse_topic_cap=32):
     """All `n_burnin + n_samples` test-time Gibbs sweeps in one fused pass.
 
     phi: [T, W] (un-transposed — the row-gather [W, T] layout is an
@@ -206,7 +215,8 @@ def slda_predict_sweeps(tokens, mask, z0, ndt0, phi, seeds, *, alpha,
     """
     phi_t = jnp.swapaxes(phi, -1, -2)
     kw = dict(alpha=alpha, n_burnin=n_burnin, n_samples=n_samples,
-              ctr_stride=ctr_stride)
+              ctr_stride=ctr_stride, sampler_mode=sampler_mode,
+              sparse_topic_cap=sparse_topic_cap)
     if not use_pallas:
         fn = (slda_predict_sweeps_chains_jnp if chain_axis
               else slda_predict_sweeps_jnp)

@@ -11,13 +11,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.mathutil import upper_tri_ones
+from repro.kernels.sparse import build_topic_index, sparse_two_stage_draw
 
 
 # ------------------------------------------------------------- slda_gibbs
 
 def ref_slda_gibbs_sweep(tokens, mask, uniforms, z, ndt, y, inv_len,
                          ntw_t, nt, eta, alpha, beta, rho, supervised: bool,
-                         *, product_form: bool = False):
+                         *, product_form: bool = False,
+                         sampler_mode: str = "dense",
+                         sparse_topic_cap: int = 32, topic_index=None):
     """Document-parallel sLDA Gibbs sweep with sweep-frozen ntw (AD-LDA).
 
     tokens/mask/uniforms/z : [D, N]; ndt [D, T]; y/inv_len [D];
@@ -27,11 +30,22 @@ def ref_slda_gibbs_sweep(tokens, mask, uniforms, z, ndt, y, inv_len,
     product_form=True samples the same categorical from the plain product
     of positives times one Gaussian `exp` (the fused multi-sweep form —
     see slda_train.py module docstring).
+
+    sampler_mode="sparse" keeps the per-token weights p bit-identical
+    and replaces ONLY the draw with the two-stage sparse draw
+    (kernels/sparse.py): the per-word occupancy index is built from the
+    sweep-frozen `ntw_t` (or taken from `topic_index=(idx, vmask, occm)`
+    when a fused caller pins a launch-frozen index), and the draw is
+    distributionally exact for any index content.
     """
     T = ndt.shape[-1]
     W = ntw_t.shape[0]
     topic_iota = jnp.arange(T, dtype=jnp.int32)
     tri_u = upper_tri_ones(T)
+    if sampler_mode == "sparse" and topic_index is None:
+        topic_index = build_topic_index(ntw_t, sparse_topic_cap)
+    s_idx, s_vm, s_om = topic_index if topic_index is not None else (
+        None, None, None)
 
     def doc(tokens_d, mask_d, us_d, z_d, ndt_d, y_d, il_d):
         s0 = jnp.dot(ndt_d, eta)
@@ -57,8 +71,12 @@ def ref_slda_gibbs_sweep(tokens, mask, uniforms, z, ndt, y, inv_len,
                     mu_t = (s + eta) * il_d
                     logp = logp - 0.5 * (y_d - mu_t) ** 2 / rho
                 p = jnp.exp(logp - jnp.max(logp))
-            c = jnp.dot(p, tri_u)    # prefix sums, rounding-matched to kernel
-            z_new = jnp.sum((c < u * c[-1]).astype(jnp.int32))
+            if sampler_mode == "sparse":
+                z_new = sparse_two_stage_draw(p, u, s_idx[w], s_vm[w],
+                                              s_om[w])
+            else:
+                c = jnp.dot(p, tri_u)  # prefix sums, rounding-matched
+                z_new = jnp.sum((c < u * c[-1]).astype(jnp.int32))
             z_new = jnp.where(m > 0, z_new, z_old).astype(jnp.int32)
             new = (topic_iota == z_new).astype(jnp.float32) * m
             return (ndt_d + new, s + eta[z_new] * m), z_new
@@ -75,7 +93,9 @@ def ref_slda_gibbs_sweep(tokens, mask, uniforms, z, ndt, y, inv_len,
 def ref_slda_train_sweeps(tokens, mask, uniforms, z0, ndt0, y, inv_len,
                           ntw_t, nt, eta, alpha, beta, rho,
                           supervised: bool, doc_block: int,
-                          *, product_form: bool = False):
+                          *, product_form: bool = False,
+                          sampler_mode: str = "dense",
+                          sparse_topic_cap: int = 32):
     """Fused multi-sweep TRAINING oracle with EXPLICIT uniforms and the
     per-block delayed-count refresh semantics (DESIGN.md §Train-kernel).
 
@@ -103,6 +123,11 @@ def ref_slda_train_sweeps(tokens, mask, uniforms, z0, ndt0, y, inv_len,
             pad2, (tokens, mask, uniforms, z0, ndt0, y, inv_len))
     B = (D + pad) // doc_block
     blk = lambda a: a.reshape((B, doc_block) + a.shape[1:])
+    # sparse mode: index LAUNCH-frozen, built once from the entry table —
+    # exactly the kernels' contract (in-launch count evolution never
+    # rebuilds it; exactness does not depend on index freshness)
+    topic_index = (build_topic_index(ntw_t, sparse_topic_cap)
+                   if sampler_mode == "sparse" else None)
 
     def block_fn(tok_b, mask_b, us_b, z_b, ndt_b, y_b, il_b):
         w_flat = tok_b.ravel()
@@ -112,7 +137,8 @@ def ref_slda_train_sweeps(tokens, mask, uniforms, z0, ndt0, y, inv_len,
             z_new, ndt_new = ref_slda_gibbs_sweep(
                 tok_b, mask_b, us_s, z_b, ndt_b, y_b, il_b,
                 ntw_loc, nt_loc, eta, alpha, beta, rho, supervised,
-                product_form=product_form)
+                product_form=product_form, sampler_mode=sampler_mode,
+                topic_index=topic_index)
             zo, zn = z_b.ravel(), z_new.ravel()
             changed = mask_b.ravel() * (zn != zo).astype(jnp.float32)
             ntw_loc = (ntw_loc.at[w_flat, zo].add(-changed)
@@ -135,7 +161,9 @@ def ref_slda_train_sweeps(tokens, mask, uniforms, z0, ndt0, y, inv_len,
 def ref_slda_train_sweeps_chains(tokens, mask, uniforms, z0, ndt0, y,
                                  inv_len, ntw_t, nt, eta, alpha, beta, rho,
                                  supervised: bool, doc_block: int,
-                                 *, product_form: bool = False):
+                                 *, product_form: bool = False,
+                                 sampler_mode: str = "dense",
+                                 sparse_topic_cap: int = 32):
     """Chain-batched training oracle: a plain vmap of the single-chain
     oracle over the leading chain dim — the clearest statement of the
     semantics the chain-gridded kernel and twin must reproduce (each
@@ -144,7 +172,8 @@ def ref_slda_train_sweeps_chains(tokens, mask, uniforms, z0, ndt0, y,
     nt/eta [M, T], ..."""
     fn = lambda *a: ref_slda_train_sweeps(
         *a, alpha, beta, rho, supervised, doc_block,
-        product_form=product_form)
+        product_form=product_form, sampler_mode=sampler_mode,
+        sparse_topic_cap=sparse_topic_cap)
     return jax.vmap(fn)(tokens, mask, uniforms, z0, ndt0, y, inv_len,
                         ntw_t, nt, eta)
 
@@ -152,7 +181,9 @@ def ref_slda_train_sweeps_chains(tokens, mask, uniforms, z0, ndt0, y,
 # ----------------------------------------------------------- slda_predict
 
 def ref_slda_predict_sweeps(tokens, mask, uniforms, z0, ndt0, phi_t,
-                            alpha, n_burnin: int):
+                            alpha, n_burnin: int, *,
+                            sampler_mode: str = "dense",
+                            sparse_topic_cap: int = 32):
     """Fused prediction-sweep oracle with EXPLICIT uniforms.
 
     tokens/mask/z0 : [D, N]; uniforms [D, S, N] (S = burnin + samples);
@@ -169,6 +200,11 @@ def ref_slda_predict_sweeps(tokens, mask, uniforms, z0, ndt0, phi_t,
     n_samples = S - n_burnin
     topic_iota = jnp.arange(T, dtype=jnp.int32)
     tri_u = upper_tri_ones(T)
+    # φ̂ is frozen for the whole prediction, so the index is too
+    topic_index = (build_topic_index(phi_t, sparse_topic_cap)
+                   if sampler_mode == "sparse" else None)
+    s_idx, s_vm, s_om = topic_index if topic_index is not None else (
+        None, None, None)
 
     def doc(tokens_d, mask_d, us_d, z_d, ndt_d):
         def token_step(ndt_d, inp):
@@ -176,10 +212,14 @@ def ref_slda_predict_sweeps(tokens, mask, uniforms, z0, ndt0, phi_t,
             old = (topic_iota == z_old).astype(jnp.float32) * m
             ndt_d = ndt_d - old
             p = (ndt_d + alpha) * phi_t[w]
-            # prefix sums as the same upper-triangular contraction the
-            # kernel uses, so the comparison below rounds identically
-            c = jnp.dot(p, tri_u)
-            z_new = jnp.sum((c < u * c[-1]).astype(jnp.int32))
+            if sampler_mode == "sparse":
+                z_new = sparse_two_stage_draw(p, u, s_idx[w], s_vm[w],
+                                              s_om[w])
+            else:
+                # prefix sums as the same upper-triangular contraction
+                # the kernel uses, so the comparison rounds identically
+                c = jnp.dot(p, tri_u)
+                z_new = jnp.sum((c < u * c[-1]).astype(jnp.int32))
             z_new = jnp.where(m > 0, z_new, z_old).astype(jnp.int32)
             ndt_d = ndt_d + (topic_iota == z_new).astype(jnp.float32) * m
             return ndt_d, z_new
@@ -202,13 +242,16 @@ def ref_slda_predict_sweeps(tokens, mask, uniforms, z0, ndt0, phi_t,
 
 
 def ref_slda_predict_sweeps_chains(tokens, mask, uniforms, z0, ndt0, phi_t,
-                                   alpha, n_burnin: int):
+                                   alpha, n_burnin: int, *,
+                                   sampler_mode: str = "dense",
+                                   sparse_topic_cap: int = 32):
     """Chain-batched prediction oracle: vmap of the single-chain oracle
     over the leading chain dim.  tokens/mask [D, N] are SHARED across
     chains (the corpus every chain predicts); uniforms [M, D, S, N];
     z0 [M, D, N]; ndt0 [M, D, T]; phi_t [M, W, T]."""
     fn = lambda us, z, nd, ph: ref_slda_predict_sweeps(
-        tokens, mask, us, z, nd, ph, alpha, n_burnin)
+        tokens, mask, us, z, nd, ph, alpha, n_burnin,
+        sampler_mode=sampler_mode, sparse_topic_cap=sparse_topic_cap)
     return jax.vmap(fn)(uniforms, z0, ndt0, phi_t)
 
 

@@ -25,13 +25,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.mathutil import upper_tri_ones
+from .sparse import build_topic_index, sparse_two_stage_draw
 
 
 def _gibbs_kernel(tokens_ref, mask_ref, unif_ref, z_ref, ndt_ref,
-                  y_ref, invlen_ref, ntw_t_ref, nt_ref, eta_ref,
-                  z_out_ref, ndt_out_ref,
-                  *, alpha: float, beta: float, rho: float,
-                  supervised: bool, n_tokens: int, vocab_size: int):
+                  y_ref, invlen_ref, ntw_t_ref, nt_ref, eta_ref, *refs,
+                  alpha: float, beta: float, rho: float,
+                  supervised: bool, n_tokens: int, vocab_size: int,
+                  sampler_mode: str = "dense"):
+    # sparse mode appends the three sweep-frozen topic-index inputs;
+    # unpacking on the static mode keeps the dense trace byte-identical
+    if sampler_mode == "sparse":
+        idx_ref, vmask_ref, occm_ref, z_out_ref, ndt_out_ref = refs
+    else:
+        z_out_ref, ndt_out_ref = refs
     eta = eta_ref[0, :]                       # [T]
     nt = nt_ref[0, :]                         # [T]
     ntw_t = ntw_t_ref[...]                    # [W, T] resident in VMEM
@@ -64,8 +71,15 @@ def _gibbs_kernel(tokens_ref, mask_ref, unif_ref, z_ref, ndt_ref,
             logp = logp - 0.5 * (y[:, None] - mu_t) ** 2 / rho
 
         p = jnp.exp(logp - jnp.max(logp, axis=1, keepdims=True))
-        c = jnp.dot(p, tri_u)
-        z_new = jnp.sum((c < (u * c[:, -1])[:, None]).astype(jnp.int32), axis=1)
+        if sampler_mode == "sparse":
+            z_new = sparse_two_stage_draw(
+                p, u, jnp.take(idx_ref[...], w, axis=0),
+                jnp.take(vmask_ref[...], w, axis=0),
+                jnp.take(occm_ref[...], w, axis=0))
+        else:
+            c = jnp.dot(p, tri_u)
+            z_new = jnp.sum(
+                (c < (u * c[:, -1])[:, None]).astype(jnp.int32), axis=1)
         z_new = jnp.where(m > 0, z_new, z_old).astype(jnp.int32)
 
         new = (topic_iota == z_new[:, None]).astype(jnp.float32) * m[:, None]
@@ -80,10 +94,15 @@ def _gibbs_kernel(tokens_ref, mask_ref, unif_ref, z_ref, ndt_ref,
 
 def slda_gibbs_sweep_pallas(tokens, mask, uniforms, z, ndt, y, inv_len,
                             ntw_t, nt, eta, *, alpha, beta, rho,
-                            supervised=True, doc_block=8, interpret=True):
+                            supervised=True, doc_block=8, interpret=True,
+                            sampler_mode="dense", sparse_topic_cap=32,
+                            topic_index=None):
     """Blocked document-parallel Gibbs sweep.  Shapes as in ref.py.
 
     D must be a multiple of doc_block (ops.py pads).  Returns (z_new, ndt_new).
+    sampler_mode="sparse" routes the draw through the two-stage sparse
+    draw against the per-word topic index of the sweep-frozen `ntw_t`
+    (built here unless passed pre-built as `topic_index`).
     """
     D, N = tokens.shape
     T = ndt.shape[-1]
@@ -96,17 +115,27 @@ def slda_gibbs_sweep_pallas(tokens, mask, uniforms, z, ndt, y, inv_len,
 
     kernel = functools.partial(
         _gibbs_kernel, alpha=float(alpha), beta=float(beta), rho=float(rho),
-        supervised=supervised, n_tokens=N, vocab_size=W)
+        supervised=supervised, n_tokens=N, vocab_size=W,
+        sampler_mode=sampler_mode)
+
+    in_specs = [doc_spec(N), doc_spec(N), doc_spec(N), doc_spec(N),
+                doc_spec(T), doc_spec(1), doc_spec(1),
+                full((W, T)), full((1, T)), full((1, T))]
+    operands = [tokens, mask, uniforms, z, ndt, y[:, None],
+                inv_len[:, None], ntw_t, nt[None, :], eta[None, :]]
+    if sampler_mode == "sparse":
+        if topic_index is None:
+            topic_index = build_topic_index(ntw_t, sparse_topic_cap)
+        cap = topic_index[0].shape[-1]
+        in_specs += [full((W, cap)), full((W, cap)), full((W, T))]
+        operands += list(topic_index)
 
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[doc_spec(N), doc_spec(N), doc_spec(N), doc_spec(N),
-                  doc_spec(T), doc_spec(1), doc_spec(1),
-                  full((W, T)), full((1, T)), full((1, T))],
+        in_specs=in_specs,
         out_specs=[doc_spec(N), doc_spec(T)],
         out_shape=[jax.ShapeDtypeStruct((D, N), jnp.int32),
                    jax.ShapeDtypeStruct((D, T), jnp.float32)],
         interpret=interpret,
-    )(tokens, mask, uniforms, z, ndt, y[:, None], inv_len[:, None],
-      ntw_t, nt[None, :], eta[None, :])
+    )(*operands)

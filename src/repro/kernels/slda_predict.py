@@ -51,6 +51,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.mathutil import upper_tri_ones
+from .sparse import build_topic_index, sparse_two_stage_draw
 
 try:  # pltpu imports on CPU builds too; guard for exotic installs
     from jax.experimental.pallas import tpu as pltpu
@@ -116,10 +117,16 @@ def predict_uniforms(seeds, n_sweeps: int, n_tokens: int,
 
 
 def _predict_kernel(tokens_ref, mask_ref, seed_ref, z_ref, ndt_ref, phi_t_ref,
-                    z_out_ref, avg_ref,
-                    *, alpha: float, n_burnin: int, n_samples: int,
+                    *refs, alpha: float, n_burnin: int, n_samples: int,
                     n_tokens: int, ctr_stride: int, tpu_prng: bool,
-                    chain_grid: bool = False):
+                    chain_grid: bool = False, sampler_mode: str = "dense"):
+    # sparse mode appends the three per-word topic-index inputs (frozen
+    # like φ̂ itself); unpacking on the static mode keeps the dense trace
+    # byte-identical to every prior PR
+    if sampler_mode == "sparse":
+        idx_ref, vmask_ref, occm_ref, z_out_ref, avg_ref = refs
+    else:
+        z_out_ref, avg_ref = refs
     phi_t = phi_t_ref[...]                    # [W, T] resident in VMEM
     seeds = seed_ref[:, 0]                    # [DB]
     T = phi_t.shape[1]
@@ -162,9 +169,17 @@ def _predict_kernel(tokens_ref, mask_ref, seed_ref, z_ref, ndt_ref, phi_t_ref,
             old = (topic_iota == z_old[:, None]).astype(jnp.float32) * m[:, None]
             ndt = ndt - old
             p = (ndt + alpha) * jnp.take(phi_t, w, axis=0)      # row gather
-            c = jnp.dot(p, tri_u)                               # prefix sums
-            z_new = jnp.sum((c < (u * c[:, -1])[:, None]).astype(jnp.int32),
-                            axis=1)
+            if sampler_mode == "sparse":
+                # two-stage sparse draw (rare stage-2 correction
+                # predicated inside — kernels/sparse.py)
+                z_new = sparse_two_stage_draw(
+                    p, u, jnp.take(idx_ref[...], w, axis=0),
+                    jnp.take(vmask_ref[...], w, axis=0),
+                    jnp.take(occm_ref[...], w, axis=0))
+            else:
+                c = jnp.dot(p, tri_u)                           # prefix sums
+                z_new = jnp.sum(
+                    (c < (u * c[:, -1])[:, None]).astype(jnp.int32), axis=1)
             z_new = jnp.where(m > 0, z_new, z_old).astype(jnp.int32)
             ndt = ndt + (topic_iota == z_new[:, None]).astype(jnp.float32) \
                 * m[:, None]
@@ -186,7 +201,8 @@ def _predict_kernel(tokens_ref, mask_ref, seed_ref, z_ref, ndt_ref, phi_t_ref,
 def slda_predict_sweeps_pallas(tokens, mask, seeds, z0, ndt0, phi_t, *,
                                alpha, n_burnin, n_samples, doc_block=8,
                                interpret=True, tpu_prng=False,
-                               ctr_stride=None):
+                               ctr_stride=None, sampler_mode="dense",
+                               sparse_topic_cap=32, topic_index=None):
     """All prediction sweeps for every document in ONE launch per doc block.
 
     tokens/mask/z0: [D, N]; seeds: int32 [D]; ndt0: [D, T]; phi_t: [W, T].
@@ -207,25 +223,37 @@ def slda_predict_sweeps_pallas(tokens, mask, seeds, z0, ndt0, phi_t, *,
         _predict_kernel, alpha=float(alpha), n_burnin=int(n_burnin),
         n_samples=int(n_samples), n_tokens=N,
         ctr_stride=int(N if ctr_stride is None else ctr_stride),
-        tpu_prng=tpu_prng)
+        tpu_prng=tpu_prng, sampler_mode=sampler_mode)
+
+    in_specs = [doc_spec(N), doc_spec(N), doc_spec(1),
+                doc_spec(N), doc_spec(T), full((W, T))]
+    operands = [tokens, mask, seeds[:, None], z0, ndt0, phi_t]
+    if sampler_mode == "sparse":
+        if topic_index is None:
+            topic_index = build_topic_index(phi_t, sparse_topic_cap)
+        cap = topic_index[0].shape[-1]
+        in_specs += [full((W, cap)), full((W, cap)), full((W, T))]
+        operands += list(topic_index)
 
     z_final, ndt_avg = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[doc_spec(N), doc_spec(N), doc_spec(1),
-                  doc_spec(N), doc_spec(T), full((W, T))],
+        in_specs=in_specs,
         out_specs=[doc_spec(N), doc_spec(T)],
         out_shape=[jax.ShapeDtypeStruct((D, N), jnp.int32),
                    jax.ShapeDtypeStruct((D, T), jnp.float32)],
         interpret=interpret,
-    )(tokens, mask, seeds[:, None], z0, ndt0, phi_t)
+    )(*operands)
     return ndt_avg, z_final
 
 
 def slda_predict_sweeps_chains_pallas(tokens, mask, seeds, z0, ndt0, phi_t,
                                       *, alpha, n_burnin, n_samples,
                                       doc_block=8, interpret=True,
-                                      tpu_prng=False, ctr_stride=None):
+                                      tpu_prng=False, ctr_stride=None,
+                                      sampler_mode="dense",
+                                      sparse_topic_cap=32,
+                                      topic_index=None):
     """Chain-batched fused prediction: grid (M, D/doc_block), ONE launch
     for all M chains of the paper's parallel algorithms.
 
@@ -261,24 +289,34 @@ def slda_predict_sweeps_chains_pallas(tokens, mask, seeds, z0, ndt0, phi_t,
         _predict_kernel, alpha=float(alpha), n_burnin=int(n_burnin),
         n_samples=int(n_samples), n_tokens=N,
         ctr_stride=int(N if ctr_stride is None else ctr_stride),
-        tpu_prng=tpu_prng, chain_grid=True)
+        tpu_prng=tpu_prng, chain_grid=True, sampler_mode=sampler_mode)
+
+    in_specs = [shared(N), shared(N), cdoc(1),
+                cdoc(N), cdoc(T), cfull((W, T))]
+    operands = [tokens, mask, seeds[..., None], z0, ndt0, phi_t]
+    if sampler_mode == "sparse":
+        if topic_index is None:
+            topic_index = build_topic_index(phi_t, sparse_topic_cap)
+        cap = topic_index[0].shape[-1]
+        in_specs += [cfull((W, cap)), cfull((W, cap)), cfull((W, T))]
+        operands += list(topic_index)
 
     z_final, ndt_avg = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[shared(N), shared(N), cdoc(1),
-                  cdoc(N), cdoc(T), cfull((W, T))],
+        in_specs=in_specs,
         out_specs=[cdoc(N), cdoc(T)],
         out_shape=[jax.ShapeDtypeStruct((M, D, N), jnp.int32),
                    jax.ShapeDtypeStruct((M, D, T), jnp.float32)],
         interpret=interpret,
-    )(tokens, mask, seeds[..., None], z0, ndt0, phi_t)
+    )(*operands)
     return ndt_avg, z_final
 
 
 def slda_predict_sweeps_chains_jnp(tokens, mask, seeds, z0, ndt0, phi_t, *,
                                    alpha, n_burnin, n_samples, unroll=8,
-                                   ctr_stride=None):
+                                   ctr_stride=None, sampler_mode="dense",
+                                   sparse_topic_cap=32):
     """Chain-batched jnp twin: FOLD the chain axis into the document-row
     axis around one stacked table.
 
@@ -311,13 +349,15 @@ def slda_predict_sweeps_chains_jnp(tokens, mask, seeds, z0, ndt0, phi_t, *,
         tok_f, mask_f, seeds.reshape(M * D), z0.reshape(M * D, N),
         ndt0.reshape(M * D, T), phi_t.reshape(M * W, T),
         alpha=alpha, n_burnin=n_burnin, n_samples=n_samples, unroll=unroll,
-        ctr_stride=ctr_stride)
+        ctr_stride=ctr_stride, sampler_mode=sampler_mode,
+        sparse_topic_cap=sparse_topic_cap)
     return ndt_avg.reshape(M, D, T), z_final.reshape(M, D, N)
 
 
 def slda_predict_stair_jnp(seg_tokens, seg_mask, seg_z0, seg_row_start,
                            seg_tok_start, seeds, ndt0, phi_t, *, alpha,
-                           n_burnin, n_samples, ctr_stride, unroll=8):
+                           n_burnin, n_samples, ctr_stride, unroll=8,
+                           sampler_mode="dense", sparse_topic_cap=32):
     """STAIRCASE prediction twin — the ragged execution layer's CPU
     executor (DESIGN.md §Ragged-execution).
 
@@ -350,6 +390,10 @@ def slda_predict_stair_jnp(seg_tokens, seg_mask, seg_z0, seg_row_start,
     n_sweeps = n_burnin + n_samples
     topic_iota = jnp.arange(T, dtype=jnp.int32)[None, :]
     tri_u = upper_tri_ones(T)
+    # φ̂ (possibly chain-stacked) is frozen, so the index is too; stacked
+    # rows c·W + w equal the per-chain tables bit-for-bit
+    if sampler_mode == "sparse":
+        s_idx, s_vm, s_om = build_topic_index(phi_t, sparse_topic_cap)
     segs = []
     for tok, mk, z, r0, n0 in zip(seg_tokens, seg_mask, seg_z0,
                                   seg_row_start, seg_tok_start):
@@ -372,9 +416,16 @@ def slda_predict_stair_jnp(seg_tokens, seg_mask, seg_z0, seg_row_start,
                     * m[:, None]
                 nd = nd - old
                 p = (nd + alpha) * pw
-                c = jnp.dot(p, tri_u)
-                z_new = jnp.sum(
-                    (c < (u * c[:, -1])[:, None]).astype(jnp.int32), axis=1)
+                if sampler_mode == "sparse":
+                    z_new = sparse_two_stage_draw(
+                        p, u, jnp.take(s_idx, w, axis=0),
+                        jnp.take(s_vm, w, axis=0),
+                        jnp.take(s_om, w, axis=0))
+                else:
+                    c = jnp.dot(p, tri_u)
+                    z_new = jnp.sum(
+                        (c < (u * c[:, -1])[:, None]).astype(jnp.int32),
+                        axis=1)
                 z_new = jnp.where(m > 0, z_new, z_old).astype(jnp.int32)
                 nd = nd + (topic_iota == z_new[:, None]) \
                     .astype(jnp.float32) * m[:, None]
@@ -397,7 +448,8 @@ def slda_predict_stair_jnp(seg_tokens, seg_mask, seg_z0, seg_row_start,
 
 def slda_predict_sweeps_jnp(tokens, mask, seeds, z0, ndt0, phi_t, *,
                             alpha, n_burnin, n_samples, unroll=8,
-                            ctr_stride=None):
+                            ctr_stride=None, sampler_mode="dense",
+                            sparse_topic_cap=32):
     """Batched-jnp twin of the fused kernel — the CPU fast path.
 
     Same restructuring as the kernel, expressed as XLA-friendly jnp: all D
@@ -429,8 +481,13 @@ def slda_predict_sweeps_jnp(tokens, mask, seeds, z0, ndt0, phi_t, *,
     # — small in T (where the gemm no longer dominates) AND in absolute
     # bytes, so paper-scale corpora never re-materialize the kind of
     # multi-GB tensor this module exists to avoid
-    hoist = T <= _HOIST_T_MAX and N * D * T * 4 <= _HOIST_BYTES_MAX
+    # sparse mode disables the hoist (the index gathers are per-token
+    # anyway) and builds the frozen per-word index once per call
+    hoist = (sampler_mode != "sparse" and T <= _HOIST_T_MAX
+             and N * D * T * 4 <= _HOIST_BYTES_MAX)
     phi_w = jnp.take(phi_t, tok_t, axis=0) if hoist else None
+    if sampler_mode == "sparse":
+        s_idx, s_vm, s_om = build_topic_index(phi_t, sparse_topic_cap)
 
     def one_sweep(carry, s):
         z_t, ndt, acc = carry                  # [N, D], [D, T], [D, T]
@@ -442,9 +499,15 @@ def slda_predict_sweeps_jnp(tokens, mask, seeds, z0, ndt0, phi_t, *,
             old = (topic_iota == z_old[:, None]).astype(jnp.float32) * m[:, None]
             ndt = ndt - old
             p = (ndt + alpha) * pw
-            c = jnp.dot(p, tri_u)              # prefix sums on one gemm
-            z_new = jnp.sum((c < (u * c[:, -1])[:, None]).astype(jnp.int32),
-                            axis=1)
+            if sampler_mode == "sparse":
+                z_new = sparse_two_stage_draw(
+                    p, u, jnp.take(s_idx, pw_or_w, axis=0),
+                    jnp.take(s_vm, pw_or_w, axis=0),
+                    jnp.take(s_om, pw_or_w, axis=0))
+            else:
+                c = jnp.dot(p, tri_u)          # prefix sums on one gemm
+                z_new = jnp.sum(
+                    (c < (u * c[:, -1])[:, None]).astype(jnp.int32), axis=1)
             z_new = jnp.where(m > 0, z_new, z_old).astype(jnp.int32)
             ndt = ndt + (topic_iota == z_new[:, None]).astype(jnp.float32) \
                 * m[:, None]

@@ -78,6 +78,7 @@ from jax.experimental import pallas as pl
 from repro.mathutil import upper_tri_ones
 from .slda_predict import _GOLDEN, _INV24, _MIX1, _MIX2, counter_uniform
 from .slda_predict import predict_uniforms as _uniforms_tensor
+from .sparse import build_topic_index, sparse_two_stage_draw
 
 try:  # pltpu imports on CPU builds too; guard for exotic installs
     from jax.experimental.pallas import tpu as pltpu
@@ -96,12 +97,20 @@ def train_uniforms(seeds, n_sweeps: int, n_tokens: int,
 
 
 def _train_kernel(tokens_ref, mask_ref, seed_ref, z_ref, ndt_ref, y_ref,
-                  invlen_ref, ntw_t_ref, nt_ref, eta_ref,
-                  z_out_ref, ndt_out_ref, ntw_scratch,
-                  *, alpha: float, beta: float, rho: float, supervised: bool,
+                  invlen_ref, ntw_t_ref, nt_ref, eta_ref, *refs,
+                  alpha: float, beta: float, rho: float, supervised: bool,
                   n_sweeps: int, n_tokens: int, ctr_stride: int,
                   vocab_size: int, tpu_prng: bool, product_form: bool,
-                  chain_grid: bool):
+                  chain_grid: bool, sampler_mode: str = "dense"):
+    # sparse mode appends three LAUNCH-frozen topic-index inputs (built
+    # by the wrapper from the entry table — in-launch count evolution
+    # never rebuilds them; exactness does not depend on index freshness).
+    # Unpacking on the static mode keeps the dense trace byte-identical.
+    if sampler_mode == "sparse":
+        (idx_ref, vmask_ref, occm_ref,
+         z_out_ref, ndt_out_ref, ntw_scratch) = refs
+    else:
+        z_out_ref, ndt_out_ref, ntw_scratch = refs
     eta = eta_ref[0, :]                       # [T]
     seeds = seed_ref[:, 0]                    # [DB]
     y = y_ref[:, 0]                           # [DB]
@@ -167,9 +176,18 @@ def _train_kernel(tokens_ref, mask_ref, seed_ref, z_ref, ndt_ref, y_ref,
                     logp = logp - 0.5 * (y[:, None] - mu_t) ** 2 / rho
                 p = jnp.exp(logp - jnp.max(logp, axis=1, keepdims=True))
 
-            c = jnp.dot(p, tri_u)                       # prefix sums
-            z_new = jnp.sum((c < (u * c[:, -1])[:, None]).astype(jnp.int32),
-                            axis=1)
+            if sampler_mode == "sparse":
+                # two-stage sparse draw; the rare stage-2 correction is
+                # predicated inside (lax.cond — the value-returning form
+                # of pl.when, bitwise-equal to the branch-free select)
+                z_new = sparse_two_stage_draw(
+                    p, u, jnp.take(idx_ref[...], w, axis=0),
+                    jnp.take(vmask_ref[...], w, axis=0),
+                    jnp.take(occm_ref[...], w, axis=0))
+            else:
+                c = jnp.dot(p, tri_u)                   # prefix sums
+                z_new = jnp.sum(
+                    (c < (u * c[:, -1])[:, None]).astype(jnp.int32), axis=1)
             z_new = jnp.where(m > 0, z_new, z_old).astype(jnp.int32)
 
             ndt = ndt + (topic_iota == z_new[:, None]).astype(jnp.float32) \
@@ -225,7 +243,9 @@ def slda_train_sweeps_pallas(tokens, mask, seeds, z0, ndt0, y, inv_len,
                              ntw_t, nt, eta, *, alpha, beta, rho,
                              supervised=True, n_sweeps=1, doc_block=8,
                              interpret=True, tpu_prng=False,
-                             product_form=False, ctr_stride=None):
+                             product_form=False, ctr_stride=None,
+                             sampler_mode="dense", sparse_topic_cap=32,
+                             topic_index=None):
     """All `n_sweeps` training sweeps for a doc block in ONE launch.
 
     tokens/mask/z0: [D, N]; seeds: int32 [D]; ndt0: [D, T]; y/inv_len: [D];
@@ -233,7 +253,10 @@ def slda_train_sweeps_pallas(tokens, mask, seeds, z0, ndt0, y, inv_len,
     of doc_block (ops.py pads).  Returns (z_final [D, N], ndt_final [D, T]);
     the caller refreshes the global tables from (z0, z_final).
     ctr_stride pins the PRNG counter stride (default N — see
-    slda_predict.predict_uniforms).
+    slda_predict.predict_uniforms).  sampler_mode="sparse" routes the
+    per-token draw through the two-stage sparse draw against a
+    launch-frozen per-word topic index (built here from `ntw_t`, or
+    passed pre-built as `topic_index=(idx, vmask, occm)`).
     """
     D, N = tokens.shape
     T = ndt0.shape[-1]
@@ -249,21 +272,30 @@ def slda_train_sweeps_pallas(tokens, mask, seeds, z0, ndt0, y, inv_len,
         supervised=supervised, n_sweeps=int(n_sweeps), n_tokens=N,
         ctr_stride=int(N if ctr_stride is None else ctr_stride),
         vocab_size=W, tpu_prng=tpu_prng, product_form=product_form,
-        chain_grid=False)
+        chain_grid=False, sampler_mode=sampler_mode)
+
+    in_specs = [doc_spec(N), doc_spec(N), doc_spec(1), doc_spec(N),
+                doc_spec(T), doc_spec(1), doc_spec(1),
+                full((W, T)), full((1, T)), full((1, T))]
+    operands = [tokens, mask, seeds[:, None], z0, ndt0, y[:, None],
+                inv_len[:, None], ntw_t, nt[None, :], eta[None, :]]
+    if sampler_mode == "sparse":
+        if topic_index is None:
+            topic_index = build_topic_index(ntw_t, sparse_topic_cap)
+        cap = topic_index[0].shape[-1]
+        in_specs += [full((W, cap)), full((W, cap)), full((W, T))]
+        operands += list(topic_index)
 
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[doc_spec(N), doc_spec(N), doc_spec(1), doc_spec(N),
-                  doc_spec(T), doc_spec(1), doc_spec(1),
-                  full((W, T)), full((1, T)), full((1, T))],
+        in_specs=in_specs,
         out_specs=[doc_spec(N), doc_spec(T)],
         out_shape=[jax.ShapeDtypeStruct((D, N), jnp.int32),
                    jax.ShapeDtypeStruct((D, T), jnp.float32)],
         scratch_shapes=[pltpu.VMEM((W, T), jnp.float32)],
         interpret=interpret,
-    )(tokens, mask, seeds[:, None], z0, ndt0, y[:, None], inv_len[:, None],
-      ntw_t, nt[None, :], eta[None, :])
+    )(*operands)
 
 
 def slda_train_sweeps_chains_pallas(tokens, mask, seeds, z0, ndt0, y,
@@ -271,7 +303,8 @@ def slda_train_sweeps_chains_pallas(tokens, mask, seeds, z0, ndt0, y,
                                     rho, supervised=True, n_sweeps=1,
                                     doc_block=8, interpret=True,
                                     tpu_prng=False, product_form=False,
-                                    ctr_stride=None):
+                                    ctr_stride=None, sampler_mode="dense",
+                                    sparse_topic_cap=32, topic_index=None):
     """Chain-batched fused train launch: grid (M, D/doc_block).
 
     One pallas_call runs all M independent chains: tokens/mask/z0
@@ -298,27 +331,38 @@ def slda_train_sweeps_chains_pallas(tokens, mask, seeds, z0, ndt0, y,
         supervised=supervised, n_sweeps=int(n_sweeps), n_tokens=N,
         ctr_stride=int(N if ctr_stride is None else ctr_stride),
         vocab_size=W, tpu_prng=tpu_prng, product_form=product_form,
-        chain_grid=True)
+        chain_grid=True, sampler_mode=sampler_mode)
+
+    in_specs = [cdoc(N), cdoc(N), cdoc(1), cdoc(N),
+                cdoc(T), cdoc(1), cdoc(1),
+                cfull((W, T)), cfull((1, T)), cfull((1, T))]
+    operands = [tokens, mask, seeds[..., None], z0, ndt0, y[..., None],
+                inv_len[..., None], ntw_t, nt[:, None, :], eta[:, None, :]]
+    if sampler_mode == "sparse":
+        if topic_index is None:
+            topic_index = build_topic_index(ntw_t, sparse_topic_cap)
+        cap = topic_index[0].shape[-1]
+        in_specs += [cfull((W, cap)), cfull((W, cap)), cfull((W, T))]
+        operands += list(topic_index)
 
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[cdoc(N), cdoc(N), cdoc(1), cdoc(N),
-                  cdoc(T), cdoc(1), cdoc(1),
-                  cfull((W, T)), cfull((1, T)), cfull((1, T))],
+        in_specs=in_specs,
         out_specs=[cdoc(N), cdoc(T)],
         out_shape=[jax.ShapeDtypeStruct((M, D, N), jnp.int32),
                    jax.ShapeDtypeStruct((M, D, T), jnp.float32)],
         scratch_shapes=[pltpu.VMEM((W, T), jnp.float32)],
         interpret=interpret,
-    )(tokens, mask, seeds[..., None], z0, ndt0, y[..., None],
-      inv_len[..., None], ntw_t, nt[:, None, :], eta[:, None, :])
+    )(*operands)
 
 
 def slda_train_sweeps_jnp(tokens, mask, seeds, z0, ndt0, y, inv_len,
                           ntw_t, nt, eta, *, alpha, beta, rho,
                           supervised=True, n_sweeps=1, doc_block=8,
-                          unroll=8, product_form=False, ctr_stride=None):
+                          unroll=8, product_form=False, ctr_stride=None,
+                          sampler_mode="dense", sparse_topic_cap=32,
+                          topic_index=None):
     """Blocked-jnp twin of the fused train kernel — the CPU fast path.
 
     Same restructuring expressed as XLA-friendly jnp: a vmap over doc
@@ -358,6 +402,12 @@ def slda_train_sweeps_jnp(tokens, mask, seeds, z0, ndt0, y, inv_len,
     topic_iota = jnp.arange(T, dtype=jnp.int32)[None, :]
     tri_u = upper_tri_ones(T)
     n_iota = jnp.arange(N, dtype=jnp.int32)
+    # sparse mode: LAUNCH-frozen index from the entry table, shared by
+    # all blocks — exactly the kernel's extra-input contract
+    if sampler_mode == "sparse" and topic_index is None:
+        topic_index = build_topic_index(ntw_t, sparse_topic_cap)
+    s_idx, s_vm, s_om = topic_index if topic_index is not None else (
+        None, None, None)
 
     blk = lambda a: a.reshape((B, doc_block) + a.shape[1:])
 
@@ -405,9 +455,16 @@ def slda_train_sweeps_jnp(tokens, mask, seeds, z0, ndt0, y, inv_len,
                         mu_t = (st[:, None] + eta[None, :]) * il_b[:, None]
                         logp = logp - 0.5 * (y_b[:, None] - mu_t) ** 2 / rho
                     p = jnp.exp(logp - jnp.max(logp, axis=1, keepdims=True))
-                c = jnp.dot(p, tri_u)
-                z_new = jnp.sum(
-                    (c < (u * c[:, -1])[:, None]).astype(jnp.int32), axis=1)
+                if sampler_mode == "sparse":
+                    z_new = sparse_two_stage_draw(
+                        p, u, jnp.take(s_idx, w, axis=0),
+                        jnp.take(s_vm, w, axis=0),
+                        jnp.take(s_om, w, axis=0))
+                else:
+                    c = jnp.dot(p, tri_u)
+                    z_new = jnp.sum(
+                        (c < (u * c[:, -1])[:, None]).astype(jnp.int32),
+                        axis=1)
                 z_new = jnp.where(m > 0, z_new, z_old).astype(jnp.int32)
                 ndt = ndt + (topic_iota == z_new[:, None]) \
                     .astype(jnp.float32) * m[:, None]
@@ -451,7 +508,8 @@ def slda_train_stair_jnp(seg_tokens, seg_mask, seg_z0, seg_row_start,
                          ntw_t_stack, nt, eta, chain_of_row, *, alpha,
                          beta, rho, vocab_size, ctr_stride,
                          supervised=True, n_sweeps=1, product_form=False,
-                         unroll=8):
+                         unroll=8, sampler_mode="dense",
+                         sparse_topic_cap=32, topic_index=None):
     """STAIRCASE fused-training twin — the ragged layer's CPU executor
     for multi-sweep launches (DESIGN.md §Ragged-execution).
 
@@ -484,6 +542,13 @@ def slda_train_stair_jnp(seg_tokens, seg_mask, seg_z0, seg_row_start,
     topic_iota = jnp.arange(T, dtype=jnp.int32)[None, :]
     tri_u = upper_tri_ones(T)
     eta_rows = jnp.take(eta, chain_of_row, axis=0)        # [R, T] frozen
+    # sparse mode: launch-frozen index over the STACKED [M·W, T] table —
+    # row c·W + w matches the per-chain tables bit-for-bit, so the draw
+    # agrees with the blocks executor under the same uniforms
+    if sampler_mode == "sparse" and topic_index is None:
+        topic_index = build_topic_index(ntw_t_stack, sparse_topic_cap)
+    s_idx, s_vm, s_om = topic_index if topic_index is not None else (
+        None, None, None)
     segs = []
     for tok, mk, r0, n0 in zip(seg_tokens, seg_mask, seg_row_start,
                                seg_tok_start):
@@ -545,10 +610,16 @@ def slda_train_stair_jnp(seg_tokens, seg_mask, seg_z0, seg_row_start,
                             / rho
                     p = jnp.exp(logp - jnp.max(logp, axis=1,
                                                keepdims=True))
-                c = jnp.dot(p, tri_u)
-                z_new = jnp.sum(
-                    (c < (u * c[:, -1])[:, None]).astype(jnp.int32),
-                    axis=1)
+                if sampler_mode == "sparse":
+                    z_new = sparse_two_stage_draw(
+                        p, u, jnp.take(s_idx, w, axis=0),
+                        jnp.take(s_vm, w, axis=0),
+                        jnp.take(s_om, w, axis=0))
+                else:
+                    c = jnp.dot(p, tri_u)
+                    z_new = jnp.sum(
+                        (c < (u * c[:, -1])[:, None]).astype(jnp.int32),
+                        axis=1)
                 z_new = jnp.where(m > 0, z_new, z_old).astype(jnp.int32)
                 nd = nd + (topic_iota == z_new[:, None]) \
                     .astype(jnp.float32) * m[:, None]
@@ -588,7 +659,8 @@ def slda_train_sweeps_chains_jnp(tokens, mask, seeds, z0, ndt0, y, inv_len,
                                  ntw_t, nt, eta, *, alpha, beta, rho,
                                  supervised=True, n_sweeps=1, doc_block=8,
                                  unroll=8, product_form=False,
-                                 ctr_stride=None):
+                                 ctr_stride=None, sampler_mode="dense",
+                                 sparse_topic_cap=32):
     """Chain-batched jnp twin: all inputs carry a leading chain dim M
     (tokens [M, D, N], ntw_t [M, W, T], nt/eta [M, T], ...).
 
@@ -605,6 +677,7 @@ def slda_train_sweeps_chains_jnp(tokens, mask, seeds, z0, ndt0, y, inv_len,
     fn = functools.partial(
         slda_train_sweeps_jnp, alpha=alpha, beta=beta, rho=rho,
         supervised=supervised, n_sweeps=n_sweeps, doc_block=doc_block,
-        unroll=unroll, product_form=product_form, ctr_stride=ctr_stride)
+        unroll=unroll, product_form=product_form, ctr_stride=ctr_stride,
+        sampler_mode=sampler_mode, sparse_topic_cap=sparse_topic_cap)
     return jax.vmap(fn)(tokens, mask, seeds, z0, ndt0, y, inv_len,
                         ntw_t, nt, eta)

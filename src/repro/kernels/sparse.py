@@ -1,0 +1,131 @@
+"""Sparse two-stage categorical draw — the O(T)-per-token sampler core.
+
+Every dense sLDA sampler in the repo draws `z ~ p` through the matmul
+prefix sum `c = p @ triu(T)`, an O(T²)-per-token contraction that
+dominates the sweep at large T.  This module replaces ONLY the draw:
+the exact dense weights `p` are still produced per token (all O(T)
+vector work is unchanged — the supervised Gaussian factor depends on
+the document and token, so no per-word precomputation of `p` survives),
+then split by the word's occupancy index into
+
+  * a **sparse bucket** `sv = take_along(p, idx) · vmask` over the
+    word's top-`cap` occupied topics (the index is built once per
+    launch from the sweep-frozen table — `core.types
+    .topic_occupancy_index`), drawn through a `cap²` prefix sum, and
+  * a **residual bucket** `rv = p · (1 − occm)` holding everything the
+    index missed, drawn hierarchically: block totals (`nb = ⌈T/B⌉`
+    blocks of `B` topics) pick the block through an `nb²` prefix sum,
+    then a `B²` prefix sum picks within the block.
+
+`scatter(sv) + rv == p` holds exactly in float32 for ANY index content
+(the argsort index entries are distinct; invalid slots carry
+`vmask = 0` and are excluded from `occm`), so a stale index changes
+which bucket serves a topic — never the sampled distribution.  Stage 2
+(the residual draw) fires only when the target mass lands past the
+sparse bucket, which after burn-in on a peaked corpus is rare; it is
+predicated (`lax.cond` here, `pl.when` in the kernels) and
+bitwise-identical to the branch-free form because the selected value
+when every row stays in-bucket is the stage-1 pick verbatim.
+
+Collapse contract (what the ref oracle asserts against the dense
+sampler): with the identity index `idx = arange(T)`, `cap = T`,
+`vmask = occm = 1`, the residual mass is exactly zero, the sparse
+prefix sum is exactly the dense `p @ triu(T)`, and the draw is
+**bitwise equal** to the dense draw under the same uniform.  Away from
+collapse the draw is distributionally exact at the same float32
+rounding granularity as the dense draw (both resolve ties/rounding at
+the `u·total` boundary in the same strict-`<` way).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.mathutil import upper_tri_ones
+
+
+def residual_blocks(n_topics: int) -> tuple[int, int]:
+    """(block width B, block count nb) of the hierarchical residual draw."""
+    blk = min(16, n_topics)
+    return blk, -(-n_topics // blk)
+
+
+def sparse_two_stage_draw(p, u, idx, vmask, occm):
+    """Draw z ~ Categorical(p) through the two-stage sparse decomposition.
+
+    p     [..., T]    exact dense weights (ANY leading dims: doc block,
+                      chain, scan row — shared by all callers)
+    u     [...]       ONE uniform per row — the same uniform budget as
+                      the dense draw, so `ctr_stride` accounting and
+                      bucketed/padded PRNG parity carry over unchanged
+    idx   [..., cap]  per-word topic index rows (int32, distinct entries)
+    vmask [..., cap]  1 for valid index slots, else 0
+    occm  [..., T]    0/1 membership mask of the valid indexed topics
+
+    Returns int32 z in [0, T).  Bitwise-identical across the pallas
+    kernels, jnp twins, stair twins, and the ref oracle — they all call
+    exactly this function.
+    """
+    t_dim = p.shape[-1]
+    cap = idx.shape[-1]
+    blk, nb = residual_blocks(t_dim)
+
+    sv = jnp.take_along_axis(p, idx, axis=-1) * vmask
+    rv = p * (1.0 - occm)
+    cs = jnp.dot(sv, upper_tri_ones(cap))
+    q_s = cs[..., -1]
+
+    pad = nb * blk - t_dim
+    if pad:
+        rv = jnp.concatenate(
+            [rv, jnp.zeros(rv.shape[:-1] + (pad,), rv.dtype)], axis=-1)
+    rblk = rv.reshape(rv.shape[:-1] + (nb, blk))
+    # block totals taken from the SAME triu contraction as the fine
+    # prefix, so the coarse pick can never overshoot its fine block
+    cfine = jnp.dot(rblk, upper_tri_ones(blk))          # [..., nb, blk]
+    rsum = cfine[..., -1]
+    cr = jnp.dot(rsum, upper_tri_ones(nb))              # [..., nb]
+    q_r = cr[..., -1]
+
+    tgt = u * (q_s + q_r)
+    # q_r == 0 covers the collapse/fully-indexed case where rounding of
+    # u·q_s up to q_s would otherwise spill into an empty residual
+    in_s = (tgt < q_s) | (q_r <= 0.0)
+    k_s = jnp.minimum(
+        jnp.sum((cs < tgt[..., None]).astype(jnp.int32), axis=-1), cap - 1)
+    z_s = jnp.take_along_axis(idx, k_s[..., None], axis=-1)[..., 0]
+
+    def _correct(_):
+        tr = tgt - q_s
+        jb = jnp.minimum(
+            jnp.sum((cr < tr[..., None]).astype(jnp.int32), axis=-1), nb - 1)
+        cr0 = jnp.concatenate([jnp.zeros_like(cr[..., :1]), cr], axis=-1)
+        rem = tr - jnp.take_along_axis(cr0, jb[..., None], axis=-1)[..., 0]
+        cf = jnp.take_along_axis(
+            cfine, jb[..., None, None], axis=-2)[..., 0, :]
+        k_f = jnp.minimum(
+            jnp.sum((cf < rem[..., None]).astype(jnp.int32), axis=-1),
+            blk - 1)
+        z_r = jnp.minimum(jb * blk + k_f, t_dim - 1)
+        return jnp.where(in_s, z_s, z_r)
+
+    z = jax.lax.cond(jnp.all(in_s), lambda _: z_s, _correct, None)
+    return z.astype(jnp.int32)
+
+
+def build_topic_index(table_t, cap: int):
+    """Launch-boundary index build from a word-major `[..., W, T]` table.
+
+    Thin lazy-import wrapper over `core.types.topic_occupancy_index`
+    (the `ops._interpret` pattern: kernels modules stay importable
+    without the core package on the module path)."""
+    from repro.core.types import topic_occupancy_index
+    return topic_occupancy_index(table_t, cap)
+
+
+def gather_index_rows(w, idx, vmask, occm):
+    """Gather the per-token index rows for a word vector `w` [...]: the
+    `[W, ·]` tables become `[..., ·]` rows aligned with `w` — the same
+    `jnp.take(axis=0)` the kernels already use for the ntw gather."""
+    return (jnp.take(idx, w, axis=0), jnp.take(vmask, w, axis=0),
+            jnp.take(occm, w, axis=0))

@@ -549,6 +549,17 @@ class SLDAPredictionService:
         self._plan_cache[plan_key] = fn
         return fn
 
+    def set_sampler_mode(self, mode: str):
+        """Switch the per-token draw mode for subsequent dispatches.
+        The cfg is part of `ExecutionPlan.cache_key()`, so the next
+        flush under the new mode allocates a DISTINCT jitted callable;
+        programs compiled for the old mode stay cached (switching back
+        is free).  Results are unaffected in distribution — the sparse
+        two-stage draw is exact (DESIGN.md §Sparse-sampler)."""
+        if mode not in ("dense", "sparse"):
+            raise ValueError(f"unknown sampler_mode {mode!r}")
+        self.cfg = dataclasses.replace(self.cfg, sampler_mode=mode)
+
     def flush(self):
         """Dispatch one micro-batch from the pending queue (no-op when
         empty).  Returns the req_ids completed by this batch (shed ids
@@ -738,6 +749,11 @@ class SLDAPredictionService:
         return {
             "traces": int(sum(self._trace_counts.values())),
             "compiled_plans": len(self._plan_cache),
+            "plan_cache_keys": len(self._plan_cache),
+            # the active per-token draw mode — part of every plan cache
+            # key (cfg is in ExecutionPlan.cache_key()), so switching it
+            # allocates a DISTINCT jitted callable (test_slda_serving)
+            "sampler_mode": self.cfg.sampler_mode,
             "traces_by_signature": sig_traces,
             "dispatches": int(self._stats["dispatches"]),
             "docs_dispatched": int(self._stats["docs_dispatched"]),

@@ -102,13 +102,19 @@ def _word_gibbs_sweep(key, w, z):
     return w_flat.reshape(D, N)
 
 
-def _successive_samples(key, n_iters, product_form=False):
+def _successive_samples(key, n_iters, product_form=False,
+                        sampler_mode="dense"):
     """Geweke's successive-conditional sampler: alternate the sLDA Gibbs
     transition on z (the FUSED multi-sweep train path: 2 sweeps per
     launch, doc_block=1, so the in-launch block-local delayed-count
     refresh is exercised — and, with product_form, the one-exp sampling
     of DESIGN.md §Chain-batched), an exact word-Gibbs sweep, and an
-    exact label redraw.  Collect the same statistics once per cycle."""
+    exact label redraw.  Collect the same statistics once per cycle.
+
+    sampler_mode="sparse" routes every draw through the two-stage
+    sparse draw (DESIGN.md §Sparse-sampler) — the strongest check that
+    its exactness argument holds inside a real training transition, not
+    just at the collapse contract."""
     k0, kc = jax.random.split(key)
     kt, kp, kz, kw, ky = jax.random.split(k0, 5)
     theta = jax.random.dirichlet(kt, jnp.full((T,), ALPHA), (D,))
@@ -128,7 +134,8 @@ def _successive_samples(key, n_iters, product_form=False):
         z, ndt = ops.slda_train_sweeps(
             w, MASK, z, ndt, y, INV_LEN, ntw, nt, ETA, seeds,
             alpha=ALPHA, beta=BETA, rho=RHO, n_sweeps=2, doc_block=1,
-            use_pallas=False, product_form=product_form)
+            use_pallas=False, product_form=product_form,
+            sampler_mode=sampler_mode, sparse_topic_cap=2)
         w = _word_gibbs_sweep(k2, w, z)
         y = (ndt / N) @ ETA + jnp.sqrt(RHO) * jax.random.normal(k3, (D,))
         return (z, w, y), _stats(z, w, y)
@@ -139,19 +146,24 @@ def _successive_samples(key, n_iters, product_form=False):
 
 
 @pytest.mark.slow
+@pytest.mark.parametrize("sampler_mode", ["dense", "sparse"])
 @pytest.mark.parametrize("product_form", [False, True])
-def test_geweke_joint_distribution_agreement(product_form):
+def test_geweke_joint_distribution_agreement(product_form, sampler_mode):
     """Successive-conditional vs forward marginals agree within Monte
     Carlo error (|z-score| < 4 per statistic, two-sample test with the
     chain thinned for autocorrelation) — for BOTH sampling forms of the
     fused multi-sweep path (log form and the product form of DESIGN.md
-    §Chain-batched)."""
+    §Chain-batched) × BOTH draw modes (dense inverse-CDF and the sparse
+    two-stage draw with cap=2 < T=3, so the residual stage-2 correction
+    fires for real — the distributional-exactness claim of DESIGN.md
+    §Sparse-sampler under the full joint model)."""
     n_forward, n_chain, burn, thin = 6000, 6000, 500, 5
     fwd = np.asarray(jax.jit(_forward_samples, static_argnums=(1,))(
         jax.random.PRNGKey(0), n_forward))
     chain = np.asarray(jax.jit(_successive_samples,
-                               static_argnums=(1, 2))(
-        jax.random.PRNGKey(1), n_chain, product_form))[burn::thin]
+                               static_argnums=(1, 2, 3))(
+        jax.random.PRNGKey(1), n_chain, product_form,
+        sampler_mode))[burn::thin]
 
     se = np.sqrt(fwd.var(0, ddof=1) / fwd.shape[0]
                  + chain.var(0, ddof=1) / chain.shape[0])
